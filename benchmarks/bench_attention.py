@@ -1,0 +1,46 @@
+"""Beyond-paper: online (chunked) attention vs naive attention — the paper's
+⊕ recurrence is what makes the chunked form exact.  Forward and fwd+bwd, with
+the naive path's materialized-score memory as the derived column."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import naive_attention, online_attention
+
+CASES = [
+    # (B, T, Hq, Hkv, Dh, chunk)
+    (2, 1024, 8, 2, 64, 256),
+    (2, 2048, 8, 2, 64, 512),
+    (1, 4096, 4, 1, 64, 512),
+]
+
+
+def run() -> list[tuple]:
+    rows = []
+    for b, t, hq, hkv, dh, chunk in CASES:
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (b, t, hq, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (b, t, hkv, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (b, t, hkv, dh), jnp.float32)
+        score_mb = b * hq * t * t * 4 / 2**20
+        naive_f = jax.jit(lambda q, k, v: naive_attention(q, k, v, causal=True))
+        online_f = jax.jit(lambda q, k, v: online_attention(
+            q, k, v, causal=True, chunk_size=chunk))
+        rows.append((f"attention/T={t}/naive_fwd", time_fn(naive_f, q, k, v),
+                     f"score_matrix={score_mb:.0f}MB"))
+        rows.append((f"attention/T={t}/online_fwd", time_fn(online_f, q, k, v),
+                     f"score_matrix=chunked({chunk})"))
+        ng = jax.jit(jax.grad(lambda q, k, v: naive_attention(
+            q, k, v, causal=True).sum(), argnums=0))
+        og = jax.jit(jax.grad(lambda q, k, v: online_attention(
+            q, k, v, causal=True, chunk_size=chunk).sum(), argnums=0))
+        rows.append((f"attention/T={t}/naive_fwdbwd", time_fn(ng, q, k, v), ""))
+        rows.append((f"attention/T={t}/online_fwdbwd", time_fn(og, q, k, v),
+                     ""))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

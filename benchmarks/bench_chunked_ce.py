@@ -1,0 +1,41 @@
+"""Beyond-paper: vocab-chunked online cross-entropy vs full-logit CE
+(paper §7 "fuse with the preceding layer").  ``derived`` = bytes of the
+[T, V] logit tensor that the chunked form never materializes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import chunked_cross_entropy, full_cross_entropy
+
+CASES = [
+    # (T, D, V, chunks)
+    (2048, 512, 32768, 16),
+    (2048, 512, 65536, 16),
+    (8192, 256, 65536, 16),
+]
+
+
+def run() -> list[tuple]:
+    rows = []
+    for t, d, v, chunks in CASES:
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        h = jax.random.normal(ks[0], (t, d), jnp.float32)
+        w = jax.random.normal(ks[1], (d, v), jnp.float32) * 0.02
+        labels = jax.random.randint(ks[2], (t,), 0, v)
+        logit_mb = t * v * 4 / 2**20
+        full_g = jax.jit(jax.grad(lambda h, w: full_cross_entropy(
+            h, w, labels).mean(), argnums=(0, 1)))
+        chunk_g = jax.jit(jax.grad(lambda h, w: chunked_cross_entropy(
+            h, w, labels, num_chunks=chunks).mean(), argnums=(0, 1)))
+        rows.append((f"chunked_ce/T={t}_V={v}/full_fwdbwd",
+                     time_fn(full_g, h, w), f"logits={logit_mb:.0f}MB"))
+        rows.append((f"chunked_ce/T={t}_V={v}/chunked_fwdbwd",
+                     time_fn(chunk_g, h, w),
+                     f"logits={logit_mb / chunks:.0f}MB_transient"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,52 @@
+"""Paper Figures 1 & 2: Naive vs Safe vs Online softmax across vector sizes,
+large-batch (training/batch-inference) and small-batch (online-inference).
+
+Scaled for the CPU container: batch 512 stands in for the paper's 4000 (same
+bandwidth-saturating regime relative to cache size); the V sweep covers the
+paper's 1e2..1e5 range.  ``derived`` = paper's predicted access ratio
+(safe=4/elem baseline; naive=online=3/elem → 1.33x).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import ACCESSES_PER_ELEMENT, naive_softmax, online_softmax, safe_softmax
+
+V_SWEEP = (256, 1024, 4096, 16384, 65536)
+BATCHES = {"large": 512, "small": 10}
+
+ALGOS = {
+    "naive": naive_softmax,
+    "safe": safe_softmax,
+    "online": online_softmax,
+}
+
+
+def run() -> list[tuple]:
+    rows = []
+    for regime, b in BATCHES.items():
+        for v in V_SWEEP:
+            x = jax.random.normal(jax.random.PRNGKey(0), (b, v), jnp.float32)
+            base_us = None
+            for name, fn in ALGOS.items():
+                jf = jax.jit(fn)
+                us = time_fn(jf, x)
+                if name == "safe":
+                    base_us = us
+                ratio = (ACCESSES_PER_ELEMENT["safe_softmax"]
+                         / ACCESSES_PER_ELEMENT[f"{name}_softmax"])
+                rows.append((f"softmax/{regime}/V={v}/{name}", us,
+                             f"pred_access_ratio={ratio:.2f}"))
+            # measured speedup of online vs safe for this (regime, V)
+            online_us = rows[-1][1]
+            rows.append((f"softmax/{regime}/V={v}/online_vs_safe_speedup",
+                         online_us, f"measured={base_us / online_us:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

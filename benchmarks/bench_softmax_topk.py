@@ -1,0 +1,59 @@
+"""Paper Figures 3 & 4: Softmax+TopK — safe unfused vs safe fused vs online
+fused (K=5), large and small batch.  ``derived`` = the paper's access model
+(safe unfused 5/elem, safe fused 2/elem, online fused 1/elem → up to 5x)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import ACCESSES_PER_ELEMENT, safe_softmax, softmax_topk
+from repro.core.topk_fusion import safe_softmax_then_topk
+
+V_SWEEP = (1024, 4096, 16384, 65536)
+BATCHES = {"large": 512, "small": 10}
+K = 5
+
+
+def _safe_fused(x, k):
+    """Safe softmax with the top-k fused into the normalizer pass (2/elem):
+    separate max pass, then a single pass producing d and the top-k."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    d = jnp.sum(e, axis=-1, keepdims=True)
+    vals, idx = jax.lax.top_k(x, k)
+    return jnp.exp(vals - m) / d, idx
+
+
+VARIANTS = {
+    "safe_unfused": lambda x: safe_softmax_then_topk(x, K)[:2],
+    "safe_fused": lambda x: _safe_fused(x, K),
+    "online_fused": lambda x: softmax_topk(x, K)[:2],
+    "online_fused_blocked": lambda x: softmax_topk(x, K,
+                                                   block=min(4096,
+                                                             x.shape[-1]))[:2],
+}
+
+ACCESS = {"safe_unfused": 5, "safe_fused": 2, "online_fused": 1,
+          "online_fused_blocked": 1}
+
+
+def run() -> list[tuple]:
+    rows = []
+    for regime, b in BATCHES.items():
+        for v in V_SWEEP:
+            x = jax.random.normal(jax.random.PRNGKey(1), (b, v), jnp.float32)
+            base = None
+            for name, fn in VARIANTS.items():
+                us = time_fn(jax.jit(fn), x)
+                if name == "safe_unfused":
+                    base = us
+                rows.append((f"softmax_topk/{regime}/V={v}/{name}", us,
+                             f"pred_access_ratio={5 / ACCESS[name]:.1f}"))
+            rows.append((f"softmax_topk/{regime}/V={v}/online_vs_unfused",
+                         rows[-2][1], f"measured={base / rows[-2][1]:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

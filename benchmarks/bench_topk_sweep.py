@@ -1,0 +1,30 @@
+"""Paper §5.2 K-sweep: the fused-top-k advantage degrades as K grows
+(paper: 5x at K=5 → 3.5x at K=10 → 2x at K=15 → 1.4x at K=30)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import softmax_topk
+from repro.core.topk_fusion import safe_softmax_then_topk
+
+V, B = 16384, 256
+KS = (5, 10, 15, 30, 64)
+
+
+def run() -> list[tuple]:
+    rows = []
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, V), jnp.float32)
+    for k in KS:
+        unfused = time_fn(jax.jit(lambda x, k=k:
+                                  safe_softmax_then_topk(x, k)[:2]), x)
+        fused = time_fn(jax.jit(lambda x, k=k: softmax_topk(x, k)[:2]), x)
+        rows.append((f"topk_sweep/K={k}/unfused", unfused, ""))
+        rows.append((f"topk_sweep/K={k}/online_fused", fused,
+                     f"measured={unfused / fused:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables on CPU.
+
+The paper's GPU numbers measure HBM-bandwidth effects; on this CPU container
+the same access-count reductions manifest through the cache hierarchy, so we
+report wall time *and* the paper's analytic memory-access model side by side
+(the `derived` column = predicted access ratio vs the safe-softmax baseline).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, reps: int = 5) -> float:
+    """Median wall-time of ``fn(*args)`` in microseconds (jit + blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: list[tuple]) -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

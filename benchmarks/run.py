@@ -1,0 +1,40 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+  bench_softmax        → paper Fig. 1 & 2 (naive/safe/online × V × batch)
+  bench_softmax_topk   → paper Fig. 3 & 4 (fused vs unfused, K=5)
+  bench_topk_sweep     → paper §5.2 (K degradation)
+  bench_attention      → beyond-paper (online attention)
+  bench_chunked_ce     → beyond-paper (§7 fusion at the LM head)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_attention,
+        bench_chunked_ce,
+        bench_softmax,
+        bench_softmax_topk,
+        bench_topk_sweep,
+    )
+    from benchmarks.common import emit
+
+    mods = {
+        "softmax": bench_softmax,
+        "softmax_topk": bench_softmax_topk,
+        "topk_sweep": bench_topk_sweep,
+        "attention": bench_attention,
+        "chunked_ce": bench_chunked_ce,
+    }
+    selected = sys.argv[1:] or list(mods)
+    rows = []
+    for name in selected:
+        rows.extend(mods[name].run())
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end training driver: a llama-style LM with every paper technique on
+(online attention, chunked CE), fault-tolerant loop, checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py               # ~15M params
+    PYTHONPATH=src python examples/train_lm.py --full        # ~110M params
+
+The --full config is the assignment's "~100M for a few hundred steps" driver
+(sized for a real accelerator; the default is scaled so the demo finishes on
+this 1-core CPU container while exercising the identical code path).
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import ModelConfig, OptimizerConfig, RunConfig
+from repro.data.synthetic import SyntheticConfig, SyntheticDataset
+from repro.training import loop
+from repro.training.train_step import init_state, make_train_step
+
+
+def small_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="demo-15m", family="dense", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=2, head_dim=32, d_ff=1024,
+        vocab_size=32768, max_seq_len=1024, vocab_chunks=8,
+        attn_chunk=128, dtype="float32", tie_embeddings=True)
+
+
+def full_cfg() -> ModelConfig:
+    # ~110M params: 12L, d=768 — GPT-2-small-class with GQA + SwiGLU
+    return ModelConfig(
+        name="demo-110m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=50304, max_seq_len=2048, vocab_chunks=16,
+        attn_chunk=512, dtype="bfloat16", tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = full_cfg() if args.full else small_cfg()
+    run = RunConfig(
+        model=cfg,
+        optimizer=OptimizerConfig(lr=3e-3, warmup_steps=20,
+                                  total_steps=args.steps),
+        checkpoint_dir=args.ckpt, checkpoint_every=50, log_every=10)
+    n = 0
+    params, opt_state, _ = init_state(run, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  params={n/1e6:.1f}M  "
+          f"online_attn={cfg.use_online_attention} chunked_ce={cfg.use_chunked_ce}")
+
+    ds = SyntheticDataset(SyntheticConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.batch, seed=0))
+    step = jax.jit(make_train_step(run), donate_argnums=(0, 1))
+    params, opt_state, hist = loop.run(
+        run, steps=args.steps, train_step=step, params=params,
+        opt_state=opt_state, dataset=ds)
+    losses = [h["loss"] for h in hist]
+    print(f"loss: {losses[0]:.4f} → {losses[-1]:.4f} over {len(losses)} steps")
+    assert losses[-1] < losses[0], "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

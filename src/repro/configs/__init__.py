@@ -1,0 +1,65 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exports ``config()`` (the exact assigned numbers) and ``smoke()``
+(a reduced same-family config for CPU tests).  ``get(name)`` / ``ARCHS`` are
+the public lookup API used by the launcher (``--arch <id>``).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "mistral_nemo_12b",
+    "minicpm3_4b",
+    "smollm_360m",
+    "deepseek_coder_33b",
+    "xlstm_125m",
+    "zamba2_1p2b",
+    "llama4_scout_17b_a16e",
+    "qwen2_moe_a2p7b",
+    "llava_next_34b",
+    "whisper_small",
+)
+
+_ALIASES = {
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "minicpm3-4b": "minicpm3_4b",
+    "smollm-360m": "smollm_360m",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "xlstm-125m": "xlstm_125m",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2p7b",
+    "llava-next-34b": "llava_next_34b",
+    "whisper-small": "whisper_small",
+}
+
+
+def _module(name: str):
+    name = _ALIASES.get(name, name).replace("-", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str):
+    """Full (assigned) config for ``--arch <name>``."""
+    return _module(name).config()
+
+
+def get_smoke(name: str):
+    """Reduced same-family config for CPU smoke tests."""
+    return _module(name).smoke()
+
+
+from repro.configs.base import (  # noqa: E402,F401
+    SHAPES,
+    SHAPE_BY_NAME,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    OptimizerConfig,
+    ParallelConfig,
+    RunConfig,
+    ShapeConfig,
+    SSMConfig,
+    XLSTMConfig,
+)

@@ -1,0 +1,170 @@
+"""Model / parallelism / run configuration dataclasses.
+
+One ``ModelConfig`` instance per assigned architecture lives in
+``repro.configs.<arch_id>`` (exact numbers from the assignment table), plus a
+``smoke()`` reduction of the same family for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style)."""
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 SSD block configuration."""
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128
+    # dt (timestep) softplus bias init range
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block configuration (mLSTM + sLSTM mix)."""
+    num_heads: int = 4
+    expand: int = 2          # mLSTM up-projection factor
+    chunk: int = 256         # mLSTM chunked-parallel block length
+    slstm_every: int = 6     # sLSTM at layer indices where i % slstm_every == 0
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    experts_per_token: int = 2
+    d_ff_expert: int = 0          # per-expert hidden dim
+    d_ff_shared: int = 0          # shared-expert hidden dim (0 = none)
+    capacity_factor: float = 1.25
+    group_size: int = 512         # dispatch group (tokens) for one-hot einsum
+    router_z_loss: float = 1e-3
+    # "expert": shard expert axis over model (pad experts up if needed)
+    # "ffn":    shard each expert's hidden dim over model
+    shard_mode: str = "expert"
+    pad_experts_to: int = 0       # 0 = no padding
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | mla | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int               # padded to a multiple of 256 (TP-friendly)
+    real_vocab_size: int = 0      # 0 -> vocab_size (set when padding applied)
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    max_seq_len: int = 8192
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "silu"             # silu (SwiGLU) | gelu (plain MLP)
+    norm_type: str = "rmsnorm"    # rmsnorm | layernorm
+    pos_embedding: str = "rope"   # rope | learned | sinusoidal
+    dtype: str = "bfloat16"
+    # family-specific sub-configs
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    moe: Optional[MoEConfig] = None
+    # hybrid: attention block inserted every N ssm blocks (shared weights)
+    hybrid_attn_every: int = 0
+    # enc-dec
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1536   # whisper: 1500 frames, padded to 1536
+    # vlm
+    num_patches: int = 0          # stub patch-embedding count prepended to text
+    # --- paper-technique switches (the repo's contribution) ---------------
+    attn_chunk: int = 1024        # KV chunk for online attention
+    vocab_chunks: int = 16        # chunked online cross-entropy factor
+    use_chunked_ce: bool = True
+    use_online_attention: bool = True
+    # §Perf levers (baseline off; flipped by the hillclimb)
+    attn_causal_blocks: int = 0   # >1: causal chunk skipping (q-block unroll)
+    kv_cache_dtype: str = ""      # "" = model dtype; "int8" = quantized cache
+    use_pallas: bool = False      # True on real TPU: swap in kernels/
+    # remat: "full" = recompute everything inside a block (layer inputs kept
+    # by the scan carry — MaxText-style default for big models);
+    # "block" = keep matmul outputs (dots_with_no_batch_dims); "none".
+    remat: str = "full"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How the model maps onto the mesh (derived per arch × mesh)."""
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    # attention sharding: "heads" if head counts divide the model axis,
+    # else "sequence" (context-parallel q, gathered KV) — see DESIGN.md.
+    attn_mode: str = "heads"
+    seq_sharded_norms: bool = True     # Megatron-style sequence parallelism
+    grad_reduce_dtype: str = "bfloat16"
+    microbatches: int = 1
+    fsdp: bool = False                 # also shard params over the data axes
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"          # cosine | linear | constant
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    seed: int = 0
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    log_every: int = 10

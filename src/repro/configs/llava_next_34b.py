@@ -1,0 +1,25 @@
+"""llava-next-34b [vlm] — 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000 (Yi-34B-class backbone).  The vision tower is a STUB per the
+assignment: input_specs() provides precomputed patch embeddings; anyres
+tiling fixed at 5 tiles x 576 = 2880 patches prepended to the text.
+[hf:llava-hf/llava-v1.6-34b; unverified]."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b", family="vlm",
+        num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+        head_dim=128, d_ff=20480, vocab_size=64000,
+        rope_theta=5e6, max_seq_len=32768, vocab_chunks=16,
+        num_patches=2880,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-smoke", family="vlm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=512, max_seq_len=256,
+        vocab_chunks=4, attn_chunk=32, dtype="float32", num_patches=16,
+    )

@@ -1,0 +1,31 @@
+"""Core: the paper's online-normalizer primitives and their fused consumers."""
+from repro.core.online_softmax import (
+    ACCESSES_PER_ELEMENT,
+    combine,
+    identity_like,
+    naive_softmax,
+    online_log_softmax,
+    online_logsumexp,
+    online_normalizer,
+    online_normalizer_blocked,
+    online_normalizer_scan,
+    online_softmax,
+    safe_softmax,
+)
+from repro.core.topk_fusion import (
+    SoftmaxTopK,
+    safe_softmax_then_topk,
+    softmax_topk,
+    topk_sample,
+)
+from repro.core.attention import naive_attention, online_attention
+from repro.core.cross_entropy import chunked_cross_entropy, full_cross_entropy
+
+__all__ = [
+    "ACCESSES_PER_ELEMENT", "combine", "identity_like", "naive_softmax",
+    "online_log_softmax", "online_logsumexp", "online_normalizer",
+    "online_normalizer_blocked", "online_normalizer_scan", "online_softmax",
+    "safe_softmax", "SoftmaxTopK", "safe_softmax_then_topk", "softmax_topk",
+    "topk_sample", "naive_attention", "online_attention",
+    "chunked_cross_entropy", "full_cross_entropy",
+]

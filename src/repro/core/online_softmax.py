@@ -1,0 +1,190 @@
+"""Online normalizer calculation for softmax (Milakov & Gimelshein, 2018).
+
+This module is the paper's contribution as composable pure-JAX primitives:
+
+* ``combine`` — the associative+commutative ``⊕`` operator of Eq. (4) on
+  ``(m, d)`` running-statistics pairs.  Everything else in this repo (chunked
+  attention, chunked cross-entropy, fused top-k, the Pallas kernels) is an
+  application of this operator.
+* ``online_normalizer_scan`` — Algorithm 3 lines 1–6, literal sequential form
+  (used as the ground-truth recurrence in tests).
+* ``online_normalizer`` — tiled/parallel evaluation of the same statistics via
+  a ``⊕`` tree reduction (Section 3.1 of the paper).
+* ``online_softmax`` / ``online_log_softmax`` / ``online_logsumexp`` — the
+  user-facing functions, numerically identical to safe softmax.
+
+Numerical conventions
+---------------------
+The identity element of ``⊕`` is ``(m, d) = (-inf, 0)``.  ``exp(-inf - -inf)``
+is NaN in IEEE arithmetic, so ``combine`` routes the rescale factor through a
+``where`` that pins ``m_a == m`` (which covers the ``-inf`` collision) to a
+rescale of exactly 1.  Fully-masked rows therefore yield ``d = 0`` and a
+softmax of 0 (not NaN) when ``where=`` masks are used.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+MD = Tuple[Array, Array]
+
+NEG_INF = float("-inf")
+
+
+def _rescale(m_old: Array, m_new: Array) -> Array:
+    """exp(m_old - m_new) with the -inf/-inf collision pinned to 1."""
+    return jnp.exp(jnp.where(m_old == m_new, 0.0, m_old - m_new))
+
+
+def combine(a: MD, b: MD) -> MD:
+    """The paper's Eq. (4) ``⊕`` operator.
+
+    (m_a, d_a) ⊕ (m_b, d_b) = (max(m_a, m_b),
+                               d_a·e^{m_a−m} + d_b·e^{m_b−m})
+
+    Associative and commutative; identity is ``(-inf, 0)``.
+    """
+    m_a, d_a = a
+    m_b, d_b = b
+    m = jnp.maximum(m_a, m_b)
+    d = d_a * _rescale(m_a, m) + d_b * _rescale(m_b, m)
+    return m, d
+
+
+def identity_like(shape, dtype=jnp.float32) -> MD:
+    """The ``⊕`` identity element, broadcast to ``shape``."""
+    return (jnp.full(shape, NEG_INF, dtype=dtype), jnp.zeros(shape, dtype=dtype))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3, literal sequential form (lines 1-6).
+# ---------------------------------------------------------------------------
+def online_normalizer_scan(x: Array) -> MD:
+    """Sequential single-pass (m, d) over the last axis — Algorithm 3 verbatim.
+
+    Kept as the executable specification; production paths use the tiled
+    ``online_normalizer`` below.  Works on any leading batch shape.
+    """
+    x = jnp.asarray(x)
+    init = identity_like(x.shape[:-1], dtype=jnp.promote_types(x.dtype, jnp.float32))
+
+    def step(carry: MD, x_j: Array) -> tuple[MD, None]:
+        m_prev, d_prev = carry
+        m_j = jnp.maximum(m_prev, x_j)                      # line 4
+        d_j = d_prev * _rescale(m_prev, m_j) + jnp.exp(x_j - m_j)  # line 5
+        return (m_j, d_j), None
+
+    (m, d), _ = jax.lax.scan(step, init, jnp.moveaxis(x, -1, 0))
+    return m, d
+
+
+# ---------------------------------------------------------------------------
+# Section 3.1: parallel evaluation via the ⊕ reduction tree.
+# ---------------------------------------------------------------------------
+def online_normalizer(x: Array, *, axis: int = -1, where: Array | None = None) -> MD:
+    """(m, d) = (max x, Σ e^{x−m}) computed as one fused reduction.
+
+    Under XLA this lowers to a single reduction over ``axis`` for ``m`` plus a
+    fused exp-sum — the compiler's realization of the ⊕ tree.  ``where`` masks
+    elements out of both statistics (they behave as the ⊕ identity).
+    """
+    xf = jnp.asarray(x, dtype=jnp.promote_types(x.dtype, jnp.float32))
+    if where is not None:
+        xf = jnp.where(where, xf, NEG_INF)
+    m = jnp.max(xf, axis=axis)
+    # exp(x - m): masked/all-masked rows give exp(-inf - -inf) -> guard.
+    shifted = xf - jnp.expand_dims(m, axis)
+    e = jnp.where(jnp.isneginf(xf), 0.0, jnp.exp(shifted))
+    d = jnp.sum(e, axis=axis)
+    return m, d
+
+
+def online_normalizer_blocked(x: Array, *, block: int, axis: int = -1) -> MD:
+    """Explicit tiled ⊕ evaluation: reduce each block, then ⊕-merge blocks.
+
+    This is the structure the Pallas kernels and the distributed (model-axis
+    sharded) vocab softmax use; exposed in the core API both for tests of the
+    ⊕ algebra and so XLA-level users can pick the tree shape.
+    """
+    x = jnp.moveaxis(jnp.asarray(x), axis, -1)
+    v = x.shape[-1]
+    if v % block != 0:
+        pad = block - v % block
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)],
+                    constant_values=NEG_INF)
+    xb = x.reshape(*x.shape[:-1], x.shape[-1] // block, block)
+    m_b, d_b = online_normalizer(xb, axis=-1)       # per-block stats
+    # ⊕-merge across the block axis (a balanced tree under XLA's reduce).
+    m = jnp.max(m_b, axis=-1)
+    d = jnp.sum(d_b * _rescale(m_b, m[..., None]), axis=-1)
+    return m, d
+
+
+# ---------------------------------------------------------------------------
+# User-facing softmax family.
+# ---------------------------------------------------------------------------
+def online_logsumexp(x: Array, *, axis: int = -1, where: Array | None = None) -> Array:
+    m, d = online_normalizer(x, axis=axis, where=where)
+    return m + jnp.log(d)
+
+
+def online_softmax(x: Array, *, axis: int = -1, where: Array | None = None) -> Array:
+    """Safe softmax computed with the online normalizer; same result as Eq. (2)."""
+    m, d = online_normalizer(x, axis=axis, where=where)
+    xf = jnp.asarray(x, dtype=m.dtype)
+    if where is not None:
+        xf = jnp.where(where, xf, NEG_INF)
+    e = jnp.where(jnp.isneginf(xf), 0.0,
+                  jnp.exp(xf - jnp.expand_dims(m, axis)))
+    denom = jnp.expand_dims(jnp.where(d == 0, 1.0, d), axis)
+    y = e / denom
+    return y.astype(x.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else y
+
+
+def online_log_softmax(x: Array, *, axis: int = -1) -> Array:
+    lse = online_logsumexp(x, axis=axis)
+    return (jnp.asarray(x, lse.dtype) - jnp.expand_dims(lse, axis)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference implementations from the paper (Algorithms 1 & 2), used by tests
+# and benchmarks as the baselines the paper compares against.
+# ---------------------------------------------------------------------------
+def naive_softmax(x: Array, *, axis: int = -1) -> Array:
+    """Algorithm 1 — two passes, numerically unsafe (overflow for x >~ 88)."""
+    xf = jnp.asarray(x, dtype=jnp.promote_types(x.dtype, jnp.float32))
+    e = jnp.exp(xf)
+    return (e / jnp.sum(e, axis=axis, keepdims=True)).astype(x.dtype)
+
+
+def safe_softmax(x: Array, *, axis: int = -1) -> Array:
+    """Algorithm 2 — three passes (max, sum, normalize); the frameworks' default."""
+    xf = jnp.asarray(x, dtype=jnp.promote_types(x.dtype, jnp.float32))
+    m = jnp.max(xf, axis=axis, keepdims=True)
+    e = jnp.exp(xf - m)
+    return (e / jnp.sum(e, axis=axis, keepdims=True)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Memory-access model (paper Sections 2-4) — analytic counts used by the
+# benchmark harness to validate the paper's 4->3 and 5->1 claims.
+# ---------------------------------------------------------------------------
+ACCESSES_PER_ELEMENT = {
+    # loads + stores per input element, from the paper's own accounting
+    "naive_softmax": 3,        # 2 loads + 1 store   (§2)
+    "safe_softmax": 4,         # 3 loads + 1 store   (§2)
+    "online_softmax": 3,       # 2 loads + 1 store   (§3)
+    "safe_softmax_topk_unfused": 5,   # §4: safe softmax (4) + topk load (1)
+    "online_softmax_topk_unfused": 4, # §4
+    "safe_softmax_topk_fused": 2,     # max pass + fused (d,topk) pass
+    "online_softmax_topk_fused": 1,   # §4: single pass, Algorithm 4
+}
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def jit_online_softmax(x: Array, axis: int = -1) -> Array:
+    return online_softmax(x, axis=axis)

@@ -1,0 +1,109 @@
+"""Softmax + TopK fusion (Algorithm 4 of the paper), TPU-adapted.
+
+The paper's CUDA version keeps a per-thread running top-K via insertion sort
+(Alg. 4 lines 10-15).  Scalar insertion has no efficient TPU analogue, so the
+TPU-native form processes the vector in tiles: each tile contributes its local
+``lax.top_k`` candidates plus its local ``(m, d)`` statistics, and both are
+⊕-merged across tiles.  The single-pass property — one read of x, never
+materializing softmax(x) — is preserved exactly; only the running-top-k data
+structure changed (documented in DESIGN.md §2).
+
+The same routine doubles as the MoE router (softmax over experts + top-k
+dispatch probabilities), which is Algorithm 4 at V = num_experts.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.online_softmax import _rescale, online_normalizer
+
+Array = jax.Array
+
+
+class SoftmaxTopK(NamedTuple):
+    """Result of the fused computation (paper Eq. (5) applied to softmax(x))."""
+    values: Array      # top-k softmax probabilities, descending
+    indices: Array     # their indices in x
+    logsumexp: Array   # m + log d — the paper's (m_V, d_V) in log form
+
+
+def softmax_topk(x: Array, k: int, *, block: int | None = None) -> SoftmaxTopK:
+    """Fused softmax+top-k over the last axis: one pass over ``x``.
+
+    ``block`` selects the tile width of the single pass (defaults to the whole
+    axis, which lets XLA fuse max/sum/top_k into one sweep; explicit blocking
+    mirrors the Pallas kernel's HBM→VMEM tiling and is what the serving path
+    uses for very large vocabularies).
+    """
+    x = jnp.asarray(x)
+    v = x.shape[-1]
+    k = min(k, v)
+    if block is None or block >= v:
+        m, d = online_normalizer(x, axis=-1)
+        vals, idx = jax.lax.top_k(x, k)
+        probs = jnp.exp(vals.astype(m.dtype) - m[..., None]) / d[..., None]
+        return SoftmaxTopK(probs.astype(x.dtype), idx, m + jnp.log(d))
+
+    if v % block != 0:
+        pad = block - v % block
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)],
+                    constant_values=float("-inf"))
+        v = x.shape[-1]
+    n_blocks = v // block
+
+    def tile(carry, j):
+        m_run, d_run, u_run, p_run = carry
+        xb = jax.lax.dynamic_slice_in_dim(x, j * block, block, axis=-1)
+        xb_f = xb.astype(m_run.dtype)
+        # --- (m, d) update: Algorithm 3 lines 4-5, tile-granular -----------
+        m_b = jnp.max(xb_f, axis=-1)
+        m_new = jnp.maximum(m_run, m_b)
+        e_b = jnp.where(jnp.isneginf(xb_f), 0.0, jnp.exp(xb_f - m_new[..., None]))
+        d_new = d_run * _rescale(m_run, m_new) + jnp.sum(e_b, axis=-1)
+        # --- running top-k update: Alg. 4 lines 8-15, tile-merge form ------
+        u_b, p_b = jax.lax.top_k(xb_f, k)
+        cand_u = jnp.concatenate([u_run, u_b], axis=-1)
+        cand_p = jnp.concatenate([p_run, p_b + j * block], axis=-1)
+        u_new, sel = jax.lax.top_k(cand_u, k)
+        p_new = jnp.take_along_axis(cand_p, sel, axis=-1)
+        return (m_new, d_new, u_new, p_new), None
+
+    batch = x.shape[:-1]
+    f32 = jnp.promote_types(x.dtype, jnp.float32)
+    init = (jnp.full(batch, float("-inf"), f32), jnp.zeros(batch, f32),
+            jnp.full(batch + (k,), float("-inf"), f32),
+            jnp.full(batch + (k,), -1, jnp.int32))
+    (m, d, u, p), _ = jax.lax.scan(tile, init, jnp.arange(n_blocks))
+    probs = jnp.exp(u - m[..., None]) / d[..., None]
+    return SoftmaxTopK(probs.astype(x.dtype), p, m + jnp.log(d))
+
+
+def safe_softmax_then_topk(x: Array, k: int) -> SoftmaxTopK:
+    """The paper's unfused baseline: full safe softmax, then top-k (5 passes)."""
+    from repro.core.online_softmax import safe_softmax
+    y = safe_softmax(x)
+    vals, idx = jax.lax.top_k(y, min(k, x.shape[-1]))
+    m, d = online_normalizer(x, axis=-1)
+    return SoftmaxTopK(vals, idx, m + jnp.log(d))
+
+
+def topk_sample(rng: Array, x: Array, k: int, *, temperature: float = 1.0,
+                block: int | None = None) -> tuple[Array, Array]:
+    """Sample a token from the fused top-k softmax (the serving fast path).
+
+    Returns ``(token_ids, top_probs)``.  Uses the Gumbel-max trick over the
+    K retained logits — everything after the single pass over the vocabulary
+    touches only K elements, which is the paper's §4 scenario.
+    """
+    if temperature != 1.0:
+        x = x / temperature
+    out = softmax_topk(x, k, block=block)
+    g = jax.random.gumbel(rng, out.values.shape, dtype=jnp.float32)
+    # values are descending softmax probs; sample ∝ p_i via gumbel on log p.
+    logp = jnp.log(jnp.maximum(out.values.astype(jnp.float32), 1e-30))
+    choice = jnp.argmax(logp + g, axis=-1)
+    token = jnp.take_along_axis(out.indices, choice[..., None], axis=-1)[..., 0]
+    return token, out.values

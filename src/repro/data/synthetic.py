@@ -1,0 +1,77 @@
+"""Deterministic synthetic token pipeline.
+
+Batches are a pure function of ``(seed, step)`` via counter-based Philox —
+any host can regenerate any step's shard independently, which is what makes
+checkpoint-restart and elastic re-sharding exact: after a crash, the loop
+resumes at step N and the pipeline re-emits step N's batch bit-identically,
+regardless of how many hosts now exist.
+
+The stream is Zipf-distributed tokens with a simple Markov structure so CE
+loss has learnable signal (examples/train_lm.py shows it decreasing).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclass
+class SyntheticConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    markov_period: int = 16      # learnable periodic structure
+
+
+class SyntheticDataset:
+    def __init__(self, cfg: SyntheticConfig):
+        self.cfg = cfg
+        v = cfg.vocab_size
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        p = ranks ** -cfg.zipf_a
+        self._probs = p / p.sum()
+
+    def batch(self, step: int) -> dict:
+        """{tokens [GB, T] int32, labels [GB, T] int32} for this step."""
+        c = self.cfg
+        rng = np.random.Generator(np.random.Philox(
+            key=c.seed, counter=[0, 0, 0, step]))
+        base = rng.choice(c.vocab_size, size=(c.global_batch, c.seq_len + 1),
+                          p=self._probs).astype(np.int32)
+        # periodic copy structure: token t depends on token t-period
+        period = c.markov_period
+        if c.seq_len + 1 > period:
+            mix = rng.random((c.global_batch, c.seq_len + 1)) < 0.5
+            base[:, period:] = np.where(mix[:, period:],
+                                        base[:, :-period], base[:, period:])
+        return {"tokens": base[:, :-1], "labels": base[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class HostShardedLoader:
+    """Wraps SyntheticDataset for multi-host: each host materializes only its
+    batch rows, then ``jax.device_put`` with the global batch sharding
+    reassembles the logical array (single-host here, but the slicing logic is
+    the multi-host one)."""
+
+    def __init__(self, ds: SyntheticDataset, host_id: int = 0,
+                 num_hosts: int = 1):
+        self.ds = ds
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+
+    def local_batch(self, step: int) -> dict:
+        full = self.ds.batch(step)
+        gb = self.ds.cfg.global_batch
+        per = gb // self.num_hosts
+        lo = self.host_id * per
+        return {k: v[lo:lo + per] for k, v in full.items()}

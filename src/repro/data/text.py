@@ -1,0 +1,48 @@
+"""Byte-level text corpus pipeline (the real-data counterpart of synthetic.py).
+
+Same stateless contract: ``batch(step)`` is a pure function of
+(corpus, seed, step) via strided window addressing, so checkpoint-restart and
+elastic re-sharding stay exact.  Byte-level tokenization (vocab 256 + BOS) —
+no external tokenizer dependency.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+
+import numpy as np
+
+BOS = 256
+VOCAB = 257
+
+
+@dataclass
+class TextConfig:
+    path: str
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+class ByteCorpus:
+    def __init__(self, cfg: TextConfig):
+        self.cfg = cfg
+        with open(cfg.path, "rb") as f:
+            self.data = np.frombuffer(f.read(), dtype=np.uint8)
+        if len(self.data) < cfg.seq_len + 2:
+            raise ValueError(f"corpus too small: {len(self.data)} bytes")
+        self.n_windows = len(self.data) - cfg.seq_len - 1
+
+    def fingerprint(self) -> str:
+        return hashlib.sha256(self.data[:1 << 20].tobytes()).hexdigest()[:16]
+
+    def batch(self, step: int) -> dict:
+        c = self.cfg
+        rng = np.random.Generator(np.random.Philox(
+            key=c.seed, counter=[0, 0, 1, step]))   # stream 1 ≠ synthetic's 0
+        starts = rng.integers(0, self.n_windows, size=c.global_batch)
+        tok = np.stack([self.data[s:s + c.seq_len + 1].astype(np.int32)
+                        for s in starts])
+        tokens = np.concatenate(
+            [np.full((c.global_batch, 1), BOS, np.int32), tok[:, :-2]], axis=1)
+        return {"tokens": tokens, "labels": tok[:, :-1].astype(np.int32)}

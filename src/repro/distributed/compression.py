@@ -1,0 +1,115 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two mechanisms, composable with the training step:
+
+1. **bf16 reduction** (default on): gradients are cast to bfloat16 at the
+   autodiff boundary, so the XLA-inserted data-parallel all-reduce moves half
+   the bytes.  Verified in the dry-run HLO (§Perf) — the all-reduce operands
+   are bf16.
+
+2. **int8 error-feedback compression** (opt-in): per-tensor scale quantization
+   with a persistent error accumulator (Seide et al. 1-bit-SGD style
+   feedback).  The quantize→transport→dequantize round trip is exact about
+   the wire format; on a real multi-host deployment the transport is an
+   ``all_gather`` of int8 shards (``shard_map``) followed by a local
+   dequantized reduction — ``int8_allreduce`` below implements exactly that
+   and is exercised by the multi-device tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def cast_grads(grads: PyTree, dtype: str) -> PyTree:
+    if dtype in ("float32", "fp32", None):
+        return grads
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(lambda g: g.astype(dt), grads)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback quantization.
+# ---------------------------------------------------------------------------
+def ef_init(params: PyTree) -> PyTree:
+    """Zero error-feedback residuals shaped like the grads."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grads: PyTree, errors: PyTree):
+    """Quantize (grad + carried error); return (q, scales, new_errors)."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = _quantize(x)
+        deq = _dequantize(q, scale)
+        return (q, scale), x - deq
+
+    out = jax.tree.map(one, grads, errors)
+    qs = jax.tree.map(lambda t: t[0][0], out,
+                      is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                      and isinstance(t[0], tuple))
+    scales = jax.tree.map(lambda t: t[0][1], out,
+                          is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                          and isinstance(t[0], tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                           and isinstance(t[0], tuple))
+    return qs, scales, new_err
+
+
+def ef_decompress(qs: PyTree, scales: PyTree) -> PyTree:
+    return jax.tree.map(_dequantize, qs, scales)
+
+
+def ef_roundtrip(grads: PyTree, errors: PyTree):
+    """Simulated compress→transport→decompress with error feedback.
+
+    Returns (dequantized grads, new error state)."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = _quantize(x)
+        deq = _dequantize(q, scale)
+        return deq, x - deq
+
+    pairs = jax.tree.map(one, grads, errors)
+    deq = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return deq, err
+
+
+# ---------------------------------------------------------------------------
+# Real int8 all-reduce over a mesh axis (shard_map collective).
+# ---------------------------------------------------------------------------
+def int8_allreduce(x: jax.Array, mesh, axis: str) -> jax.Array:
+    """Mean-reduce ``x`` (replicated layout) across ``axis`` with int8 wire
+    format: quantize locally, all_gather int8 + scales, dequantize, average."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local(xl):
+        q, scale = _quantize(xl)
+        qs = jax.lax.all_gather(q, axis)              # [n, ...] int8 on wire
+        ss = jax.lax.all_gather(scale, axis)
+        deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * xl.ndim)
+        return jnp.mean(deq, axis=0)
+
+    specs = P(*([None] * x.ndim))
+    return shard_map(local, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                     check_vma=False)(x)

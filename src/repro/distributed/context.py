@@ -1,0 +1,43 @@
+"""Ambient sharding context for model code.
+
+Model layers are mesh-agnostic; the launcher installs a ``ShardContext`` so
+attention can (a) apply sequence-parallel sharding constraints, (b) expand
+replicated KV heads for head-sharded GQA, and (c) route decode attention
+through the shard_map ⊕-merge path.  ``None`` context (unit tests, smoke
+tests) means single-device semantics everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import NamedTuple, Optional
+
+from jax.sharding import Mesh
+
+from repro.configs.base import ParallelConfig
+
+
+class ShardContext(NamedTuple):
+    mesh: Mesh
+    par: ParallelConfig
+    # mesh axes the decode KV cache's sequence dim is sharded over
+    cache_seq_axes: tuple = ("model",)
+    # mesh axes the batch dim is sharded over (() = replicated, e.g. batch 1)
+    batch_axes: tuple = ("data",)
+
+
+_CURRENT: Optional[ShardContext] = None
+
+
+def get() -> Optional[ShardContext]:
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def use(ctx: Optional[ShardContext]):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = ctx
+    try:
+        yield
+    finally:
+        _CURRENT = prev

@@ -1,0 +1,130 @@
+"""Distributed decode attention and top-k: the paper's §3.1 parallel ⊕ as
+cross-chip collectives.
+
+``sharded_decode_attention``: the KV cache's sequence dim is sharded over
+mesh axes; every shard runs the *local* online-softmax attention over its
+cache slice (one pass, Algorithm 3), producing partial ``(m, d, o)``.  The
+global result is the ⊕ of the partials:
+
+    m* = pmax(m)            d* = psum(d · e^{m−m*})
+    o* = psum(o · d · e^{m−m*}) / d*
+
+Three tiny collectives ([B,H]-shaped, not [B,S]-shaped) replace any gather of
+the cache — this is the paper's associative operator doing the work of a
+distributed softmax.
+
+``sharded_topk_sample``: same trick for the LM head (paper Algorithm 4,
+distributed): each vocab shard computes its local fused softmax+top-k, then
+only the 2·K-per-shard candidate set and the [B]-shaped (m, d) statistics
+cross the wire.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.attention import _chunked_fwd_impl
+
+NEG_INF = float("-inf")
+
+
+def _merge_scale(m_local, m_global):
+    return jnp.exp(jnp.where(m_local == m_global, 0.0, m_local - m_global))
+
+
+def sharded_decode_attention(q, k_cache, v_cache, kv_valid_len, *, mesh: Mesh,
+                             seq_axes: tuple, batch_axes: tuple,
+                             chunk_size: int, scale: float,
+                             k_scale=None, v_scale=None):
+    """q [B,1,Hq,Dk]; caches [B,S,Hkv,*] with S sharded over ``seq_axes``.
+
+    Returns [B,1,Hq,Dv].  Works for GQA, for MLA's latent cache
+    (Hkv=1, Dv=kv_lora_rank), and for int8 caches (``k_scale``/``v_scale``
+    [B,S,Hkv] dequantization factors, applied chunk-wise after the HBM read).
+    """
+    ba = tuple(batch_axes)
+    sa = tuple(seq_axes)
+    quant = k_scale is not None
+
+    def local(q_l, k_l, v_l, vlen_l, *scales):
+        # global position of this shard's cache slice
+        idx = jnp.zeros((), jnp.int32)
+        for a in sa:   # row-major over seq axes
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        s_local = k_l.shape[1]
+        start = idx * s_local
+        vl_local = jnp.clip(vlen_l - start, 0, s_local)
+        ks_l, vs_l = scales if quant else (None, None)
+        out, lse = _chunked_fwd_impl(
+            q_l, k_l, v_l, jnp.asarray(0, jnp.int32), vl_local,
+            False, min(chunk_size, s_local), scale,
+            k_scale=ks_l, v_scale=vs_l)
+        # lse = m + log d (−inf where the shard had no valid keys)
+        m_l = lse                                    # [B,Hkv,G,1]
+        m_g = jax.lax.pmax(m_l, sa)
+        w = _merge_scale(m_l, m_g)                   # d·e^{m−m*} ∝ e^{lse−m*}
+        w = jnp.where(jnp.isneginf(m_l), 0.0, w)
+        d_g = jax.lax.psum(w, sa)
+        b, _, hq, dv = out.shape
+        w_o = jnp.moveaxis(w, -1, 1).reshape(b, 1, hq, 1)
+        o_g = jax.lax.psum(out.astype(jnp.float32) * w_o, sa)
+        return (o_g / jnp.maximum(d_g, 1e-30).reshape(b, 1, hq, 1)
+                ).astype(q_l.dtype)
+
+    qspec = P(ba, None, None, None)
+    cspec = P(ba, sa, None, None)
+    if quant:
+        sspec = P(ba, sa, None)
+        return shard_map(local, mesh=mesh,
+                         in_specs=(qspec, cspec, cspec, P(ba), sspec, sspec),
+                         out_specs=qspec, check_vma=False)(
+            q, k_cache, v_cache, kv_valid_len, k_scale, v_scale)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(qspec, cspec, cspec, P(ba)),
+                     out_specs=qspec, check_vma=False)(
+        q, k_cache, v_cache, kv_valid_len)
+
+
+def sharded_topk_sample(rng, logits, k: int, *, mesh: Mesh,
+                        batch_axes: tuple, vocab_axis: str = "model",
+                        temperature: float = 1.0):
+    """Fused softmax+top-k+sample over a vocab-sharded logits tensor.
+
+    Per shard: local (m, d) + local top-k (one pass).  Cross-shard: ⊕ on the
+    [B] statistics + an all_gather of K candidates per shard.
+    """
+    from repro.core.online_softmax import online_normalizer
+
+    ba = tuple(batch_axes)
+    n_shards = mesh.shape[vocab_axis]
+
+    def local(rng_l, x_l):
+        v_local = x_l.shape[-1]
+        idx0 = jax.lax.axis_index(vocab_axis) * v_local
+        xf = x_l.astype(jnp.float32)
+        if temperature != 1.0:
+            xf = xf / temperature
+        m_l, d_l = online_normalizer(xf, axis=-1)
+        vals_l, idx_l = jax.lax.top_k(xf, k)
+        idx_l = idx_l + idx0
+        # ⊕ across vocab shards
+        m_g = jax.lax.pmax(m_l, vocab_axis)
+        d_g = jax.lax.psum(d_l * _merge_scale(m_l, m_g), vocab_axis)
+        cand_v = jax.lax.all_gather(vals_l, vocab_axis, axis=-1, tiled=True)
+        cand_i = jax.lax.all_gather(idx_l, vocab_axis, axis=-1, tiled=True)
+        top_v, sel = jax.lax.top_k(cand_v, k)
+        top_i = jnp.take_along_axis(cand_i, sel, axis=-1)
+        probs = jnp.exp(top_v - m_g[..., None]) / d_g[..., None]
+        g = jax.random.gumbel(rng_l, probs.shape, dtype=jnp.float32)
+        choice = jnp.argmax(jnp.log(jnp.maximum(probs, 1e-30)) + g, axis=-1)
+        tok = jnp.take_along_axis(top_i, choice[..., None], axis=-1)[..., 0]
+        return tok, probs
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(), P(ba, vocab_axis)),
+                     out_specs=(P(ba), P(ba, None)),
+                     check_vma=False)(rng, logits)

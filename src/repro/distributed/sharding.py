@@ -1,0 +1,180 @@
+"""Logical-axis → mesh-axis rules and sharding derivation.
+
+Model code annotates every parameter with *logical* axes ("embed", "ffn",
+"heads", "vocab", "expert", "inner", …).  This module turns them into
+``NamedSharding``s for a concrete mesh, choosing per-architecture fallbacks:
+
+* ``heads``/``kv_heads`` map to the model axis only when the head count
+  divides it; otherwise attention weights replicate and attention runs
+  *sequence-parallel* (context parallelism): q sharded on T over the model
+  axis, K/V gathered — valid for ANY head count (DESIGN.md §4).
+* ``expert`` maps to the model axis when (padded) expert count divides it
+  ("expert" shard_mode), else experts replicate and ``expert_ffn`` shards
+  (TP inside each expert, "ffn" mode).
+* ``vocab`` always shards over model (configs pad vocab to multiples of 256),
+  which makes the chunked online cross-entropy's ⊕ merge a cross-device
+  collective — the distributed form of the paper's Algorithm 3.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+PyTree = Any
+
+
+def _model_size(mesh: Mesh, model_axis: str) -> int:
+    return mesh.shape[model_axis]
+
+
+def derive_parallel(cfg: ModelConfig, mesh: Mesh,
+                    base: Optional[ParallelConfig] = None) -> ParallelConfig:
+    """Pick attention/MoE sharding modes that are valid for this arch+mesh."""
+    base = base or ParallelConfig(
+        data_axes=tuple(a for a in mesh.axis_names if a != "model"))
+    mp = _model_size(mesh, base.model_axis)
+    heads_ok = (cfg.num_heads % mp == 0)
+    attn_mode = "heads" if heads_ok else "sequence"
+    return ParallelConfig(
+        data_axes=base.data_axes, model_axis=base.model_axis,
+        attn_mode=attn_mode, seq_sharded_norms=base.seq_sharded_norms,
+        grad_reduce_dtype=base.grad_reduce_dtype,
+        microbatches=base.microbatches)
+
+
+def axis_rules(cfg: ModelConfig, par: ParallelConfig, mesh: Mesh) -> dict:
+    mp = _model_size(mesh, par.model_axis)
+    m = par.model_axis
+    heads = m if (par.attn_mode == "heads") else None
+    kv_heads = m if (par.attn_mode == "heads"
+                     and cfg.num_kv_heads % mp == 0) else None
+    expert = None
+    expert_ffn = None
+    if cfg.moe is not None:
+        e_pad = cfg.moe.pad_experts_to or cfg.moe.num_experts
+        if cfg.moe.shard_mode == "expert" and e_pad % mp == 0:
+            expert = m
+        else:
+            expert_ffn = m
+    inner = m  # SSM/xLSTM inner channel dim (configs keep it divisible)
+    if cfg.xlstm is not None and (cfg.xlstm.expand * cfg.d_model) % mp != 0:
+        inner = None
+    if cfg.ssm is not None and (cfg.ssm.expand * cfg.d_model) % mp != 0:
+        inner = None
+    inner_heads = None  # per-head SSM params are tiny; replicate
+    hd = cfg.resolved_head_dim
+    qkv_out = m if (cfg.num_heads * hd) % mp == 0 else None
+    # kv projections: shardable when sequence-parallel (activations resharded)
+    # or when kv heads divide; replicated otherwise (GQA kv-expand path).
+    if par.attn_mode == "sequence":
+        kv_out = m if (cfg.num_kv_heads * hd) % mp == 0 else None
+    else:
+        kv_out = m if cfg.num_kv_heads % mp == 0 else None
+    sc = cfg.ssm
+    if sc is not None and (sc.expand * cfg.d_model // sc.head_dim) % mp == 0:
+        inner_heads = m       # SSM heads/states shard with the inner dim
+    return {
+        "embed": None,
+        "ffn": m if cfg.d_ff % mp == 0 or cfg.d_ff == 0 else None,
+        "vocab": m if cfg.vocab_size % mp == 0 else None,
+        "heads": heads,
+        "kv_heads": kv_heads,
+        "qkv_out": qkv_out,
+        "kv_out": kv_out,
+        "expert": expert,
+        "expert_ffn": expert_ffn,
+        "inner": inner,
+        "inner_heads": inner_heads,
+        "layers": None,
+        None: None,
+    }
+
+
+def param_sharding(axes_tree: PyTree, cfg: ModelConfig, par: ParallelConfig,
+                   mesh: Mesh) -> PyTree:
+    """Map each param's logical axes to a NamedSharding."""
+    rules = axis_rules(cfg, par, mesh)
+
+    def to_sharding(axes: tuple) -> NamedSharding:
+        spec = tuple(rules.get(a) for a in axes)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(to_sharding, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def add_data_axis(spec: P, shape: tuple, mesh: Mesh, par: ParallelConfig,
+                  *, min_bytes: int = 1 << 20, bytes_per_elem: int = 4) -> P:
+    """ZeRO/FSDP-style extra sharding: place the data axes on the first free
+    dim divisible by the data-parallel degree.  Used for optimizer states
+    (always) and params (``fsdp`` flag) — turns O(params) memory into
+    O(params / (model × data))."""
+    n = int(np.prod([mesh.shape[a] for a in par.data_axes]))
+    if n == 1:
+        return spec
+    size = int(np.prod(shape)) * bytes_per_elem
+    if size < min_bytes:
+        return spec
+    # already data-sharded (e.g. FSDP params feeding optimizer sharding)
+    used = {a for part in spec if part
+            for a in (part if isinstance(part, tuple) else (part,))}
+    if used & set(par.data_axes):
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, dim in enumerate(shape):
+        if parts[i] is None and dim % n == 0:
+            parts[i] = par.data_axes
+            return P(*parts)
+    return spec
+
+
+def optimizer_sharding(p_sh: PyTree, like: PyTree, mesh: Mesh,
+                       par: ParallelConfig) -> PyTree:
+    """Shardings for fp32 optimizer moments: param sharding + data axis."""
+    def one(sh: NamedSharding, leaf) -> NamedSharding:
+        spec = add_data_axis(sh.spec, tuple(leaf.shape), mesh, par)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, p_sh, like)
+
+
+def fsdp_param_sharding(p_sh: PyTree, like: PyTree, mesh: Mesh,
+                        par: ParallelConfig,
+                        *, min_bytes: int = 8 << 20) -> PyTree:
+    """Fully-sharded params (weights gathered per layer at use — the
+    scan-over-layers structure makes XLA stream them)."""
+    def one(sh: NamedSharding, leaf) -> NamedSharding:
+        spec = add_data_axis(sh.spec, tuple(leaf.shape), mesh, par,
+                             min_bytes=min_bytes, bytes_per_elem=2)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, p_sh, like)
+
+
+def batch_spec(par: ParallelConfig) -> P:
+    """Batch dim sharded over all data axes (pod × data)."""
+    return P(par.data_axes)
+
+
+def batch_sharding(tree_example: PyTree, par: ParallelConfig,
+                   mesh: Mesh) -> PyTree:
+    """Shard dim 0 of every batch leaf over the data axes."""
+    def sh(x):
+        ndim = x.ndim if hasattr(x, "ndim") else len(x.shape)
+        return NamedSharding(mesh, P(par.data_axes, *([None] * (ndim - 1))))
+    return jax.tree.map(sh, tree_example)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint if x's shape is compatible, else no-op."""
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except (ValueError, TypeError):
+        return x
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: FlashAttention forward — the paper's Algorithm 3 carried
+through attention (``(m, d)`` plus a weighted-value accumulator in VMEM).
+
+Grid: (batch, q_head, q_block, kv_block), kv innermost.  GQA is handled by the
+K/V index_map (``h // group``) — no materialized head repeat.  With
+``causal=True``, KV tiles strictly above the diagonal are skipped via
+``pl.when`` (compute never issued; the tile fetch is still scheduled by the
+grid — see §Perf for the measured effect of tightening this).
+
+Accumulators (m, d, acc) are fp32 VMEM scratch; output and LSE are written
+once per q-block when the kv sweep finishes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _make_kernel(*, scale: float, causal: bool, bq: int, bk: int, n_kv: int):
+    def kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_sc, d_sc, acc_sc):
+        i = pl.program_id(2)          # q block
+        j = pl.program_id(3)          # kv block
+
+        @pl.when(j == 0)
+        def _init():
+            m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+            d_sc[...] = jnp.zeros_like(d_sc)
+            acc_sc[...] = jnp.zeros_like(acc_sc)
+
+        # causal: skip tiles entirely above the diagonal
+        run = (not causal) or (j * bk <= i * bq + bq - 1)
+
+        @pl.when(run)
+        def _compute():
+            q = q_ref[0, 0].astype(jnp.float32) * scale      # [BQ, D]
+            k = k_ref[0, 0].astype(jnp.float32)              # [BK, D]
+            v = v_ref[0, 0].astype(jnp.float32)
+            s = q @ k.T                                   # [BQ, BK] (MXU)
+            if causal:
+                q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (bq, bk), 0)
+                k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (bq, bk), 1)
+                s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+            m_prev = m_sc[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+            alpha = jnp.exp(jnp.where(m_prev == m_new, 0.0, m_prev - m_new))
+            p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - m_new))
+            d_sc[...] = d_sc[...] * alpha + jnp.sum(p, -1, keepdims=True)
+            acc_sc[...] = acc_sc[...] * alpha + p @ v
+            m_sc[...] = m_new
+
+        @pl.when(j == n_kv - 1)
+        def _finalize():
+            d = jnp.maximum(d_sc[...], 1e-30)
+            o_ref[0, 0] = (acc_sc[...] / d).astype(o_ref.dtype)
+            lse_ref[0, 0] = m_sc[...] + jnp.log(d)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = 512, bk: int = 512,
+                           interpret: bool = False):
+    """q [B, Hq, Tq, D]; k, v [B, Hkv, Tk, D] → (out [B,Hq,Tq,D], lse [B,Hq,Tq,1]).
+
+    Tq % bq == 0 and Tk % bk == 0 (pad upstream in ops.py).
+    """
+    b, hq, tq, dh = q.shape
+    _, hkv, tk, _ = k.shape
+    g = hq // hkv
+    bq = min(bq, tq)
+    bk = min(bk, tk)
+    assert tq % bq == 0 and tk % bk == 0
+    n_kv = tk // bk
+    grid = (b, hq, tq // bq, n_kv)
+    scale = dh ** -0.5
+    out, lse = pl.pallas_call(
+        _make_kernel(scale=scale, causal=causal, bq=bq, bk=bk, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h, i, j: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h, i, j: (b_, h // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h, i, j: (b_, h, i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b, hq, tq, dh), q.dtype),
+                   jax.ShapeDtypeStruct((b, hq, tq, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse

@@ -1,0 +1,177 @@
+"""Pallas TPU kernels: FlashAttention backward (dq and dk/dv passes).
+
+The backward recomputes probabilities from the forward's saved LSE — the
+paper's (m, d) statistics in log form — so the [Tq, Tk] score matrix is
+never stored, only re-derived tile by tile (FLOPs traded for HBM, the
+paper's economics in reverse).
+
+Two kernels, following the standard two-pass structure:
+* ``_dq_kernel``   — grid (B, H, q_block, kv_block): accumulates dq per
+  q-tile while streaming KV tiles (VMEM scratch carry).
+* ``_dkv_kernel``  — grid (B, H, kv_block, q_block): accumulates dk, dv per
+  KV-tile while streaming q tiles.
+
+``delta = rowsum(dout ⊙ out)`` is precomputed outside (cheap elementwise).
+GQA: dk/dv are produced per Q-head and summed into KV heads by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _make_dq_kernel(*, scale: float, causal: bool, bq: int, bk: int,
+                    n_kv: int):
+    def kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_sc):
+        i = pl.program_id(2)
+        j = pl.program_id(3)
+
+        @pl.when(j == 0)
+        def _init():
+            acc_sc[...] = jnp.zeros_like(acc_sc)
+
+        run = (not causal) or (j * bk <= i * bq + bq - 1)
+
+        @pl.when(run)
+        def _compute():
+            q = q_ref[0, 0].astype(jnp.float32) * scale
+            k = k_ref[0, 0].astype(jnp.float32)
+            v = v_ref[0, 0].astype(jnp.float32)
+            do = do_ref[0, 0].astype(jnp.float32)
+            lse = lse_ref[0, 0]                        # [BQ, 1]
+            delta = delta_ref[0, 0]                    # [BQ, 1]
+            s = q @ k.T                                # [BQ, BK]
+            if causal:
+                q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (bq, bk), 0)
+                k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (bq, bk), 1)
+                s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+            p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - lse))
+            dp = do @ v.T                              # [BQ, BK]
+            ds = p * (dp - delta) * scale
+            acc_sc[...] += ds @ k
+
+        @pl.when(j == n_kv - 1)
+        def _finalize():
+            dq_ref[0, 0] = acc_sc[...].astype(dq_ref.dtype)
+
+    return kernel
+
+
+def _make_dkv_kernel(*, scale: float, causal: bool, bq: int, bk: int,
+                     n_q: int):
+    def kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+               dk_ref, dv_ref, dk_sc, dv_sc):
+        j = pl.program_id(2)          # kv block (outer)
+        i = pl.program_id(3)          # q block (inner stream)
+
+        @pl.when(i == 0)
+        def _init():
+            dk_sc[...] = jnp.zeros_like(dk_sc)
+            dv_sc[...] = jnp.zeros_like(dv_sc)
+
+        run = (not causal) or (j * bk <= i * bq + bq - 1)
+
+        @pl.when(run)
+        def _compute():
+            q = q_ref[0, 0].astype(jnp.float32) * scale
+            k = k_ref[0, 0].astype(jnp.float32)
+            v = v_ref[0, 0].astype(jnp.float32)
+            do = do_ref[0, 0].astype(jnp.float32)
+            lse = lse_ref[0, 0]
+            delta = delta_ref[0, 0]
+            s = q @ k.T
+            if causal:
+                q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (bq, bk), 0)
+                k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (bq, bk), 1)
+                s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+            p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - lse))
+            dv_sc[...] += p.T @ do
+            dp = do @ v.T
+            ds = p * (dp - delta) * scale              # = scale·∂L/∂s
+            dk_sc[...] += ds.T @ (q / scale)           # ds already carries scale
+
+        @pl.when(i == n_q - 1)
+        def _finalize():
+            dk_ref[0, 0] = dk_sc[...].astype(dk_ref.dtype)
+            dv_ref[0, 0] = dv_sc[...].astype(dv_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention_bwd_pallas(q, k, v, out, lse, dout, *, causal: bool,
+                               bq: int = 512, bk: int = 512,
+                               interpret: bool = False):
+    """q [B,H,Tq,D]; k,v [B,Hkv,Tk,D] (pre-expanded to H by the wrapper);
+    out/dout [B,H,Tq,D]; lse [B,H,Tq,1].  Returns (dq, dk, dv) per Q-head —
+    the wrapper reduces dk/dv over GQA groups."""
+    b, h, tq, dh = q.shape
+    tk = k.shape[2]
+    g = h // k.shape[1]
+    bq = min(bq, tq)
+    bk = min(bk, tk)
+    assert tq % bq == 0 and tk % bk == 0
+    n_q, n_kv = tq // bq, tk // bk
+    scale = dh ** -0.5
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1, keepdims=True)            # [B,H,Tq,1]
+
+    def kv_map(b_, h_, *_):
+        return (b_, h_ // g)
+
+    dq = pl.pallas_call(
+        _make_dq_kernel(scale=scale, causal=causal, bq=bq, bk=bk, n_kv=n_kv),
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h_, i, j: kv_map(b_, h_) + (j, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h_, i, j: kv_map(b_, h_) + (j, 0)),
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, tq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        _make_dkv_kernel(scale=scale, causal=causal, bq=bq, bk=bk, n_q=n_q),
+        grid=(b, h, n_kv, n_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h_, j, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h_, j, i: kv_map(b_, h_) + (j, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h_, j, i: kv_map(b_, h_) + (j, 0)),
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h_, j, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, j, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, j, i: (b_, h_, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h_, j, i: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h_, j, i: (b_, h_, j, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b, h, tk, dh), q.dtype),
+                   jax.ShapeDtypeStruct((b, h, tk, dh), q.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, dh), jnp.float32),
+                        pltpu.VMEM((bk, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+    return dq, dk, dv

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: single-token decode attention over a KV cache.
+
+The serving-side hot spot: one query token attends to a long cache.  This is
+*pure* memory streaming — arithmetic intensity ~1 FLOP/byte — i.e. exactly the
+regime the paper targets: the online ``(m, d)`` carry means the cache is read
+ONCE (vs twice for a safe-softmax decode), and no [S]-sized score vector ever
+round-trips to HBM.
+
+Grid: (batch, kv_head, kv_block).  All G query heads of a KV group are
+processed together so the score tile is [G, BK] (sublanes × lanes).  The valid
+cache length is a scalar-prefetch operand (SMEM) used to mask the tail tile;
+tiles entirely past ``valid_len`` are skipped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _make_kernel(*, scale: float, g: int, bk: int, n_kv: int):
+    def kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref, m_sc, d_sc, acc_sc):
+        b = pl.program_id(0)
+        j = pl.program_id(2)
+
+        @pl.when(j == 0)
+        def _init():
+            m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+            d_sc[...] = jnp.zeros_like(d_sc)
+            acc_sc[...] = jnp.zeros_like(acc_sc)
+
+        vlen = vlen_ref[b]
+        run = j * bk < vlen           # skip tiles wholly past the valid cache
+
+        @pl.when(run)
+        def _compute():
+            q = q_ref[0, 0].astype(jnp.float32) * scale     # [G, D]
+            k = k_ref[0, 0].astype(jnp.float32)             # [BK, D]
+            v = v_ref[0, 0].astype(jnp.float32)
+            s = q @ k.T                                     # [G, BK]
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(k_pos < vlen, s, NEG_INF)
+            m_prev = m_sc[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+            alpha = jnp.exp(jnp.where(m_prev == m_new, 0.0, m_prev - m_new))
+            p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - m_new))
+            d_sc[...] = d_sc[...] * alpha + jnp.sum(p, -1, keepdims=True)
+            acc_sc[...] = acc_sc[...] * alpha + p @ v
+            m_sc[...] = m_new
+
+        @pl.when(j == n_kv - 1)
+        def _finalize():
+            o_ref[0, 0] = (acc_sc[...] /
+                           jnp.maximum(d_sc[...], 1e-30)).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def flash_decode_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                        kv_valid_len: jax.Array, *, bk: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q [B, Hq, D]; caches [B, Hkv, S, D]; kv_valid_len [B] → out [B, Hq, D]."""
+    b, hq, dh = q.shape
+    _, hkv, s, _ = k_cache.shape
+    g = hq // hkv
+    bk = min(bk, s)
+    assert s % bk == 0, (s, bk)
+    n_kv = s // bk
+    qg = q.reshape(b, hkv, g, dh)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda b_, h, j, vlen: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h, j, vlen: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h, j, vlen: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda b_, h, j, vlen: (b_, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, dh), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _make_kernel(scale=dh ** -0.5, g=g, bk=bk, n_kv=n_kv),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(kv_valid_len, jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, hq, dh)

@@ -1,0 +1,145 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Dispatch policy (MaxText-style fallback):
+* On TPU: Pallas kernels with explicit VMEM tiling.
+* On CPU (this container, and the multi-pod dry-run): ``interpret=True``
+  executes the kernel body faithfully for correctness tests, while the model
+  stack uses the semantically-identical XLA implementations in ``repro.core``
+  (Pallas can't lower to the CPU target).  ``use_pallas`` on ``ModelConfig``
+  selects the path; tests pin ``interpret=True`` explicitly.
+
+``flash_attention`` is differentiable: Pallas forward + the XLA chunked-online
+backward from ``repro.core.attention`` via ``jax.custom_vjp`` (the backward
+recomputes from the forward's saved LSE — FlashAttention economics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as core_attention
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.online_softmax import (
+    online_normalizer_pallas,
+    online_softmax_pallas,
+)
+from repro.kernels.softmax_topk import softmax_topk_pallas
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def online_softmax(x: Array, *, r_blk: int = 256, v_blk: int = 2048) -> Array:
+    """Softmax over the last axis; any leading batch shape."""
+    lead = x.shape[:-1]
+    v = x.shape[-1]
+    x2 = x.reshape(-1, v)
+    r = x2.shape[0]
+    r_blk = _largest_divisor_block(r, r_blk)
+    v_blk = _largest_divisor_block(v, v_blk)
+    y = online_softmax_pallas(x2, r_blk=r_blk, v_blk=v_blk,
+                              interpret=_interpret())
+    return y.reshape(*lead, v)
+
+
+def online_normalizer(x: Array, *, r_blk: int = 256, v_blk: int = 2048):
+    lead = x.shape[:-1]
+    v = x.shape[-1]
+    x2 = x.reshape(-1, v)
+    m, d = online_normalizer_pallas(
+        x2, r_blk=_largest_divisor_block(x2.shape[0], r_blk),
+        v_blk=_largest_divisor_block(v, v_blk), interpret=_interpret())
+    return m.reshape(lead), d.reshape(lead)
+
+
+def softmax_topk(x: Array, k: int, *, r_blk: int = 256, v_blk: int = 2048):
+    lead = x.shape[:-1]
+    v = x.shape[-1]
+    x2 = x.reshape(-1, v)
+    vals, idx, lse = softmax_topk_pallas(
+        x2, k, r_blk=_largest_divisor_block(x2.shape[0], r_blk),
+        v_blk=_largest_divisor_block(v, v_blk), interpret=_interpret())
+    return (vals.reshape(*lead, k), idx.reshape(*lead, k), lse.reshape(lead))
+
+
+def _largest_divisor_block(n: int, target: int) -> int:
+    target = min(target, n)
+    while n % target:
+        target -= 1
+    return target
+
+
+# ---------------------------------------------------------------------------
+# Differentiable flash attention: Pallas forward, XLA-chunked backward.
+# Layout here matches the model stack: q [B,Tq,Hq,D]; k,v [B,Tk,Hkv,D].
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal, bq, bk):
+    out, _ = _flash_fwd_impl(q, k, v, causal, bq, bk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, bq, bk):
+    qh = jnp.swapaxes(q, 1, 2)       # [B,Hq,Tq,D]
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+    out, lse = flash_attention_pallas(qh, kh, vh, causal=causal, bq=bq, bk=bk,
+                                      interpret=_interpret())
+    return jnp.swapaxes(out, 1, 2), lse
+
+
+def _flash_fwd(q, k, v, causal, bq, bk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, bq, bk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, bq, bk, res, dout):
+    """Backward: Pallas dq/dkv kernels (interpret on CPU); recomputes P from
+    the forward's saved LSE — the paper's (m, d) in log form."""
+    from repro.kernels.flash_attention_bwd import flash_attention_bwd_pallas
+    q, k, v, out, lse = res
+    b, tq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qh = jnp.swapaxes(q, 1, 2)
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+    oh = jnp.swapaxes(out, 1, 2)
+    doh = jnp.swapaxes(dout, 1, 2)
+    dq, dk_h, dv_h = flash_attention_bwd_pallas(
+        qh, kh, vh, oh, lse, doh, causal=causal, bq=bq, bk=bk,
+        interpret=_interpret())
+    # reduce per-Q-head dk/dv into KV heads (GQA)
+    tk = k.shape[1]
+    dk = dk_h.reshape(b, hkv, g, tk, dh).sum(axis=2)
+    dv = dv_h.reshape(b, hkv, g, tk, dh).sum(axis=2)
+    return (jnp.swapaxes(dq, 1, 2).astype(q.dtype),
+            jnp.swapaxes(dk, 1, 2).astype(k.dtype),
+            jnp.swapaxes(dv, 1, 2).astype(v.dtype))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    bq: int = 512, bk: int = 512) -> Array:
+    """Differentiable online-softmax attention (Pallas fwd on TPU)."""
+    bq = _largest_divisor_block(q.shape[1], bq)
+    bk = _largest_divisor_block(k.shape[1], bk)
+    return _flash(q, k, v, causal, bq, bk)
+
+
+def flash_decode(q: Array, k_cache: Array, v_cache: Array,
+                 kv_valid_len: Array, *, bk: int = 512) -> Array:
+    """Decode attention: q [B,Hq,D] vs caches [B,S,Hkv,D] → [B,Hq,D]."""
+    kh = jnp.swapaxes(k_cache, 1, 2)   # [B,Hkv,S,D]
+    vh = jnp.swapaxes(v_cache, 1, 2)
+    bk = _largest_divisor_block(kh.shape[2], bk)
+    return flash_decode_pallas(q, kh, vh, kv_valid_len, bk=bk,
+                               interpret=_interpret())

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic specification its kernel is tested against
+(tests/kernels/* sweep shapes & dtypes and assert_allclose kernel vs oracle).
+They are intentionally the *simple* formulations — safe softmax materializing
+everything — so a kernel bug cannot hide in shared code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    """Safe softmax over the last axis (paper Algorithm 2)."""
+    xf = x.astype(jnp.float32)
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    e = jnp.exp(xf - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def normalizer_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(m, d) statistics over the last axis."""
+    xf = x.astype(jnp.float32)
+    m = jnp.max(xf, axis=-1)
+    d = jnp.sum(jnp.exp(xf - m[..., None]), axis=-1)
+    return m, d
+
+
+def softmax_topk_ref(x: jax.Array, k: int):
+    """(top-k softmax probs desc, indices, lse) — paper Alg. 4 semantics."""
+    y = softmax_ref(x.astype(jnp.float32))
+    vals, idx = jax.lax.top_k(y, k)
+    m, d = normalizer_ref(x)
+    return vals.astype(x.dtype), idx.astype(jnp.int32), m + jnp.log(d)
+
+
+def attention_ref(q, k, v, *, causal: bool, q_offset: int = 0,
+                  kv_valid_len=None):
+    """Full-score-matrix attention. q [B,Tq,Hq,D]; k,v [B,Tk,Hkv,D]."""
+    b, tq, hq, dh = q.shape
+    _, tk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = dh ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, tq, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(tq)[:, None] + q_offset
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((b, tq, tk), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)[None]
+    if kv_valid_len is not None:
+        mask = mask & (k_pos[None] < jnp.asarray(kv_valid_len).reshape(-1, 1, 1))
+    s = jnp.where(mask[:, None, None], s, float("-inf"))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - m))
+    d = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p / d, v.astype(jnp.float32))
+    return o.reshape(b, tq, hq, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_valid_len):
+    """Single-token decode: q [B,Hq,D] against cache [B,S,Hkv,D]."""
+    o = attention_ref(q[:, None], k_cache, v_cache, causal=False,
+                      kv_valid_len=kv_valid_len)
+    return o[:, 0]

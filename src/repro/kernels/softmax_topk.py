@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: fused Softmax+TopK — paper Algorithm 4, single pass.
+
+One sweep over V-tiles per row-block carrying ``(m, d)`` *and* the running
+top-K ``(u, p)`` in VMEM scratch.  Exactly one HBM load per input element and
+O(K) output writes — the paper's 5→1 access reduction.
+
+TPU adaptation of Alg. 4 lines 10–15 (per-element insertion sort): each tile
+contributes its K largest candidates, found by K masked arg-max sweeps over
+the VMEM-resident tile (VPU-friendly: iota + compare + reduce), which are then
+merged with the running K by another K selection sweeps over the 2K candidate
+set.  Ties break to the lowest index, matching ``jax.lax.top_k``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+BIG_IDX = 2**30  # plain int: sentinel "no index", > any vocab size
+
+
+def _select_topk(vals, idx, k):
+    """K masked argmax sweeps; returns ([R,k] vals desc, [R,k] idx).
+
+    Lowest-index tie-breaking via a min-reduction over an index lattice.
+    """
+    outs_v, outs_i = [], []
+    work = vals
+    for _ in range(k):
+        cur = jnp.max(work, axis=-1, keepdims=True)                  # [R,1]
+        hit = work == cur
+        cand = jnp.where(hit, idx, BIG_IDX)
+        cur_i = jnp.min(cand, axis=-1, keepdims=True)                # [R,1]
+        outs_v.append(cur)
+        outs_i.append(cur_i)
+        work = jnp.where((idx == cur_i) & hit, NEG_INF, work)
+    return jnp.concatenate(outs_v, -1), jnp.concatenate(outs_i, -1)
+
+
+def _make_kernel(k: int, v_blk: int, n_v: int):
+    def kernel(x_ref, vals_ref, idx_ref, lse_ref, m_sc, d_sc, u_sc, p_sc):
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+            d_sc[...] = jnp.zeros_like(d_sc)
+            u_sc[...] = jnp.full_like(u_sc, NEG_INF)
+            p_sc[...] = jnp.full_like(p_sc, BIG_IDX)
+
+        x = x_ref[...].astype(jnp.float32)                 # [R_BLK, V_BLK]
+        r_blk = x.shape[0]
+        # --- (m, d) ⊕ update (Alg. 3 lines 4-5) ---------------------------
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(x, axis=-1, keepdims=True))
+        alpha = jnp.exp(jnp.where(m_prev == m_new, 0.0, m_prev - m_new))
+        d_sc[...] = d_sc[...] * alpha + jnp.sum(jnp.exp(x - m_new), -1,
+                                                keepdims=True)
+        m_sc[...] = m_new
+        # --- running top-k merge (Alg. 4 lines 8-15, tile-merge form) -----
+        lane = jax.lax.broadcasted_iota(jnp.int32, (r_blk, v_blk), 1)
+        gidx = lane + j * v_blk
+        tv, ti = _select_topk(x, gidx, k)
+        cand_v = jnp.concatenate([u_sc[...], tv], axis=-1)   # [R, 2K]
+        cand_i = jnp.concatenate([p_sc[...], ti], axis=-1)
+        u_new, p_new = _select_topk(cand_v, cand_i, k)
+        u_sc[...] = u_new
+        p_sc[...] = p_new
+
+        @pl.when(j == n_v - 1)                               # Alg. 4 lines 17-19
+        def _finalize():
+            m = m_sc[...]
+            d = d_sc[...]
+            vals_ref[...] = (jnp.exp(u_sc[...] - m) / d).astype(vals_ref.dtype)
+            idx_ref[...] = p_sc[...]
+            lse_ref[...] = m + jnp.log(d)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "r_blk", "v_blk", "interpret"))
+def softmax_topk_pallas(x: jax.Array, k: int, *, r_blk: int = 256,
+                        v_blk: int = 2048, interpret: bool = False):
+    """Fused softmax+top-k over the last axis of [R, V].
+
+    Returns ``(values [R,k] desc softmax probs, indices [R,k] int32,
+    lse [R])`` — one HBM pass over ``x``.
+    """
+    r, v = x.shape
+    r_blk = min(r_blk, r)
+    v_blk = min(v_blk, v)
+    assert r % r_blk == 0 and v % v_blk == 0, (x.shape, r_blk, v_blk)
+    assert k <= v_blk
+    n_v = v // v_blk
+    vals, idx, lse = pl.pallas_call(
+        _make_kernel(k, v_blk, n_v),
+        grid=(r // r_blk, n_v),
+        in_specs=[pl.BlockSpec((r_blk, v_blk), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((r_blk, k), lambda i, j: (i, 0)),
+                   pl.BlockSpec((r_blk, k), lambda i, j: (i, 0)),
+                   pl.BlockSpec((r_blk, 1), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((r, k), x.dtype),
+                   jax.ShapeDtypeStruct((r, k), jnp.int32),
+                   jax.ShapeDtypeStruct((r, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((r_blk, 1), jnp.float32),
+                        pltpu.VMEM((r_blk, 1), jnp.float32),
+                        pltpu.VMEM((r_blk, k), jnp.float32),
+                        pltpu.VMEM((r_blk, k), jnp.int32)],
+        interpret=interpret,
+    )(x)
+    return vals, idx, lse[:, 0]

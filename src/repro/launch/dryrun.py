@@ -1,0 +1,414 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  REPRO_DRYRUN_DEVICES overrides for the test suite.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh and extract the roofline terms.
+
+For each cell this builds ShapeDtypeStruct stand-ins (no allocation), lowers
+the right step function —
+
+    train_4k    → train_step  (loss → grads → bf16 reduce → sharded AdamW)
+    prefill_32k → prefill_step (cache fill + first fused-top-k token)
+    decode_32k / long_500k → serve_step (one token, shard_map ⊕-merge
+                   attention over the sharded KV cache, fused top-k sampling)
+
+— compiles it, prints ``memory_analysis()`` / ``cost_analysis()``, and writes
+a JSON record (roofline terms, collective breakdown, bytes/device) consumed
+by EXPERIMENTS.md.  A failure here is a sharding bug by definition.
+"""
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs.base import SHAPE_BY_NAME, ModelConfig, ParallelConfig, RunConfig, ShapeConfig
+from repro.distributed import context, sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import encdec, layers as L, transformer
+from repro.optim import adamw
+from repro.roofline.analysis import analyze
+from repro.serving import engine as serving
+from repro.training import train_step as ts
+
+# long-context cells run only for sub-quadratic archs (DESIGN.md §5)
+LONG_OK = {"xlstm-125m", "zamba2-1.2b"}
+LONG_OK_SMOKE = {"xlstm-125m-smoke", "zamba2-1.2b-smoke"}
+
+# reduced shapes for the smoke-mode matrix (tests exercise every builder
+# path on a small host mesh without the 512-device compile cost)
+SMOKE_SHAPES = {
+    "train_4k": ("train", 64, 8),
+    "prefill_32k": ("prefill", 128, 4),
+    "decode_32k": ("decode", 128, 8),
+    "long_500k": ("decode", 256, 2),
+}
+# archs whose params+opt need FSDP-style data-axis sharding to fit v5e HBM
+FSDP_ARCHS = {"llama4-scout-17b-a16e", "deepseek-coder-33b", "llava-next-34b"}
+
+
+def sds(shape, dtype, mesh=None, spec=None):
+    sh = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def _ba(shape_cfg: ShapeConfig, mesh) -> tuple:
+    """Mesh axes for the batch dim ('' tuple = replicated, e.g. batch 1)."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return dp if shape_cfg.global_batch % n == 0 else ()
+
+
+def _sa(shape_cfg: ShapeConfig, mesh, ba: tuple) -> tuple:
+    """Mesh axes for the KV-cache sequence dim (decode cells)."""
+    if ba:
+        return ("model",)
+    return tuple(mesh.axis_names)          # batch replicated: shard S fully
+
+
+def eval_params(cfg: ModelConfig):
+    """(values SDS tree, logical-axes tree) without allocating anything."""
+    init_fn = encdec.init if cfg.family == "encdec" else transformer.init
+    captured = {}
+
+    def f(key):
+        vals, axes = L.split_params(init_fn(key, cfg))
+        captured["axes"] = axes
+        return vals
+
+    vals = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return vals, captured["axes"]
+
+
+def count_params(vals_sds) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(vals_sds)))
+
+
+def active_params(cfg: ModelConfig, vals_sds) -> int:
+    """N_active: routed-expert params scaled by k/E (MoE), else total."""
+    total = count_params(vals_sds)
+    if cfg.moe is None:
+        return total
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(vals_sds)[0]:
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if "moe" in keys and "shared" not in keys and \
+                any(k in ("w_gate", "w_up", "w_down") for k in keys):
+            routed += leaf.size
+    frac = cfg.moe.experts_per_token / cfg.moe.num_experts
+    return int(total - routed + routed * frac)
+
+
+def model_flops(cfg: ModelConfig, shape_cfg: ShapeConfig, n_active: int) -> float:
+    if shape_cfg.kind == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        if cfg.family == "encdec":
+            tokens += shape_cfg.global_batch * cfg.encoder_seq_len
+        return 6.0 * n_active * tokens
+    if shape_cfg.kind == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape_cfg.global_batch      # decode: 1 tok/seq
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding by path.
+# ---------------------------------------------------------------------------
+def cache_shardings(cache_sds, mesh, rules: dict, ba: tuple, sa: tuple):
+    ba_s = ba if ba else None
+    sa_s = sa if sa else None
+
+    def one(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        nd = len(leaf.shape)
+        kn = keys[-1] if keys else ""
+        if kn in ("k", "v"):
+            spec = (P(ba_s, sa_s, None, None) if nd == 4
+                    else P(None, ba_s, sa_s, None, None))
+        elif kn in ("k_scale", "v_scale"):
+            spec = (P(ba_s, sa_s, None) if nd == 3
+                    else P(None, ba_s, sa_s, None))
+        elif kn in ("c_kv", "k_rope"):
+            spec = P(None, ba_s, sa_s, None)
+        elif kn == "ssm":
+            spec = P(None, ba_s, rules.get("inner_heads"), None, None)
+        elif kn in ("conv_x", "conv"):
+            spec = P(None, ba_s, None, rules.get("inner"))
+        elif kn in ("conv_b", "conv_c"):
+            spec = P(None, ba_s, None, None)
+        else:  # state tuples (mlstm/slstm scalar states)
+            spec = P(*([None, ba_s] + [None] * (nd - 2))) if nd >= 2 else P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_sds)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind builders: return (function, arg SDS tuple, out_shardings, donate).
+# ---------------------------------------------------------------------------
+def build_train(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
+    cfg = run.model
+    vals_sds, axes = eval_params(cfg)
+    p_sh = sharding.param_sharding(axes, cfg, par, mesh)
+    if par.fsdp:
+        p_sh = sharding.fsdp_param_sharding(p_sh, vals_sds, mesh, par)
+    opt_moments = sharding.optimizer_sharding(p_sh, vals_sds, mesh, par)
+    opt_sh = adamw.AdamWState(step=NamedSharding(mesh, P()),
+                              mu=opt_moments, nu=opt_moments)
+    params = jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
+                          vals_sds, p_sh)
+    opt_shape = jax.eval_shape(adamw.init, vals_sds)
+    opt = adamw.AdamWState(
+        step=sds((), jnp.int32, mesh, P()),
+        mu=jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
+                        opt_shape.mu, opt_moments),
+        nu=jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
+                        opt_shape.nu, opt_moments))
+    ba = _ba(shape_cfg, mesh)
+    ba_s = ba if ba else None
+    gb, t = shape_cfg.global_batch, shape_cfg.seq_len
+    batch = {"tokens": sds((gb, t), jnp.int32, mesh, P(ba_s, None)),
+             "labels": sds((gb, t), jnp.int32, mesh, P(ba_s, None))}
+    if cfg.family == "vlm":
+        tt = t - cfg.num_patches
+        batch = {"tokens": sds((gb, tt), jnp.int32, mesh, P(ba_s, None)),
+                 "labels": sds((gb, tt), jnp.int32, mesh, P(ba_s, None)),
+                 "patch_embeds": sds((gb, cfg.num_patches, cfg.d_model),
+                                     jnp.bfloat16, mesh, P(ba_s, None, None))}
+    if cfg.family == "encdec":
+        batch["frames"] = sds((gb, cfg.encoder_seq_len, cfg.d_model),
+                              jnp.bfloat16, mesh, P(ba_s, None, None))
+    fn = ts.make_train_step(run)
+    return fn, (params, opt, batch), (p_sh, opt_sh, None), (0, 1)
+
+
+def build_prefill(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
+    cfg = run.model
+    vals_sds, axes = eval_params(cfg)
+    p_sh = sharding.param_sharding(axes, cfg, par, mesh)
+    params = jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
+                          vals_sds, p_sh)
+    ba = _ba(shape_cfg, mesh)
+    sa = _sa(shape_cfg, mesh, ba)
+    ba_s = ba if ba else None
+    rules = sharding.axis_rules(cfg, par, mesh)
+    gb, t = shape_cfg.global_batch, shape_cfg.seq_len
+
+    if cfg.family == "encdec":
+        def fn(params, frames, tokens, rng):
+            last, caches, ln = serving.encdec_prefill(params, frames, tokens,
+                                                      cfg, max_len=t)
+            logits = transformer.logits_last(params, last[:, None], cfg)
+            from repro.distributed.decode_attention import sharded_topk_sample
+            tok, _ = sharded_topk_sample(rng, logits, 5, mesh=mesh,
+                                         batch_axes=ba)
+            return tok, caches, ln
+        args = (params,
+                sds((gb, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16,
+                    mesh, P(ba_s, None, None)),
+                sds((gb, t), jnp.int32, mesh, P(ba_s, None)),
+                sds((2,), jnp.uint32, mesh, P()))
+        cache_sds = jax.eval_shape(
+            lambda: _encdec_cache(cfg, gb, t))
+    else:
+        tt = t - cfg.num_patches if cfg.family == "vlm" else t
+
+        def fn(params, tokens, rng, *extra):
+            pe = extra[0] if extra else None
+            last, caches, ln = serving.prefill(params, tokens, cfg,
+                                               max_len=t, patch_embeds=pe)
+            logits = transformer.logits_last(params, last[:, None], cfg)
+            from repro.distributed.decode_attention import sharded_topk_sample
+            tok, _ = sharded_topk_sample(rng, logits, 5, mesh=mesh,
+                                         batch_axes=ba)
+            return tok, caches, ln
+        args = [params, sds((gb, tt), jnp.int32, mesh, P(ba_s, None)),
+                sds((2,), jnp.uint32, mesh, P())]
+        if cfg.family == "vlm":
+            args.append(sds((gb, cfg.num_patches, cfg.d_model), jnp.bfloat16,
+                            mesh, P(ba_s, None, None)))
+        args = tuple(args)
+        cache_sds = jax.eval_shape(lambda: serving.init_cache(cfg, gb, t))
+    cache_sh = cache_shardings(cache_sds, mesh, rules, ba, sa)
+    out_sh = (NamedSharding(mesh, P(ba_s)), cache_sh, NamedSharding(mesh, P()))
+    return fn, args, out_sh, ()
+
+
+def _encdec_cache(cfg, b, max_len):
+    dt = jnp.dtype(cfg.dtype)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    n = cfg.num_layers
+    return {
+        "self": {"k": jnp.zeros((n, b, max_len, hkv, hd), dt),
+                 "v": jnp.zeros((n, b, max_len, hkv, hd), dt)},
+        "cross": {"k": jnp.zeros((n, b, cfg.encoder_seq_len, hkv, hd), dt),
+                  "v": jnp.zeros((n, b, cfg.encoder_seq_len, hkv, hd), dt)},
+    }
+
+
+def build_decode(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
+    cfg = run.model
+    vals_sds, axes = eval_params(cfg)
+    p_sh = sharding.param_sharding(axes, cfg, par, mesh)
+    params = jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
+                          vals_sds, p_sh)
+    ba = _ba(shape_cfg, mesh)
+    sa = _sa(shape_cfg, mesh, ba)
+    ba_s = ba if ba else None
+    rules = sharding.axis_rules(cfg, par, mesh)
+    gb, s = shape_cfg.global_batch, shape_cfg.seq_len
+
+    if cfg.family == "encdec":
+        cache_sds = jax.eval_shape(lambda: _encdec_cache(cfg, gb, s))
+
+        def fn(params, caches, cache_len, tokens, rng):
+            return serving.encdec_decode_step(params, caches, cache_len,
+                                              tokens, cfg, rng=rng)
+    else:
+        cache_sds = jax.eval_shape(lambda: serving.init_cache(cfg, gb, s))
+
+        def fn(params, caches, cache_len, tokens, rng):
+            return serving.decode_step(params, caches, cache_len, tokens,
+                                       cfg, rng=rng, top_k=5)
+    cache_sh = cache_shardings(cache_sds, mesh, rules, ba, sa)
+    caches = jax.tree.map(lambda x, sh: sds(x.shape, x.dtype, mesh, sh.spec),
+                          cache_sds, cache_sh)
+    args = (params, caches, sds((), jnp.int32, mesh, P()),
+            sds((gb, 1), jnp.int32, mesh, P(ba_s, None)),
+            sds((2,), jnp.uint32, mesh, P()))
+    out_sh = (NamedSharding(mesh, P(ba_s)), cache_sh, NamedSharding(mesh, P()))
+    return fn, args, out_sh, (1,)
+
+
+BUILDERS = {"train": build_train, "prefill": build_prefill,
+            "decode": build_decode}
+
+
+# ---------------------------------------------------------------------------
+# Cell runner.
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             mesh=None, verbose: bool = True, smoke: bool = False,
+             overrides: dict | None = None,
+             hlo_path: str | None = None) -> dict:
+    if smoke:
+        kind, seq, gb = SMOKE_SHAPES[shape_name]
+        shape_cfg = ShapeConfig(shape_name, seq, gb, kind)
+        cfg = configs.get_smoke(arch)
+    else:
+        shape_cfg = SHAPE_BY_NAME[shape_name]
+        cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if shape_name == "long_500k" and cfg.name not in (LONG_OK | LONG_OK_SMOKE):
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "full-attention arch: 500k decode requires "
+                          "sub-quadratic mixer (DESIGN.md §5)"}
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    par = sharding.derive_parallel(cfg, mesh)
+    par = ParallelConfig(**{**par.__dict__,
+                            "fsdp": cfg.name in FSDP_ARCHS})
+    run = RunConfig(model=cfg, parallel=par)
+    ba = _ba(shape_cfg, mesh)
+    sa = _sa(shape_cfg, mesh, ba)
+    ctx = context.ShardContext(mesh=mesh, par=par, cache_seq_axes=sa,
+                               batch_axes=ba)
+    t0 = time.monotonic()
+    with context.use(ctx), mesh:
+        fn, args, out_sh, donate = BUILDERS[shape_cfg.kind](
+            run, mesh, par, shape_cfg)
+        lowered = jax.jit(fn, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+    if hlo_path:
+        import gzip
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(compiled.as_text())
+    vals_sds, _ = eval_params(cfg)
+    n_active = active_params(cfg, vals_sds)
+    chips = mesh.size
+    rf = analyze(compiled, arch=arch, shape=shape_name,
+                 mesh_desc="x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+                 chips=chips,
+                 model_flops=model_flops(cfg, shape_cfg, n_active))
+    rec = rf.to_dict()
+    rec.update(status="ok", attn_mode=par.attn_mode, fsdp=par.fsdp,
+               n_params=count_params(vals_sds), n_active=n_active,
+               lower_s=round(t_lower, 1), compile_s=round(t_compile, 1))
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"[{arch} × {shape_name} × {rec['mesh']}] "
+              f"attn={par.attn_mode} fsdp={par.fsdp}")
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"alias={ma.alias_size_in_bytes/2**30:.2f}GiB per device")
+        print(f"  cost_analysis: flops/dev={rec['hlo_flops_per_device']:.3e} "
+              f"bytes/dev={rec['hlo_bytes_per_device']:.3e}")
+        print(f"  roofline: compute={rec['compute_s']*1e3:.2f}ms "
+              f"memory={rec['memory_s']*1e3:.2f}ms "
+              f"collective={rec['collective_s']*1e3:.2f}ms "
+              f"→ {rec['dominant']}-bound; "
+              f"useful-flops={rec['useful_flops_ratio']:.2f}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCHS:
+            name = configs.get(arch).name
+            for shape in SHAPE_BY_NAME:
+                cells.append((name, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in cells:
+        tag = f"{arch}__{shape}__{'multipod' if args.multi_pod else 'pod'}"
+        path = os.path.join(args.out, tag + ".json")
+        hlo_dir = os.path.join(args.out, "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        if os.path.exists(path):
+            print(f"[skip cached] {tag}")
+            continue
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           hlo_path=os.path.join(hlo_dir, tag + ".hlo.gz"))
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "status": "failed",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"[wrote] {path}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

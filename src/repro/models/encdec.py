@@ -1,0 +1,147 @@
+"""Encoder–decoder transformer (Whisper-style backbone).
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings [B, S_enc, D]; a linear adapter stands
+in for the conv stack.  Encoder: bidirectional self-attention + sinusoidal
+positions.  Decoder: causal self-attention (KV-cached) + cross-attention over
+the encoder output (K/V computed once at prefill) + MLP.  LayerNorm + GELU,
+learned decoder positions — whisper conventions.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Array = jax.Array
+PyTree = Any
+
+
+def sinusoidal(t: int, d: int) -> Array:
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_block_init(key, cfg: ModelConfig) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.layer_norm_init(cfg), "attn": L.attention_init(k1, cfg),
+            "ln2": L.layer_norm_init(cfg), "mlp": L.mlp_init(k2, cfg)}
+
+
+def _dec_block_init(key, cfg: ModelConfig) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.layer_norm_init(cfg), "self_attn": L.attention_init(k1, cfg),
+            "lnx": L.layer_norm_init(cfg), "cross_attn": L.attention_init(k2, cfg),
+            "ln2": L.layer_norm_init(cfg), "mlp": L.mlp_init(k3, cfg)}
+
+
+def init(key, cfg: ModelConfig) -> PyTree:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+
+    def stack(init_fn, key, n):
+        return L.stack_layer_init(lambda k: init_fn(k, cfg), key, n)
+
+    return {
+        "adapter": L._dense_init(ks[0], (cfg.d_model, cfg.d_model),
+                                 (None, "embed"), dtype=dt),
+        "encoder": stack(_enc_block_init, ks[1], cfg.encoder_layers),
+        "enc_norm": L.layer_norm_init(cfg),
+        "embedding": L.embedding_init(ks[2], cfg),
+        "pos_embed": L._dense_init(ks[3], (cfg.max_seq_len, cfg.d_model),
+                                   (None, "embed"), scale=0.02, dtype=dt),
+        "decoder": stack(_dec_block_init, ks[4], cfg.num_layers),
+        "dec_norm": L.layer_norm_init(cfg),
+    }
+
+
+def encode(params: PyTree, frames: Array, cfg: ModelConfig) -> Array:
+    """frames [B, S_enc, D] (stub embeddings) → encoder hidden [B, S_enc, D]."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) @ params["adapter"]
+    x = x + sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(x, p):
+        h = L.layer_norm(p["ln1"], x, cfg.norm_eps)
+        a, _ = L.attention_apply(p["attn"], h, cfg,
+                                 positions=jnp.arange(x.shape[1]),
+                                 causal=False)
+        x = x + a
+        h = L.layer_norm(p["ln2"], x, cfg.norm_eps)
+        return x + L.mlp_apply(p["mlp"], h, cfg), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["encoder"])
+    return L.layer_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_attention(p, x, cfg, *, enc_out=None, kv_cache=None):
+    """Cross-attention: K/V from encoder output (or its cached projection)."""
+    b, t, d = x.shape
+    hq, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, t, hq, hd)
+    if enc_out is not None:
+        # prefill/train: compute K/V from the encoder output (any provided
+        # cache is the zero-initialized buffer — it gets REPLACED, not read)
+        s_enc = enc_out.shape[1]
+        k = (enc_out @ p["wk"]).reshape(b, s_enc, cfg.num_kv_heads, hd)
+        v = (enc_out @ p["wv"]).reshape(b, s_enc, cfg.num_kv_heads, hd)
+    else:
+        k, v = kv_cache["k"], kv_cache["v"]
+    out = core.online_attention(q, k, v, causal=False,
+                                chunk_size=cfg.attn_chunk)
+    return out.reshape(b, t, hq * hd) @ p["wo"], {"k": k, "v": v}
+
+
+def decode_hidden(params: PyTree, tokens: Array, enc_out: Optional[Array],
+                  cfg: ModelConfig, *, caches: Optional[list] = None,
+                  cache_len: Optional[Array] = None):
+    """Decoder forward.  caches = [{self: {k,v}, cross: {k,v}} per layer]
+    (stacked).  Returns (hidden [B,T,D], new stacked caches)."""
+    x = L.embed_tokens(params["embedding"], tokens)
+    base = cache_len if cache_len is not None else 0
+    positions = base + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x = x + jnp.take(params["pos_embed"], positions, axis=0)
+
+    def body(x, layer_in):
+        p, cache = layer_in
+        h = L.layer_norm(p["ln1"], x, cfg.norm_eps)
+        self_cache = None if cache is None else cache["self"]
+        a, new_self = L.attention_apply(p["self_attn"], h, cfg,
+                                        positions=positions,
+                                        cache=self_cache,
+                                        cache_len=cache_len)
+        x = x + a
+        h = L.layer_norm(p["lnx"], x, cfg.norm_eps)
+        cross_cache = None if cache is None else cache["cross"]
+        a, new_cross = _cross_attention(p["cross_attn"], h, cfg,
+                                        enc_out=enc_out, kv_cache=cross_cache)
+        x = x + a
+        h = L.layer_norm(p["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h, cfg)
+        new_cache = {"self": new_self, "cross": new_cross}
+        return x, new_cache
+
+    wrapped = body if caches is not None else jax.checkpoint(body)
+    x, new_caches = jax.lax.scan(wrapped, x, (params["decoder"], caches))
+    return L.layer_norm(params["dec_norm"], x, cfg.norm_eps), new_caches
+
+
+def loss_fn(params: PyTree, batch: dict, cfg: ModelConfig):
+    """batch: frames [B,S,D], tokens [B,T], labels [B,T]."""
+    enc_out = encode(params, batch["frames"], cfg)
+    hidden, _ = decode_hidden(params, batch["tokens"], enc_out, cfg)
+    b, t, d = hidden.shape
+    labels = batch["labels"].reshape(-1)
+    valid = labels >= 0
+    w = L.head_matrix(params["embedding"], cfg)
+    tok_loss = core.chunked_cross_entropy(hidden.reshape(-1, d), w,
+                                          jnp.where(valid, labels, 0),
+                                          num_chunks=cfg.vocab_chunks)
+    loss = jnp.sum(tok_loss * valid) / jnp.maximum(valid.sum(), 1)
+    return loss, {"loss": loss, "ce_loss": loss}

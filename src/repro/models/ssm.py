@@ -1,0 +1,205 @@
+"""Mamba2 (SSD) block — chunked-parallel training form + O(1) decode step.
+
+The SSD recurrence  S_t = a_t·S_{t−1} + Δ_t·B_t x_tᵀ,  y_t = C_tᵀS_t + D·x_t
+is evaluated chunkwise: intra-chunk pairs via a masked [L, L] score matrix
+(MXU-friendly), inter-chunk via a scan over per-chunk states.  Structurally
+this is the same single-pass carry pattern as the paper's online softmax —
+a running statistic ⊕-updated per tile — with exp-decay weights instead of
+exp-normalized ones (DESIGN.md §5).
+
+Shapes: x [B, T, H, P]; B, C [B, T, N] (single group); Δ [B, T, H]; A, D [H].
+Sharding: d_inner ("inner" = H·P) over the model axis; B/C/N replicated.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import Param, _dense_init, _ones, rms_norm
+
+Array = jax.Array
+
+
+def ssd_chunked(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                d_skip: Array, *, chunk: int,
+                init_state: Optional[Array] = None):
+    """Chunked SSD scan.
+
+    x [B,T,H,P]; dt [B,T,H] (>0); a_log [H] (A = −exp(a_log));
+    b, c [B,T,N]; d_skip [H].  Returns (y [B,T,H,P], final_state [B,H,N,P]).
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    l = min(chunk, t)
+    assert t % l == 0, (t, l)
+    nc = t // l
+    f32 = jnp.float32
+
+    # [nc, B, L, ...] chunk-major for the scan
+    xc = jnp.moveaxis(x.reshape(bsz, nc, l, h, p), 1, 0).astype(f32)
+    dtc = jnp.moveaxis(dt.reshape(bsz, nc, l, h), 1, 0).astype(f32)
+    bc = jnp.moveaxis(b.reshape(bsz, nc, l, n), 1, 0).astype(f32)
+    cc = jnp.moveaxis(c.reshape(bsz, nc, l, n), 1, 0).astype(f32)
+    a = -jnp.exp(a_log.astype(f32))                          # [H] < 0
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    s0 = (jnp.zeros((bsz, h, n, p), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(s_in, inputs):
+        """One chunk: intra (masked decay scores) + inter (carried state).
+        Transients are [B,L,L,H] — chunk-local, recomputed in the bwd pass."""
+        xk, dtk, bk, ck = inputs                             # [B,L,...]
+        la = jnp.cumsum(dtk * a, axis=1)                     # [B,L,H] inclusive
+        # M[i,j] = (C_i·B_j)·exp(la_i − la_j)·Δ_j, j ≤ i
+        scores = jnp.einsum("bin,bjn->bij", ck, bk)
+        decay = la[:, :, None, :] - la[:, None, :, :]        # [B,L,L,H]
+        w = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        y_intra = jnp.einsum("bij,bijh,bjh,bjhp->bihp",
+                             scores, w, dtk, xk)
+        # inter: contribution of the entering state
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp", ck, jnp.exp(la), s_in)
+        y_k = y_intra + y_inter + d_skip[None, None, :, None] * xk
+        # boundary state update
+        w_end = jnp.exp(la[:, -1:, :] - la)                  # [B,L,H]
+        sc_k = jnp.einsum("bjn,bjh,bjhp->bhnp", bk, w_end * dtk, xk)
+        gamma = jnp.exp(la[:, -1, :])                        # [B,H]
+        s_out = gamma[..., None, None] * s_in + sc_k
+        return s_out, y_k
+
+    step = jax.checkpoint(step)   # recompute chunk transients in backward
+    s_final, y = jax.lax.scan(step, s0, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(y, 0, 1).reshape(bsz, t, h, p).astype(x.dtype)
+    return y, s_final
+
+
+def ssd_decode_step(state: Array, x: Array, dt: Array, a_log: Array,
+                    b: Array, c: Array, d_skip: Array):
+    """One-token SSD update.  state [B,H,N,P]; x [B,H,P]; dt [B,H]; b,c [B,N]."""
+    f32 = jnp.float32
+    a = -jnp.exp(a_log.astype(f32))
+    decay = jnp.exp(dt.astype(f32) * a)                      # [B,H]
+    upd = jnp.einsum("bn,bh,bhp->bhnp", b.astype(f32),
+                     dt.astype(f32), x.astype(f32))
+    new_state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(f32), new_state) \
+        + d_skip[None, :, None] * x.astype(f32)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width w) via shift-adds — sharding-friendly.
+# ---------------------------------------------------------------------------
+def causal_conv(x: Array, w: Array, state: Optional[Array] = None):
+    """x [B,T,C]; w [C, width].  Returns (y [B,T,C], new_state [B,width−1,C])."""
+    width = w.shape[-1]
+    w = w.astype(x.dtype)   # keep activation dtype (no f32 promotion)
+    if state is not None:
+        x_ext = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    t = x.shape[1]
+    y = sum(x_ext[:, i:i + t] * w[None, None, :, width - 1 - i]
+            for i in range(width))
+    new_state = x_ext[:, -(width - 1):] if width > 1 else None
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block.
+# ---------------------------------------------------------------------------
+def mamba2_init(key, cfg: ModelConfig) -> dict:
+    sc: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner = sc.expand * d
+    h = d_inner // sc.head_dim
+    n = sc.d_state
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    import numpy as np
+    dt_bias = jnp.asarray(
+        np.log(np.expm1(np.exp(np.linspace(np.log(sc.dt_min),
+                                           np.log(sc.dt_max), h)))),
+        jnp.float32)
+    return {
+        "w_zx": _dense_init(ks[0], (d, 2 * d_inner), ("embed", "inner"), dtype=dt),
+        "w_bc": _dense_init(ks[1], (d, 2 * n), ("embed", None), dtype=dt),
+        "w_dt": _dense_init(ks[2], (d, h), ("embed", "inner_heads"), dtype=dt),
+        "dt_bias": Param(dt_bias, ("inner_heads",)),
+        "a_log": Param(jnp.zeros((h,), jnp.float32), ("inner_heads",)),
+        "d_skip": _ones((h,), ("inner_heads",)),
+        "conv_x": _dense_init(ks[3], (d_inner, sc.d_conv), ("inner", None),
+                              scale=0.5, dtype=jnp.float32),
+        "conv_b": _dense_init(ks[4], (n, sc.d_conv), (None, None),
+                              scale=0.5, dtype=jnp.float32),
+        "conv_c": _dense_init(ks[5], (n, sc.d_conv), (None, None),
+                              scale=0.5, dtype=jnp.float32),
+        "norm": {"scale": _ones((d_inner,), ("inner",))},
+        "w_out": _dense_init(ks[6], (d_inner, d), ("inner", "embed"), dtype=dt),
+    }
+
+
+def mamba2_apply(p: dict, x: Array, cfg: ModelConfig, *,
+                 cache: Optional[dict] = None):
+    """x [B,T,D] → (y [B,T,D], new_cache).
+
+    cache = {"ssm": [B,H,N,P], "conv_x": [B,w−1,inner], "conv_b", "conv_c"}.
+    ``cache is not None`` and T == 1 → decode step.
+    """
+    sc: SSMConfig = cfg.ssm
+    bsz, t, d = x.shape
+    d_inner = sc.expand * d
+    h = d_inner // sc.head_dim
+    n = sc.d_state
+
+    zx = x @ p["w_zx"]
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bcr = x @ p["w_bc"]
+    dt_raw = x @ p["w_dt"]
+    dt_act = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    if cache is None or t > 1:
+        xc, st_x = causal_conv(xin, p["conv_x"])
+        bc_b, st_b = causal_conv(bcr[..., :n], p["conv_b"])
+        bc_c, st_c = causal_conv(bcr[..., n:], p["conv_c"])
+        xc = jax.nn.silu(xc)
+        bc_b = jax.nn.silu(bc_b)
+        bc_c = jax.nn.silu(bc_c)
+        xh = xc.reshape(bsz, t, h, sc.head_dim)
+        y, s_final = ssd_chunked(xh, dt_act, p["a_log"], bc_b, bc_c,
+                                 p["d_skip"], chunk=sc.chunk)
+        y = y.reshape(bsz, t, d_inner)
+        new_cache = {"ssm": s_final, "conv_x": st_x, "conv_b": st_b,
+                     "conv_c": st_c}
+    else:
+        # --- decode: O(1) state update --------------------------------------
+        xc1, st_x = causal_conv(xin, p["conv_x"], state=cache["conv_x"])
+        b1, st_b = causal_conv(bcr[..., :n], p["conv_b"], state=cache["conv_b"])
+        c1, st_c = causal_conv(bcr[..., n:], p["conv_c"], state=cache["conv_c"])
+        xc1 = jax.nn.silu(xc1)[:, 0]
+        b1 = jax.nn.silu(b1)[:, 0]
+        c1 = jax.nn.silu(c1)[:, 0]
+        xh = xc1.reshape(bsz, h, sc.head_dim)
+        y1, s_new = ssd_decode_step(cache["ssm"], xh, dt_act[:, 0],
+                                    p["a_log"], b1, c1, p["d_skip"])
+        y = y1.reshape(bsz, 1, d_inner)
+        new_cache = {"ssm": s_new, "conv_x": st_x, "conv_b": st_b,
+                     "conv_c": st_c}
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(p["norm"], y, cfg.norm_eps)
+    return (y @ p["w_out"]).astype(x.dtype), new_cache
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    sc: SSMConfig = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    h = d_inner // sc.head_dim
+    return {
+        "ssm": jnp.zeros((batch, h, sc.d_state, sc.head_dim), jnp.float32),
+        "conv_x": jnp.zeros((batch, sc.d_conv - 1, d_inner), dtype),
+        "conv_b": jnp.zeros((batch, sc.d_conv - 1, sc.d_state), dtype),
+        "conv_c": jnp.zeros((batch, sc.d_conv - 1, sc.d_state), dtype),
+    }

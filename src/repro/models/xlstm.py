@@ -1,0 +1,274 @@
+"""xLSTM blocks: chunked-parallel mLSTM + sequential sLSTM.
+
+The mLSTM's exponential gating needs the running stabilizer
+``m_t = max(log f_t + m_{t−1}, ĩ_t)`` — *the same online-max recurrence as the
+paper's Algorithm 3* (m plays the role of the running max; C and n are the
+rescaled running statistics, exactly like d).  The chunked form below carries
+``(m, C, n)`` across chunks and ⊕-rescales them by ``exp(m_old − m_new)``,
+i.e., FlashAttention-with-decay.  This connection is why the arch is assigned
+to this paper (DESIGN.md §5).
+
+sLSTM has hidden-state feedback through its recurrent weights, so it is
+inherently sequential — a ``lax.scan`` over time (cheap scalar states).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.models.layers import _dense_init, _ones, _zeros, rms_norm
+from repro.models.ssm import causal_conv
+
+Array = jax.Array
+NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core — chunked parallel form with online-max stabilizer.
+# ---------------------------------------------------------------------------
+def mlstm_chunked(q: Array, k: Array, v: Array, i_gate: Array, f_gate: Array,
+                  *, chunk: int, init: Optional[tuple] = None):
+    """q,k,v [B,T,H,D]; i_gate,f_gate [B,T,H] (pre-activation logits).
+
+    Returns (h [B,T,H,D], (m, C, n) final state).
+    k is expected pre-scaled by 1/sqrt(D).
+    """
+    bsz, t, h, dh = q.shape
+    l = min(chunk, t)
+    assert t % l == 0
+    nc = t // l
+    f32 = jnp.float32
+
+    def tochunks(x):
+        return jnp.moveaxis(
+            x.reshape(bsz, nc, l, *x.shape[2:]), 1, 0).astype(f32)
+
+    qc, kc, vc = tochunks(q), tochunks(k), tochunks(v)
+    ic, fc = tochunks(i_gate), tochunks(f_gate)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+
+    if init is None:
+        m0 = jnp.full((bsz, h), NEG_INF, f32)
+        c0 = jnp.zeros((bsz, h, dh, dh), f32)
+        n0 = jnp.zeros((bsz, h, dh), f32)
+    else:
+        m0, c0, n0 = [x.astype(f32) for x in init]
+
+    def step(carry, inputs):
+        m_run, c_run, n_run = carry
+        qk_, kk_, vk_, ik_, fk_ = inputs                     # [B,L,H,*]
+        logf = -jax.nn.softplus(-fk_)                        # log sigmoid
+        la = jnp.cumsum(logf, axis=1)                        # [B,L,H] inclusive
+        # intra log-weights W[i,j] = la_i − la_j + ĩ_j  (j ≤ i)
+        w = la[:, :, None, :] - la[:, None, :, :] + ik_[:, None, :, :]
+        w = jnp.where(mask[None, :, :, None], w, NEG_INF)    # [B,L,L,H]
+        m_intra = jnp.max(w, axis=2)                         # [B,L,H]
+        m_inter = la + m_run[:, None, :]                     # decayed carry max
+        m_i = jnp.maximum(m_intra, m_inter)                  # online max (⊕)
+        p = jnp.exp(w - m_i[:, :, None, :])                  # [B,L,L,H]
+        s = jnp.einsum("bihd,bjhd->bijh", qk_, kk_)          # scores
+        inter_scale = jnp.exp(m_inter - m_i)                 # [B,L,H]
+        h_num = jnp.einsum("bijh,bjhd->bihd", p * s, vk_) + \
+            inter_scale[..., None] * jnp.einsum("bihd,bhde->bihe", qk_, c_run)
+        # denominator: q·n accumulated with the same weights
+        qn_intra = jnp.einsum("bijh,bijh->bih", p, s)
+        qn_inter = inter_scale * jnp.einsum("bihd,bhd->bih", qk_, n_run)
+        qn = qn_intra + qn_inter
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_i))
+        h_out = h_num / denom[..., None]
+        # ---- carry update (boundary ⊕ rescale) ----------------------------
+        la_end = la[:, -1, :]                                # [B,H]
+        m_bnd = jnp.max(la_end[:, None, :] - la + ik_, axis=1)  # chunk part
+        m_new = jnp.maximum(la_end + m_run, m_bnd)
+        wb = jnp.exp(la_end[:, None, :] - la + ik_ - m_new[:, None, :])
+        c_new = (jnp.exp(la_end + m_run - m_new)[:, :, None, None] * c_run
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", wb, kk_, vk_))
+        n_new = (jnp.exp(la_end + m_run - m_new)[:, :, None] * n_run
+                 + jnp.einsum("bjh,bjhd->bhd", wb, kk_))
+        return (m_new, c_new, n_new), h_out
+
+    step = jax.checkpoint(step)
+    (m_f, c_f, n_f), hs = jax.lax.scan(step, (m0, c0, n0), (qc, kc, vc, ic, fc))
+    h_full = jnp.moveaxis(hs, 0, 1).reshape(bsz, t, h, dh)
+    return h_full.astype(q.dtype), (m_f, c_f, n_f)
+
+
+def mlstm_decode_step(state: tuple, q: Array, k: Array, v: Array,
+                      i_gate: Array, f_gate: Array):
+    """Sequential stabilized mLSTM step. q,k,v [B,H,D]; gates [B,H]."""
+    m, c, n = state
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    logf = -jax.nn.softplus(-f_gate.astype(f32))
+    m_new = jnp.maximum(logf + m, i_gate.astype(f32))
+    f_sc = jnp.exp(logf + m - m_new)
+    i_sc = jnp.exp(i_gate.astype(f32) - m_new)
+    c_new = f_sc[..., None, None] * c + i_sc[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n_new = f_sc[..., None] * n + i_sc[..., None] * k
+    qn = jnp.einsum("bhd,bhd->bh", q, n_new)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h = jnp.einsum("bhd,bhde->bhe", q, c_new) / denom[..., None]
+    return h, (m_new, c_new, n_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM core — sequential scan (hidden-state feedback).
+# ---------------------------------------------------------------------------
+def slstm_scan(gates_x: Array, r_weights: Array, *, num_heads: int,
+               init: Optional[tuple] = None):
+    """gates_x [B,T,4,Dm]: pre-computed W·x_t for (i, f, z, o).
+    r_weights [4, H, Dh, Dh]: per-head recurrent matrices on h_{t−1}.
+    Returns (h [B,T,Dm], (c, n, m, h_prev) final)."""
+    bsz, t, _, dm = gates_x.shape
+    hh = num_heads
+    dh = dm // hh
+    f32 = jnp.float32
+
+    if init is None:
+        c0 = jnp.zeros((bsz, dm), f32)
+        n0 = jnp.ones((bsz, dm), f32)
+        m0 = jnp.zeros((bsz, dm), f32)
+        h0 = jnp.zeros((bsz, dm), f32)
+    else:
+        c0, n0, m0, h0 = [x.astype(f32) for x in init]
+
+    def step(carry, gx):
+        c, n, m, h_prev = carry
+        hp = h_prev.reshape(bsz, hh, dh)
+        rec = jnp.einsum("bhd,ghde->gbhe", hp, r_weights).reshape(4, bsz, dm)
+        gi, gf, gz, go = gx[:, 0] + rec[0], gx[:, 1] + rec[1], \
+            gx[:, 2] + rec[2], gx[:, 3] + rec[3]
+        logf = -jax.nn.softplus(-gf)                     # sigmoid forget (log)
+        m_new = jnp.maximum(logf + m, gi)                # online-max stabilizer
+        i_sc = jnp.exp(gi - m_new)
+        f_sc = jnp.exp(logf + m - m_new)
+        z = jnp.tanh(gz)
+        c_new = f_sc * c + i_sc * z
+        n_new = jnp.maximum(f_sc * n + i_sc, 1e-6)
+        h_new = jax.nn.sigmoid(go) * (c_new / n_new)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    carry, hs = jax.lax.scan(step, (c0, n0, m0, h0),
+                             jnp.moveaxis(gates_x.astype(f32), 1, 0))
+    return jnp.moveaxis(hs, 0, 1), carry
+
+
+# ---------------------------------------------------------------------------
+# Blocks.
+# ---------------------------------------------------------------------------
+def mlstm_block_init(key, cfg: ModelConfig) -> dict:
+    xc: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    inner = xc.expand * d
+    hh = xc.num_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": {"scale": _ones((d,), ("embed",))},
+        "w_up": _dense_init(ks[0], (d, 2 * inner), ("embed", "inner"), dtype=dt),
+        "conv": _dense_init(ks[1], (inner, xc.conv_width), ("inner", None),
+                            scale=0.5, dtype=jnp.float32),
+        "wq": _dense_init(ks[2], (inner, inner), ("inner", None), dtype=dt),
+        "wk": _dense_init(ks[3], (inner, inner), ("inner", None), dtype=dt),
+        "wv": _dense_init(ks[4], (inner, inner), ("inner", None), dtype=dt),
+        "w_if": _dense_init(ks[5], (inner, 2 * hh), ("inner", None),
+                            dtype=jnp.float32),
+        "if_bias": _zeros((2 * hh,), (None,)),
+        "hnorm": {"scale": _ones((inner,), ("inner",))},
+        "w_down": _dense_init(ks[6], (inner, d), ("inner", "embed"), dtype=dt),
+    }
+
+
+def mlstm_block_apply(p: dict, x: Array, cfg: ModelConfig, *,
+                      cache: Optional[dict] = None):
+    xc: XLSTMConfig = cfg.xlstm
+    bsz, t, d = x.shape
+    inner = xc.expand * d
+    hh = xc.num_heads
+    dh = inner // hh
+    resid = x
+    x = rms_norm(p["norm"], x, cfg.norm_eps)
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    xcv, new_conv = causal_conv(xm, p["conv"], state=conv_state)
+    xcv = jax.nn.silu(xcv)
+    q = (xcv @ p["wq"]).reshape(bsz, t, hh, dh)
+    k = (xcv @ p["wk"]).reshape(bsz, t, hh, dh) * (dh ** -0.5)
+    v = (xm @ p["wv"]).reshape(bsz, t, hh, dh)
+    gifs = (xcv @ p["w_if"]).astype(jnp.float32) + p["if_bias"]
+    gi, gf = jnp.split(gifs, 2, axis=-1)                    # [B,T,H]
+
+    if cache is not None and t == 1:
+        h, new_state = mlstm_decode_step(
+            cache["mlstm"], q[:, 0], k[:, 0], v[:, 0], gi[:, 0], gf[:, 0])
+        h = h[:, None]
+    else:
+        init = None if cache is None else cache["mlstm"]
+        h, new_state = mlstm_chunked(q, k, v, gi, gf, chunk=xc.chunk,
+                                     init=init)
+    h = h.reshape(bsz, t, inner).astype(x.dtype)
+    h = rms_norm(p["hnorm"], h, cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    new_cache = {"mlstm": new_state, "conv": new_conv}
+    return resid + out, new_cache
+
+
+def slstm_block_init(key, cfg: ModelConfig) -> dict:
+    xc: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    hh = xc.num_heads
+    dh = d // hh
+    f_up = int(d * 4 / 3 / 64) * 64 or 64
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": {"scale": _ones((d,), ("embed",))},
+        "w_gates": _dense_init(ks[0], (d, 4, d), ("embed", None, None),
+                               dtype=jnp.float32),
+        "r_weights": _dense_init(ks[1], (4, hh, dh, dh), (None, None, None, None),
+                                 scale=1.0 / (dh ** 0.5), dtype=jnp.float32),
+        "hnorm": {"scale": _ones((d,), ("embed",))},
+        "w_up1": _dense_init(ks[2], (d, f_up), ("embed", "ffn"), dtype=dt),
+        "w_up2": _dense_init(ks[3], (d, f_up), ("embed", "ffn"), dtype=dt),
+        "w_down": _dense_init(ks[4], (f_up, d), ("ffn", "embed"), dtype=dt),
+    }
+
+
+def slstm_block_apply(p: dict, x: Array, cfg: ModelConfig, *,
+                      cache: Optional[dict] = None):
+    xc: XLSTMConfig = cfg.xlstm
+    bsz, t, d = x.shape
+    resid = x
+    xn = rms_norm(p["norm"], x, cfg.norm_eps)
+    gates_x = jnp.einsum("btd,dge->btge", xn.astype(jnp.float32),
+                         p["w_gates"])
+    init = None if cache is None else cache["slstm"]
+    h, new_state = slstm_scan(gates_x, p["r_weights"],
+                              num_heads=xc.num_heads, init=init)
+    h = rms_norm(p["hnorm"], h.astype(x.dtype), cfg.norm_eps)
+    y = (jax.nn.gelu(h @ p["w_up1"]) * (h @ p["w_up2"])) @ p["w_down"]
+    return resid + y, {"slstm": new_state}
+
+
+def xlstm_cache_init(cfg: ModelConfig, layer_idx: int, batch: int, dtype):
+    xc: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    if layer_idx % xc.slstm_every == xc.slstm_every - 1:
+        return {"slstm": (jnp.zeros((batch, d), jnp.float32),
+                          jnp.ones((batch, d), jnp.float32),
+                          jnp.zeros((batch, d), jnp.float32),
+                          jnp.zeros((batch, d), jnp.float32))}
+    inner = xc.expand * d
+    hh = xc.num_heads
+    dh = inner // hh
+    return {
+        "mlstm": (jnp.full((batch, hh), float("-inf"), jnp.float32),
+                  jnp.zeros((batch, hh, dh, dh), jnp.float32),
+                  jnp.zeros((batch, hh, dh), jnp.float32)),
+        "conv": jnp.zeros((batch, xc.conv_width - 1, inner), dtype),
+    }

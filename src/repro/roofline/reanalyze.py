@@ -1,0 +1,65 @@
+"""Recompute roofline terms from saved HLO dumps without recompiling.
+
+``python -m repro.roofline.reanalyze results/dryrun`` rereads every
+``results/dryrun/hlo/<tag>.hlo.gz`` and rewrites the flops/bytes/collective
+fields of the matching JSON record.  This is what makes the §Perf hypothesis
+loop cheap: parser/model improvements re-score all 80 cells in seconds.
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.roofline.analysis import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def reanalyze_record(rec: dict, hlo_text: str) -> dict:
+    hc = analyze_hlo(hlo_text)
+    flops, byts, coll = float(hc.flops), float(hc.bytes), float(hc.collective_bytes)
+    rec["hlo_flops_per_device"] = flops
+    rec["hlo_bytes_per_device"] = byts
+    rec["collective_bytes_per_device"] = coll
+    rec["compute_s"] = flops / PEAK_FLOPS
+    rec["memory_s"] = byts / HBM_BW
+    rec["collective_s"] = coll / LINK_BW
+    terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
+             "collective": rec["collective_s"]}
+    rec["dominant"] = max(terms, key=terms.get)
+    if flops:
+        rec["useful_flops_ratio"] = rec["model_flops"] / (flops * rec["chips"])
+    rec.setdefault("collectives", {})
+    rec["collectives"]["by_kind"] = dict(hc.collective_by_kind)
+    rec["collectives"]["counts"] = dict(hc.collective_counts)
+    rec["collectives"]["by_dtype"] = dict(hc.collective_by_dtype)
+    rec["collectives"]["bf16_adjusted"] = {
+        "memory_s": rec["memory_s"] / 2,
+        "collective_s": rec["collective_s"] / 2}
+    return rec
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    n = 0
+    for hlo in glob.glob(os.path.join(out, "hlo", "*.hlo.gz")):
+        tag = os.path.basename(hlo)[:-len(".hlo.gz")]
+        jpath = os.path.join(out, tag + ".json")
+        if not os.path.exists(jpath):
+            continue
+        rec = json.load(open(jpath))
+        if rec.get("status") != "ok":
+            continue
+        with gzip.open(hlo, "rt") as f:
+            text = f.read()
+        rec = reanalyze_record(rec, text)
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=2)
+        n += 1
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+ARCH_ORDER = [
+    "mistral-nemo-12b", "minicpm3-4b", "smollm-360m", "deepseek-coder-33b",
+    "xlstm-125m", "zamba2-1.2b", "llama4-scout-17b-a16e", "qwen2-moe-a2.7b",
+    "llava-next-34b", "whisper-small",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str) -> dict:
+    recs = {}
+    for path in glob.glob(os.path.join(results_dir, "*.json")):
+        r = json.load(open(path))
+        mesh = "multipod" if path.endswith("__multipod.json") else "pod"
+        recs[(r["arch"], r["shape"], mesh)] = r
+    return recs
+
+
+def _ms(x):
+    return f"{x * 1e3:.1f}"
+
+
+def roofline_table(recs: dict, mesh: str = "pod") -> str:
+    lines = [
+        "| arch | shape | attn | compute (ms) | memory (ms) | collective (ms) "
+        "| dominant | MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | skipped | "
+                             f"— | — | — |")
+                continue
+            dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            # roofline fraction: ideal (compute-only at peak on MODEL_FLOPS)
+            # time over the dominant-term time
+            ideal = r["model_flops"] / (r["chips"] * 197e12)
+            frac = ideal / dom if dom else 0.0
+            lines.append(
+                f"| {arch} | {shape} | {r.get('attn_mode','?')} | "
+                f"{_ms(r['compute_s'])} | {_ms(r['memory_s'])} | "
+                f"{_ms(r['collective_s'])} | **{r['dominant']}** | "
+                f"{r['model_flops']:.2e} | {r['useful_flops_ratio']:.2f} | "
+                f"{frac:.3f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs: dict, mesh: str = "pod") -> str:
+    lines = [
+        "| arch | shape | status | params | bytes/device (GiB) | "
+        "HLO GFLOPs/dev | coll bytes/dev | top collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | skipped | | | | | "
+                             f"{r['reason'][:60]} |")
+                continue
+            mem = r["memory"]["total_bytes"] / 2**30
+            by_kind = r["collectives"]["by_kind"]
+            top = ", ".join(f"{k}={v:.1e}" for k, v in
+                            sorted(by_kind.items(), key=lambda kv: -kv[1])[:3])
+            lines.append(
+                f"| {arch} | {shape} | ok | {r['n_params']/1e9:.2f}B | "
+                f"{mem:.2f} | {r['hlo_flops_per_device']/1e9:.0f} | "
+                f"{r['collective_bytes_per_device']:.2e} | {top} |")
+    return "\n".join(lines)
+
+
+def main():
+    import sys
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(d)
+    print("## Single-pod (16×16) roofline\n")
+    print(roofline_table(recs, "pod"))
+    print("\n## Multi-pod (2×16×16) dry-run\n")
+    print(dryrun_table(recs, "multipod"))
+
+
+if __name__ == "__main__":
+    main()

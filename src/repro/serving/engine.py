@@ -1,0 +1,146 @@
+"""Serving: KV-cache management, prefill, and decode with fused top-k sampling.
+
+The decode step ends in the paper's §4 scenario verbatim: a projection to the
+full vocabulary followed by TopK — served by ``core.topk_sample`` (Algorithm 4,
+single pass over the vocab, or the Pallas ``softmax_topk`` kernel on TPU).
+
+Cache layout mirrors the model's segment structure: one stacked cache pytree
+per segment (leading axis = layers in the segment).  Attention caches have a
+static ``max_len``; ``cache_len`` tracks validity (continuous batching keeps
+one shared length per batch — the standard serving simplification).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.configs.base import ModelConfig
+from repro.models import encdec, ssm, transformer
+from repro.models import xlstm as xlstm_mod
+
+Array = jax.Array
+PyTree = Any
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> list:
+    """Build the per-segment stacked cache pytree (zeros)."""
+    dt = jnp.dtype(cfg.dtype)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def attn_cache(n):
+        if cfg.kv_cache_dtype == "int8":
+            return {"attn": {
+                "k": jnp.zeros((n, batch, max_len, hkv, hd), jnp.int8),
+                "v": jnp.zeros((n, batch, max_len, hkv, hd), jnp.int8),
+                "k_scale": jnp.zeros((n, batch, max_len, hkv), jnp.bfloat16),
+                "v_scale": jnp.zeros((n, batch, max_len, hkv), jnp.bfloat16)}}
+        return {"attn": {
+            "k": jnp.zeros((n, batch, max_len, hkv, hd), dt),
+            "v": jnp.zeros((n, batch, max_len, hkv, hd), dt)}}
+
+    caches: list = []
+    layer_idx = 0
+    for kind, count in transformer.block_pattern(cfg):
+        if kind in ("dense", "moe"):
+            caches.append(attn_cache(count))
+        elif kind == "shared_attn":
+            c = attn_cache(1)
+            caches.append(jax.tree.map(lambda x: x[0], c))
+        elif kind == "mla":
+            m = cfg.mla
+            caches.append({"attn": {
+                "c_kv": jnp.zeros((count, batch, max_len, m.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((count, batch, max_len,
+                                     m.qk_rope_head_dim), dt)}})
+        elif kind == "mamba":
+            one = ssm.mamba2_cache_init(cfg, batch, dt)
+            caches.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (count,) + x.shape), one))
+        elif kind in ("mlstm", "slstm"):
+            one = xlstm_mod.xlstm_cache_init(
+                cfg, layer_idx if kind == "slstm" else layer_idx, batch, dt)
+            # pick representative layer of right kind
+            caches.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (count,) + x.shape), one))
+        else:
+            raise ValueError(kind)
+        layer_idx += count
+    return caches
+
+
+def prefill(params: PyTree, tokens: Array, cfg: ModelConfig, *,
+            max_len: int, patch_embeds: Optional[Array] = None):
+    """Run the prompt through the model, filling a fresh cache.
+
+    Returns (last_hidden [B, D], caches, cache_len scalar)."""
+    b, t = tokens.shape
+    caches = init_cache(cfg, b, max_len)
+    hidden, new_caches, _ = transformer.forward(
+        params, tokens, cfg, patch_embeds=patch_embeds, caches=caches,
+        cache_len=jnp.asarray(0, jnp.int32))
+    return hidden[:, -1], new_caches, jnp.asarray(
+        t + (cfg.num_patches if patch_embeds is not None else 0), jnp.int32)
+
+
+def decode_step(params: PyTree, caches: list, cache_len: Array,
+                tokens: Array, cfg: ModelConfig, *, rng: Array,
+                top_k: int = 5, temperature: float = 1.0):
+    """One decode step: tokens [B, 1] → (next_token [B], new caches).
+
+    The final vocab softmax+topk+sample is the fused single-pass form.
+    """
+    hidden, new_caches, _ = transformer.forward(
+        params, tokens, cfg, caches=caches, cache_len=cache_len)
+    logits = transformer.logits_last(params, hidden, cfg)
+    if cfg.real_vocab_size and cfg.real_vocab_size < cfg.vocab_size:
+        mask = jnp.arange(cfg.vocab_size) < cfg.real_vocab_size
+        logits = jnp.where(mask, logits, float("-inf"))
+    from repro.distributed import context
+    ctx = context.get()
+    if ctx is not None:
+        from repro.distributed.decode_attention import sharded_topk_sample
+        next_tok, _ = sharded_topk_sample(
+            rng, logits, top_k, mesh=ctx.mesh, batch_axes=ctx.batch_axes,
+            vocab_axis=ctx.par.model_axis, temperature=temperature)
+    else:
+        block = max(logits.shape[-1] // cfg.vocab_chunks, 1024)
+        next_tok, _ = core.topk_sample(rng, logits, top_k,
+                                       temperature=temperature,
+                                       block=min(block, logits.shape[-1]))
+    return next_tok, new_caches, cache_len + 1
+
+
+# ---------------------------------------------------------------------------
+# Encoder–decoder (whisper) serving.
+# ---------------------------------------------------------------------------
+def encdec_prefill(params: PyTree, frames: Array, bos_tokens: Array,
+                   cfg: ModelConfig, *, max_len: int):
+    """Encode audio-frame embeddings and prime the decoder cache."""
+    b = frames.shape[0]
+    enc_out = encdec.encode(params, frames, cfg)
+    dt = jnp.dtype(cfg.dtype)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    n = cfg.num_layers
+    caches = {
+        "self": {"k": jnp.zeros((n, b, max_len, hkv, hd), dt),
+                 "v": jnp.zeros((n, b, max_len, hkv, hd), dt)},
+        "cross": {"k": jnp.zeros((n, b, enc_out.shape[1], hkv, hd), dt),
+                  "v": jnp.zeros((n, b, enc_out.shape[1], hkv, hd), dt)},
+    }
+    hidden, new_caches = encdec.decode_hidden(
+        params, bos_tokens, enc_out, cfg, caches=caches,
+        cache_len=jnp.asarray(0, jnp.int32))
+    return hidden[:, -1], new_caches, jnp.asarray(bos_tokens.shape[1], jnp.int32)
+
+
+def encdec_decode_step(params: PyTree, caches: PyTree, cache_len: Array,
+                       tokens: Array, cfg: ModelConfig, *, rng: Array,
+                       top_k: int = 5):
+    hidden, new_caches = encdec.decode_hidden(
+        params, tokens, None, cfg, caches=caches, cache_len=cache_len)
+    logits = transformer.logits_last(params, hidden, cfg)
+    next_tok, _ = core.topk_sample(rng, logits, top_k)
+    return next_tok, new_caches, cache_len + 1

@@ -1,0 +1,93 @@
+"""Train-step builder: loss → grads → (compressed) reduce → AdamW, under pjit.
+
+Microbatch gradient accumulation is a ``lax.scan`` whose per-microbatch
+data-parallel reduction XLA can overlap with the next microbatch's backward
+(latency-hiding scheduler) — the accumulate-then-step structure is what makes
+that overlap legal.  Gradients are cast to ``grad_reduce_dtype`` (default
+bf16) at the autodiff boundary so the cross-replica all-reduce moves half the
+bytes (verified in the dry-run HLO, §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.distributed import compression, sharding
+from repro.models import encdec, layers as L, transformer
+from repro.optim import adamw
+
+PyTree = Any
+
+
+def loss_for(cfg) -> Callable:
+    return encdec.loss_fn if cfg.family == "encdec" else transformer.loss_fn
+
+
+def make_train_step(run: RunConfig) -> Callable:
+    """Pure (params, opt_state, batch) → (params, opt_state, metrics)."""
+    cfg = run.model
+    loss_fn = loss_for(cfg)
+    n_micro = run.parallel.microbatches
+
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(
+            lambda p, b: loss_fn(p, b, cfg), has_aux=True)
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, b_i):
+                (l, m), g = grad_fn(params, b_i)
+                g = compression.cast_grads(g, run.parallel.grad_reduce_dtype)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, ms) = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(jnp.mean, ms)
+        grads = compression.cast_grads(grads, run.parallel.grad_reduce_dtype)
+        params, opt_state, om = adamw.update(grads, opt_state, params,
+                                             run.optimizer)
+        return params, opt_state, {**metrics, **om, "loss_out": loss}
+
+    return train_step
+
+
+def init_state(run: RunConfig, rng) -> tuple[PyTree, PyTree, PyTree]:
+    """Returns (params, opt_state, axes_tree)."""
+    cfg = run.model
+    init_fn = encdec.init if cfg.family == "encdec" else transformer.init
+    boxed = init_fn(rng, cfg)
+    params, axes = L.split_params(boxed)
+    opt_state = adamw.init(params)
+    return params, opt_state, axes
+
+
+def jit_train_step(run: RunConfig, mesh: Mesh, axes: PyTree):
+    """jit with explicit in/out shardings for the production mesh."""
+    cfg = run.model
+    par = sharding.derive_parallel(cfg, mesh, run.parallel)
+    p_sh = sharding.param_sharding(axes, cfg, par, mesh)
+    opt_sh = adamw.AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=p_sh, nu=p_sh)
+    bspec = NamedSharding(mesh, P(par.data_axes, None))
+    step = make_train_step(run)
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, opt_sh, None),
+        out_shardings=(p_sh, opt_sh, None),
+        donate_argnums=(0, 1),
+    ), p_sh, opt_sh

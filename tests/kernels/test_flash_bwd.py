@@ -1,0 +1,56 @@
+"""Pallas flash-attention BACKWARD kernels vs the jnp oracle's autodiff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _x(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("B,T,Hq,Hkv,Dh,bq,bk", [
+    (2, 64, 4, 4, 32, 16, 16),     # MHA
+    (1, 64, 8, 2, 32, 32, 16),     # GQA (dk/dv group reduction)
+    (2, 96, 4, 1, 16, 32, 32),     # MQA, non-pow2 seq
+])
+def test_flash_bwd_matches_reference(B, T, Hq, Hkv, Dh, bq, bk, causal):
+    q = _x((B, T, Hq, Dh), 0)
+    k = _x((B, T, Hkv, Dh), 1)
+    v = _x((B, T, Hkv, Dh), 2)
+    w = _x((B, T, Hq, Dh), 3)
+
+    def f_kernel(q, k, v):
+        return (ops.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+                * w).sum()
+
+    def f_ref(q, k, v):
+        return (ref.attention_ref(q, k, v, causal=causal) * w).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g1, g2, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=2e-5,
+                                   err_msg=f"d{name} mismatch")
+
+
+def test_flash_bwd_in_training_step():
+    """The kernel path trains: one grad step through a 2-layer toy model."""
+    import repro.configs as configs
+    from repro.models import layers as L, transformer
+    cfg = configs.get_smoke("mistral_nemo_12b").replace(
+        use_pallas=True, attn_chunk=32)
+    params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                                          cfg.vocab_size)}
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: transformer.loss_fn(p, batch, cfg), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()

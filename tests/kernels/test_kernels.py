@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.online_softmax import (
+    online_normalizer_pallas,
+    online_softmax_pallas,
+)
+from repro.kernels.softmax_topk import softmax_topk_pallas
+
+
+def _x(shape, dtype, scale=8.0, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+SOFTMAX_CASES = [
+    # (rows, vocab, r_blk, v_blk)
+    (8, 128, 8, 128),
+    (16, 1024, 4, 256),
+    (32, 2048, 32, 512),
+    (64, 1000, 16, 250),      # non-power-of-2 vocab
+    (1, 4096, 1, 1024),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("r,v,rb,vb", SOFTMAX_CASES)
+def test_online_softmax_kernel(r, v, rb, vb, dtype):
+    x = _x((r, v), dtype)
+    y = online_softmax_pallas(x, r_blk=rb, v_blk=vb, interpret=True)
+    expect = ref.softmax_ref(x)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("r,v,rb,vb", SOFTMAX_CASES[:3])
+def test_online_normalizer_kernel(r, v, rb, vb):
+    x = _x((r, v), jnp.float32)
+    m, d = online_normalizer_pallas(x, r_blk=rb, v_blk=vb, interpret=True)
+    mr, dr = ref.normalizer_ref(x)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), rtol=1e-5)
+
+
+@pytest.mark.parametrize("k", [1, 5, 16])
+@pytest.mark.parametrize("r,v,rb,vb", SOFTMAX_CASES[:4])
+def test_softmax_topk_kernel(r, v, rb, vb, k):
+    x = _x((r, v), jnp.float32, seed=3)
+    vals, idx, lse = softmax_topk_pallas(x, k, r_blk=rb, v_blk=vb,
+                                         interpret=True)
+    vr, ir, lr = ref.softmax_topk_ref(x, k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vr),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lr), rtol=1e-5)
+
+
+def test_softmax_topk_kernel_ties_break_low_index():
+    x = jnp.zeros((4, 256))            # all equal: indices must be 0..k-1
+    _, idx, _ = softmax_topk_pallas(x, 4, r_blk=4, v_blk=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.tile(np.arange(4), (4, 1)))
+
+
+ATTN_CASES = [
+    # (B, Tq, Tk, Hq, Hkv, Dh, bq, bk)
+    (1, 64, 64, 4, 4, 32, 16, 16),     # MHA
+    (2, 64, 64, 8, 2, 32, 32, 16),     # GQA
+    (2, 128, 128, 4, 1, 64, 32, 64),   # MQA
+    (1, 96, 96, 2, 2, 16, 32, 32),     # non-pow2 seq
+]
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("B,Tq,Tk,Hq,Hkv,Dh,bq,bk", ATTN_CASES)
+def test_flash_attention_kernel(B, Tq, Tk, Hq, Hkv, Dh, bq, bk, causal):
+    q = _x((B, Hq, Tq, Dh), jnp.float32, 1.0, 1)
+    k = _x((B, Hkv, Tk, Dh), jnp.float32, 1.0, 2)
+    v = _x((B, Hkv, Tk, Dh), jnp.float32, 1.0, 3)
+    out, lse = flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                                      interpret=True)
+    qm = jnp.swapaxes(q, 1, 2)
+    km = jnp.swapaxes(k, 1, 2)
+    vm = jnp.swapaxes(v, 1, 2)
+    expect = ref.attention_ref(qm, km, vm, causal=causal)
+    np.testing.assert_allclose(np.asarray(jnp.swapaxes(out, 1, 2)),
+                               np.asarray(expect), rtol=2e-5, atol=2e-5)
+    assert np.isfinite(np.asarray(lse)).all()
+
+
+def test_flash_attention_grads_vs_reference():
+    B, T, Hq, Hkv, Dh = 2, 64, 4, 2, 16
+    q = _x((B, T, Hq, Dh), jnp.float32, 1.0, 4)
+    k = _x((B, T, Hkv, Dh), jnp.float32, 1.0, 5)
+    v = _x((B, T, Hkv, Dh), jnp.float32, 1.0, 6)
+    f1 = lambda q, k, v: (ops.flash_attention(q, k, v, causal=True,
+                                              bq=16, bk=16) ** 2).mean()
+    f2 = lambda q, k, v: (ref.attention_ref(q, k, v, causal=True) ** 2).mean()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("S,bk", [(128, 32), (256, 64), (64, 64)])
+@pytest.mark.parametrize("Hq,Hkv", [(8, 2), (4, 4), (4, 1)])
+def test_flash_decode_kernel(S, bk, Hq, Hkv):
+    B, Dh = 3, 32
+    q = _x((B, Hq, Dh), jnp.float32, 1.0, 7)
+    kc = _x((B, Hkv, S, Dh), jnp.float32, 1.0, 8)
+    vc = _x((B, Hkv, S, Dh), jnp.float32, 1.0, 9)
+    vlen = jnp.array([S, S // 2, 1], jnp.int32)
+    out = flash_decode_pallas(q, kc, vc, vlen, bk=bk, interpret=True)
+    expect = ref.decode_attention_ref(q, jnp.swapaxes(kc, 1, 2),
+                                      jnp.swapaxes(vc, 1, 2), vlen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ops_wrappers_batch_shapes():
+    x = _x((2, 3, 512), jnp.float32)
+    y = ops.online_softmax(x, r_blk=2, v_blk=128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref.softmax_ref(x)),
+                               rtol=2e-5, atol=1e-7)
+    vals, idx, lse = ops.softmax_topk(x, 3, r_blk=2, v_blk=128)
+    assert vals.shape == (2, 3, 3) and idx.shape == (2, 3, 3)

@@ -1,0 +1,148 @@
+"""Chunked online attention + chunked cross-entropy vs dense references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+
+
+def _rand(shape, seed, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("causal", [False, True])
+    @pytest.mark.parametrize("chunk", [7, 16, 64])
+    @pytest.mark.parametrize("Hq,Hkv", [(8, 2), (4, 4), (6, 1)])
+    def test_matches_naive(self, causal, chunk, Hq, Hkv):
+        B, Tq, Tk, Dh = 2, 24, 64, 16
+        q = _rand((B, Tq, Hq, Dh), 0)
+        k = _rand((B, Tk, Hkv, Dh), 1)
+        v = _rand((B, Tk, Hkv, Dh), 2)
+        o1 = core.online_attention(q, k, v, causal=causal, q_offset=Tk - Tq,
+                                   chunk_size=chunk)
+        o2 = core.naive_attention(q, k, v, causal=causal, q_offset=Tk - Tq)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_valid_len_masking(self):
+        B, T, H, Dh = 3, 32, 2, 8
+        q = _rand((B, 1, H, Dh), 3)
+        k = _rand((B, T, H, Dh), 4)
+        v = _rand((B, T, H, Dh), 5)
+        vlen = jnp.array([32, 7, 1])
+        o1 = core.online_attention(q, k, v, kv_valid_len=vlen, chunk_size=8)
+        o2 = core.naive_attention(q, k, v, kv_valid_len=vlen)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_different_v_dim(self):
+        """MLA path: value dim != qk dim."""
+        B, T, H = 2, 32, 1
+        q = _rand((B, 4, H, 24), 6)
+        k = _rand((B, T, H, 24), 7)
+        v = _rand((B, T, H, 16), 8)
+        o1 = core.online_attention(q, k, v, causal=False, chunk_size=8)
+        o2 = core.naive_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_grads_match_naive(self):
+        B, T, Hq, Hkv, Dh = 2, 32, 4, 2, 8
+        q = _rand((B, T, Hq, Dh), 9)
+        k = _rand((B, T, Hkv, Dh), 10)
+        v = _rand((B, T, Hkv, Dh), 11)
+        w = _rand((B, T, Hq, Dh), 12)
+        f1 = lambda q, k, v: (core.online_attention(
+            q, k, v, causal=True, chunk_size=8) * w).sum()
+        f2 = lambda q, k, v: (core.naive_attention(
+            q, k, v, causal=True) * w).sum()
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-4, atol=1e-5)
+
+    def test_non_divisible_chunk_padding(self):
+        B, T, H, Dh = 1, 50, 2, 8      # 50 % 16 != 0
+        q = _rand((B, T, H, Dh), 13)
+        k = _rand((B, T, H, Dh), 14)
+        v = _rand((B, T, H, Dh), 15)
+        o1 = core.online_attention(q, k, v, causal=True, chunk_size=16)
+        o2 = core.naive_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestChunkedCrossEntropy:
+    @pytest.mark.parametrize("chunks", [1, 4, 16])
+    def test_matches_full(self, chunks):
+        T, D, V = 48, 16, 256
+        h = _rand((T, D), 0)
+        w = _rand((D, V), 1, 0.2)
+        labels = jax.random.randint(jax.random.PRNGKey(2), (T,), 0, V)
+        l1 = core.chunked_cross_entropy(h, w, labels, num_chunks=chunks)
+        l2 = core.full_cross_entropy(h, w, labels)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_grads_match_full(self):
+        T, D, V = 32, 8, 128
+        h = _rand((T, D), 3)
+        w = _rand((D, V), 4, 0.2)
+        labels = jax.random.randint(jax.random.PRNGKey(5), (T,), 0, V)
+        g1 = jax.grad(lambda h, w: core.chunked_cross_entropy(
+            h, w, labels, num_chunks=8).mean(), argnums=(0, 1))(h, w)
+        g2 = jax.grad(lambda h, w: core.full_cross_entropy(
+            h, w, labels).mean(), argnums=(0, 1))(h, w)
+        np.testing.assert_allclose(np.asarray(g1[0]), np.asarray(g2[0]),
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(g1[1]), np.asarray(g2[1]),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_z_loss(self):
+        T, D, V = 16, 8, 64
+        h = _rand((T, D), 6)
+        w = _rand((D, V), 7, 0.2)
+        labels = jax.random.randint(jax.random.PRNGKey(8), (T,), 0, V)
+        l0 = core.chunked_cross_entropy(h, w, labels, num_chunks=4)
+        l1 = core.chunked_cross_entropy(h, w, labels, num_chunks=4,
+                                        z_loss=1e-2)
+        lse = jax.scipy.special.logsumexp(h @ w, axis=-1)
+        np.testing.assert_allclose(np.asarray(l1 - l0),
+                                   1e-2 * np.asarray(lse) ** 2,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_big_logits_no_overflow(self):
+        T, D, V = 8, 4, 64
+        h = _rand((T, D), 9, 30.0)     # logits up to ~1000s
+        w = _rand((D, V), 10, 1.0)
+        labels = jnp.zeros((T,), jnp.int32)
+        l1 = core.chunked_cross_entropy(h, w, labels, num_chunks=4)
+        assert np.isfinite(np.asarray(l1)).all()
+
+
+class TestTopkFusion:
+    @pytest.mark.parametrize("k", [1, 5, 17])
+    @pytest.mark.parametrize("block", [None, 64, 100])
+    def test_matches_unfused(self, k, block):
+        x = _rand((4, 400), 0, 6.0)
+        fused = core.softmax_topk(x, k, block=block)
+        unfused = core.safe_softmax_then_topk(x, k)
+        np.testing.assert_allclose(np.asarray(fused.values),
+                                   np.asarray(unfused.values),
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_array_equal(np.asarray(fused.indices),
+                                      np.asarray(unfused.indices))
+
+    def test_sampling_distribution(self):
+        """topk_sample draws ∝ renormalized top-k probabilities."""
+        logits = jnp.log(jnp.array([[0.5, 0.3, 0.1, 0.06, 0.04]])) * 1.0
+        logits = jnp.tile(logits, (4096, 1))
+        rng = jax.random.PRNGKey(0)
+        toks, _ = core.topk_sample(rng, logits, 3)
+        freq = np.bincount(np.asarray(toks), minlength=5) / toks.shape[0]
+        expect = np.array([0.5, 0.3, 0.1, 0, 0]) / 0.9
+        np.testing.assert_allclose(freq[:3], expect[:3], atol=0.03)
+        assert freq[3] == freq[4] == 0

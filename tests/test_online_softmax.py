@@ -1,0 +1,142 @@
+"""Core online-softmax properties — unit + hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro import core
+
+jax.config.update("jax_enable_x64", False)
+
+FINITE = dict(allow_nan=False, allow_infinity=False, min_value=-60,
+              max_value=60, allow_subnormal=False)  # XLA flushes denormals
+
+
+def arrays(min_len=1, max_len=257):
+    return hnp.arrays(np.float32, st.integers(min_len, max_len),
+                      elements=st.floats(width=32, **FINITE))
+
+
+class TestAlgorithmEquivalence:
+    """Algorithm 3 == Algorithm 2 == Algorithm 1 (where safe)."""
+
+    @settings(deadline=None, max_examples=25)
+    @given(arrays())
+    def test_online_equals_safe(self, x):
+        y1 = np.asarray(core.online_softmax(x))
+        y2 = np.asarray(core.safe_softmax(x))
+        np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-7)
+
+    @settings(deadline=None, max_examples=20)
+    @given(arrays(max_len=129))
+    def test_scan_form_equals_parallel_form(self, x):
+        m1, d1 = core.online_normalizer_scan(x)
+        m2, d2 = core.online_normalizer(x)
+        np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_naive_overflows_where_online_does_not(self):
+        x = jnp.array([500.0, 1.0, 2.0])
+        assert not np.isfinite(np.asarray(core.naive_softmax(x))).all()
+        y = np.asarray(core.online_softmax(x))
+        assert np.isfinite(y).all() and abs(y.sum() - 1) < 1e-5
+
+
+class TestCombineOperator:
+    """Eq. (4): ⊕ is associative, commutative, with identity (-inf, 0)."""
+
+    @settings(deadline=None, max_examples=25)
+    @given(st.lists(st.tuples(st.floats(width=32, **FINITE),
+                              st.floats(width=32, min_value=0, max_value=1e6,
+                                        allow_nan=False)),
+                    min_size=3, max_size=3))
+    def test_associative(self, mds):
+        a, b, c = [(jnp.float32(m), jnp.float32(d)) for m, d in mds]
+        left = core.combine(core.combine(a, b), c)
+        right = core.combine(a, core.combine(b, c))
+        np.testing.assert_allclose(left[0], right[0], rtol=1e-6)
+        np.testing.assert_allclose(left[1], right[1], rtol=1e-5, atol=1e-6)
+
+    @settings(deadline=None, max_examples=25)
+    @given(st.tuples(st.floats(width=32, **FINITE),
+                     st.floats(width=32, min_value=0, max_value=1e6,
+                               allow_nan=False)),
+           st.tuples(st.floats(width=32, **FINITE),
+                     st.floats(width=32, min_value=0, max_value=1e6,
+                               allow_nan=False)))
+    def test_commutative(self, a, b):
+        a = (jnp.float32(a[0]), jnp.float32(a[1]))
+        b = (jnp.float32(b[0]), jnp.float32(b[1]))
+        ab, ba = core.combine(a, b), core.combine(b, a)
+        np.testing.assert_allclose(ab[0], ba[0])
+        np.testing.assert_allclose(ab[1], ba[1], rtol=1e-6)
+
+    @settings(deadline=None, max_examples=15)
+    @given(st.floats(width=32, **FINITE),
+           st.floats(width=32, min_value=0, max_value=1e6,
+                     allow_nan=False, allow_subnormal=False))
+    def test_identity(self, m, d):
+        ident = core.identity_like(())
+        out = core.combine(ident, (jnp.float32(m), jnp.float32(d)))
+        np.testing.assert_allclose(out[0], m, rtol=1e-6)
+        np.testing.assert_allclose(out[1], d, rtol=1e-6)
+
+    @settings(deadline=None, max_examples=15)
+    @given(arrays(min_len=8, max_len=200), st.integers(1, 64))
+    def test_blocked_reduction_any_block(self, x, block):
+        """§3.1: any ⊕ tree gives the same (m, d)."""
+        m1, d1 = core.online_normalizer(x)
+        m2, d2 = core.online_normalizer_blocked(x, block=block)
+        np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                                   rtol=1e-4, atol=1e-6)
+
+
+class TestPaperInvariants:
+    """The paper's §3 safety guarantees."""
+
+    @settings(deadline=None, max_examples=25)
+    @given(arrays())
+    def test_d_bounds(self, x):
+        """1 ≤ d_V ≤ V (paper: overflow-safe for V up to 1.7e37)."""
+        _, d = core.online_normalizer(x)
+        v = x.shape[-1]
+        assert float(d) >= 1.0 - 1e-5
+        assert float(d) <= v * (1 + 1e-5)
+
+    @settings(deadline=None, max_examples=25)
+    @given(arrays(), st.floats(min_value=-30, max_value=30, width=32,
+                               allow_nan=False))
+    def test_shift_invariance(self, x, c):
+        y1 = np.asarray(core.online_softmax(x))
+        y2 = np.asarray(core.online_softmax(x + np.float32(c)))
+        np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-6)
+
+    @settings(deadline=None, max_examples=25)
+    @given(arrays())
+    def test_normalization(self, x):
+        y = np.asarray(core.online_softmax(x))
+        np.testing.assert_allclose(y.sum(), 1.0, rtol=1e-4)
+        assert (y >= 0).all()
+
+    def test_masked_rows_are_zero_not_nan(self):
+        x = jnp.ones((2, 8))
+        where = jnp.zeros((2, 8), bool).at[0].set(True)
+        y = np.asarray(core.online_softmax(x, where=where))
+        assert np.isfinite(y).all()
+        np.testing.assert_allclose(y[1], 0.0)
+        np.testing.assert_allclose(y[0].sum(), 1.0, rtol=1e-5)
+
+
+class TestLogsumexp:
+    def test_matches_scipy_style(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 333)) * 20
+        lse = core.online_logsumexp(x)
+        ref = jax.scipy.special.logsumexp(x, axis=-1)
+        np.testing.assert_allclose(np.asarray(lse), np.asarray(ref),
+                                   rtol=1e-6)

@@ -1,0 +1,145 @@
+"""Optimizer, data pipeline, compression, and checkpoint substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import OptimizerConfig
+from repro.data.synthetic import SyntheticConfig, SyntheticDataset
+from repro.distributed import compression
+from repro.optim import adamw
+
+
+class TestAdamW:
+    def test_matches_numpy_reference(self):
+        cfg = OptimizerConfig(lr=1e-2, beta1=0.9, beta2=0.99, eps=1e-8,
+                              weight_decay=0.0, grad_clip=0.0,
+                              warmup_steps=0, total_steps=100,
+                              schedule="constant")
+        p = {"w": jnp.array([[1.0, -2.0], [0.5, 3.0]])}
+        g = {"w": jnp.array([[0.1, -0.2], [0.3, 0.4]])}
+        state = adamw.init(p)
+        p1, state, _ = adamw.update(g, state, p, cfg)
+        # numpy reference (bias-corrected adam)
+        m = 0.1 * np.asarray(g["w"])
+        v = 0.01 * np.asarray(g["w"]) ** 2
+        mhat = m / (1 - 0.9)
+        vhat = v / (1 - 0.99)
+        expect = np.asarray(p["w"]) - 1e-2 * mhat / (np.sqrt(vhat) + 1e-8)
+        np.testing.assert_allclose(np.asarray(p1["w"]), expect, rtol=1e-6)
+
+    def test_weight_decay_only_on_matrices(self):
+        cfg = OptimizerConfig(lr=1e-2, weight_decay=0.1, grad_clip=0.0,
+                              warmup_steps=0, schedule="constant")
+        p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+        state = adamw.init(p)
+        p1, _, _ = adamw.update(g, state, p, cfg)
+        assert (np.asarray(p1["w"]) < 1.0).all()      # decayed
+        np.testing.assert_allclose(np.asarray(p1["b"]), 1.0)  # not decayed
+
+    def test_grad_clipping(self):
+        g = {"w": jnp.full((10,), 100.0)}
+        clipped, gnorm = adamw.clip_by_global_norm(g, 1.0)
+        np.testing.assert_allclose(float(adamw.global_norm(clipped)), 1.0,
+                                   rtol=1e-5)
+
+    def test_schedule_shapes(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                              schedule="cosine")
+        lrs = [float(adamw.schedule(jnp.asarray(s), cfg))
+               for s in (0, 5, 10, 60, 110)]
+        assert lrs[0] == 0.0
+        assert abs(lrs[1] - 0.5) < 1e-6          # mid-warmup
+        assert abs(lrs[2] - 1.0) < 1e-6          # warmup done
+        assert 0 < lrs[3] < 1.0                  # decaying
+        assert lrs[4] < 1e-6                     # fully decayed
+
+
+class TestSyntheticData:
+    def test_deterministic_per_step(self):
+        ds = SyntheticDataset(SyntheticConfig(vocab_size=1000, seq_len=32,
+                                              global_batch=4, seed=7))
+        b1, b2 = ds.batch(13), ds.batch(13)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = ds.batch(14)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_labels_are_next_tokens(self):
+        ds = SyntheticDataset(SyntheticConfig(vocab_size=100, seq_len=16,
+                                              global_batch=2))
+        b = ds.batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_host_sharding_partitions_batch(self):
+        from repro.data.synthetic import HostShardedLoader
+        ds = SyntheticDataset(SyntheticConfig(vocab_size=100, seq_len=8,
+                                              global_batch=8))
+        full = ds.batch(3)
+        parts = [HostShardedLoader(ds, host_id=i, num_hosts=4).local_batch(3)
+                 for i in range(4)]
+        got = np.concatenate([p["tokens"] for p in parts])
+        np.testing.assert_array_equal(got, full["tokens"])
+
+
+class TestCompression:
+    def test_error_feedback_reduces_bias(self):
+        """With EF, the accumulated quantization error stays bounded and the
+        mean dequantized signal converges to the mean true signal."""
+        rng = np.random.default_rng(0)
+        g_true = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+        errors = {"g": jnp.zeros((256,))}
+        acc_deq = np.zeros((256,))
+        n = 50
+        for _ in range(n):
+            deq, errors = compression.ef_roundtrip({"g": g_true}, errors)
+            acc_deq += np.asarray(deq["g"])
+        np.testing.assert_allclose(acc_deq / n, np.asarray(g_true),
+                                   atol=2e-2)
+
+    def test_quantize_roundtrip_error_bounded(self):
+        x = jnp.linspace(-3, 3, 1000)
+        q, s = compression._quantize(x)
+        err = np.abs(np.asarray(compression._dequantize(q, s) - x))
+        assert err.max() <= float(s) / 2 + 1e-7
+
+    def test_cast_grads(self):
+        g = {"a": jnp.ones((4,), jnp.float32)}
+        out = compression.cast_grads(g, "bfloat16")
+        assert out["a"].dtype == jnp.bfloat16
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_retention(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+        for step in (10, 20, 30):
+            mgr.save(step, tree, blocking=True)
+        assert mgr.committed_steps() == [20, 30]       # retention keep=2
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            tree)
+        restored = mgr.restore(30, like)
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        tree = {"w": jnp.ones((128, 128))}
+        mgr.save(1, tree, blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_uncommitted_checkpoints_ignored(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        tree = {"w": jnp.ones((4,))}
+        mgr.save(5, tree, blocking=True)
+        # simulate a torn write: directory without COMMITTED marker
+        os.makedirs(tmp_path / "step_9")
+        with open(tmp_path / "step_9" / "arrays.npz", "wb") as f:
+            f.write(b"garbage")
+        assert mgr.latest_step() == 5
