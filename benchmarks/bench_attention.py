@@ -15,11 +15,12 @@ CASES = [
     (2, 2048, 8, 2, 64, 512),
     (1, 4096, 4, 1, 64, 512),
 ]
+SMOKE_CASES = [(1, 256, 4, 2, 32, 64)]
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows = []
-    for b, t, hq, hkv, dh, chunk in CASES:
+    for b, t, hq, hkv, dh, chunk in (SMOKE_CASES if smoke else CASES):
         ks = jax.random.split(jax.random.PRNGKey(3), 3)
         q = jax.random.normal(ks[0], (b, t, hq, dh), jnp.float32)
         k = jax.random.normal(ks[1], (b, t, hkv, dh), jnp.float32)

@@ -15,11 +15,12 @@ CASES = [
     (2048, 512, 65536, 16),
     (8192, 256, 65536, 16),
 ]
+SMOKE_CASES = [(256, 128, 4096, 8)]
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows = []
-    for t, d, v, chunks in CASES:
+    for t, d, v, chunks in (SMOKE_CASES if smoke else CASES):
         ks = jax.random.split(jax.random.PRNGKey(4), 3)
         h = jax.random.normal(ks[0], (t, d), jnp.float32)
         w = jax.random.normal(ks[1], (d, v), jnp.float32) * 0.02

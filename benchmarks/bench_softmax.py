@@ -18,6 +18,8 @@ from repro.core import ACCESSES_PER_ELEMENT, naive_softmax, online_softmax, safe
 
 V_SWEEP = (256, 1024, 4096, 16384, 65536)
 BATCHES = {"large": 512, "small": 10}
+SMOKE_V_SWEEP = (256, 1024)
+SMOKE_BATCHES = {"large": 32, "small": 4}
 
 ALGOS = {
     "naive": naive_softmax,
@@ -26,10 +28,10 @@ ALGOS = {
 }
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows = []
-    for regime, b in BATCHES.items():
-        for v in V_SWEEP:
+    for regime, b in (SMOKE_BATCHES if smoke else BATCHES).items():
+        for v in (SMOKE_V_SWEEP if smoke else V_SWEEP):
             x = jax.random.normal(jax.random.PRNGKey(0), (b, v), jnp.float32)
             base_us = None
             for name, fn in ALGOS.items():

@@ -12,6 +12,8 @@ from repro.core.topk_fusion import safe_softmax_then_topk
 
 V_SWEEP = (1024, 4096, 16384, 65536)
 BATCHES = {"large": 512, "small": 10}
+SMOKE_V_SWEEP = (1024,)
+SMOKE_BATCHES = {"small": 8}
 K = 5
 
 
@@ -38,10 +40,10 @@ ACCESS = {"safe_unfused": 5, "safe_fused": 2, "online_fused": 1,
           "online_fused_blocked": 1}
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows = []
-    for regime, b in BATCHES.items():
-        for v in V_SWEEP:
+    for regime, b in (SMOKE_BATCHES if smoke else BATCHES).items():
+        for v in (SMOKE_V_SWEEP if smoke else V_SWEEP):
             x = jax.random.normal(jax.random.PRNGKey(1), (b, v), jnp.float32)
             base = None
             for name, fn in VARIANTS.items():

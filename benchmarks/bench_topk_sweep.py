@@ -11,12 +11,14 @@ from repro.core.topk_fusion import safe_softmax_then_topk
 
 V, B = 16384, 256
 KS = (5, 10, 15, 30, 64)
+SMOKE_V, SMOKE_B, SMOKE_KS = 2048, 16, (5,)
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows = []
-    x = jax.random.normal(jax.random.PRNGKey(2), (B, V), jnp.float32)
-    for k in KS:
+    v, b = (SMOKE_V, SMOKE_B) if smoke else (V, B)
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, v), jnp.float32)
+    for k in (SMOKE_KS if smoke else KS):
         unfused = time_fn(jax.jit(lambda x, k=k:
                                   safe_softmax_then_topk(x, k)[:2]), x)
         fused = time_fn(jax.jit(lambda x, k=k: softmax_topk(x, k)[:2]), x)

@@ -6,13 +6,26 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_topk_sweep     → paper §5.2 (K degradation)
   bench_attention      → beyond-paper (online attention)
   bench_chunked_ce     → beyond-paper (§7 fusion at the LM head)
+
+``--smoke`` shrinks every sweep to a seconds-long sanity pass (tiny V/batch,
+one case per module) — the tier-1 suite runs it so the harness itself can't
+rot between full benchmark runs.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 
+# runnable as `python benchmarks/run.py` from anywhere: put the repo root
+# (for `benchmarks.*`) and src (for `repro.*`) on the path
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-def main() -> None:
+
+def main(argv=None) -> int:
     from benchmarks import (
         bench_attention,
         bench_chunked_ce,
@@ -29,12 +42,22 @@ def main() -> None:
         "attention": bench_attention,
         "chunked_ce": bench_chunked_ce,
     }
-    selected = sys.argv[1:] or list(mods)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("benches", nargs="*", metavar="bench",
+                    help=f"subset to run (default: all): {', '.join(mods)}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, one case per module (CI sanity pass)")
+    args = ap.parse_args(argv)
+    unknown = [b for b in args.benches if b not in mods]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; choose from {list(mods)}")
+
     rows = []
-    for name in selected:
-        rows.extend(mods[name].run())
+    for name in args.benches or list(mods):
+        rows.extend(mods[name].run(smoke=args.smoke))
     emit(rows)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

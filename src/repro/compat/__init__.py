@@ -1,0 +1,31 @@
+"""Version-portability layer: every version-sensitive JAX surface, one import.
+
+The seed suite broke at the JAX API boundary three different ways (missing
+``jax.shard_map`` export, ``cost_analysis()`` list-vs-dict, the
+``check_vma``/``check_rep`` kwarg rename) while the paper's math passed
+untouched.  The policy that prevents a recurrence:
+
+* **No module outside ``repro.compat`` imports ``shard_map``, calls
+  ``cost_analysis()`` / ``make_mesh`` raw, or decides Pallas interpret mode
+  itself.**  Grep-enforced by ``tests/test_compat.py``.
+* Probes are attribute/signature/behavior based, never version-string
+  comparisons — backports and vendored builds lie about versions.
+* ``capabilities()`` snapshots the probe results once per process; the kernel
+  dispatch registry (``repro.kernels.dispatch``), the dry-run env record, and
+  the test env report all read that one snapshot.
+"""
+from repro.compat.capabilities import Capabilities, capabilities
+from repro.compat.meshes import make_mesh
+from repro.compat.pallas import backend, pallas_interpret, pallas_native
+from repro.compat.shmap import SHARD_MAP_SOURCE, shard_map
+from repro.compat.versions import has_api, jax_version, jax_version_str
+from repro.compat.xla import cost_analysis, memory_analysis
+
+__all__ = [
+    "Capabilities", "capabilities",
+    "make_mesh",
+    "backend", "pallas_interpret", "pallas_native",
+    "SHARD_MAP_SOURCE", "shard_map",
+    "has_api", "jax_version", "jax_version_str",
+    "cost_analysis", "memory_analysis",
+]

@@ -1,0 +1,24 @@
+"""Mesh construction across JAX versions.
+
+``jax.make_mesh`` appeared in 0.4.34; older versions build a ``Mesh`` from
+``mesh_utils.create_device_mesh``.  One entry point, probe-based.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes: tuple, axis_names: tuple, *, devices=None):
+    """Version-portable ``jax.make_mesh(axis_shapes, axis_names)``."""
+    mk = getattr(jax, "make_mesh", None)
+    if mk is not None:
+        try:
+            return mk(axis_shapes, axis_names, devices=devices)
+        except TypeError:                   # older signature without devices=
+            if devices is None:
+                return mk(axis_shapes, axis_names)
+            raise
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+    dev = mesh_utils.create_device_mesh(axis_shapes, devices=devices)
+    return Mesh(dev, axis_names)

@@ -1,0 +1,47 @@
+"""Pallas execution-mode detection.
+
+Pallas kernels lower natively only on TPU/GPU Mosaic/Triton targets; on the
+CPU backend ``interpret=True`` runs the kernel body faithfully (correctness
+tests) while production paths fall back to the XLA implementations.  This is
+the single place the repo decides interpret-vs-compiled — kernels take it as
+an explicit parameter, everything above them asks here.
+
+``REPRO_PALLAS_INTERPRET=0|1`` overrides the probe (e.g. forcing interpret on
+a TPU host to debug a kernel, or asserting compiled mode in CI).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ENV = "REPRO_PALLAS_INTERPRET"
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+# Backends whose Pallas lowering is native (Mosaic).  The CPU backend only
+# interprets; GPU lowering (Triton) exists upstream but is not exercised by
+# this repo's kernels, so it stays conservative until a later PR validates it.
+_NATIVE_BACKENDS = ("tpu",)
+
+
+def backend() -> str:
+    return jax.default_backend()
+
+
+def pallas_native() -> bool:
+    """True when Pallas kernels compile to the current default backend."""
+    return backend() in _NATIVE_BACKENDS
+
+
+def pallas_interpret() -> bool:
+    """Whether Pallas calls should run in interpret mode on this backend."""
+    env = os.environ.get(_ENV)
+    if env is not None:
+        if env.lower() in _TRUTHY:
+            return True
+        if env.lower() in _FALSY:
+            return False
+        raise ValueError(f"{_ENV}={env!r}: expected one of "
+                         f"{_TRUTHY + _FALSY}")
+    return not pallas_native()

@@ -1,0 +1,36 @@
+"""JAX version parsing and feature probing.
+
+Everything here is import-time cheap (no device state is touched): probing is
+done by attribute/signature inspection, never by compiling anything.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def jax_version_str() -> str:
+    return jax.__version__
+
+
+def jax_version() -> tuple[int, ...]:
+    """``jax.__version__`` as a comparable int tuple (dev/rc suffixes dropped)."""
+    parts = []
+    for p in jax.__version__.split("."):
+        digits = ""
+        for ch in p:
+            if not ch.isdigit():
+                break
+            digits += ch
+        if not digits:
+            break
+        parts.append(int(digits))
+    return tuple(parts) if parts else (0,)
+
+
+def has_api(obj, name: str) -> bool:
+    """True when ``obj.name`` exists — the probe-don't-version-check idiom.
+
+    Prefer this over ``jax_version() >= (x, y)`` gates: vendored/backported
+    builds carry APIs their version string denies.
+    """
+    return getattr(obj, name, None) is not None

@@ -100,8 +100,9 @@ def ef_roundtrip(grads: PyTree, errors: PyTree):
 def int8_allreduce(x: jax.Array, mesh, axis: str) -> jax.Array:
     """Mean-reduce ``x`` (replicated layout) across ``axis`` with int8 wire
     format: quantize locally, all_gather int8 + scales, dequantize, average."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     def local(xl):
         q, scale = _quantize(xl)

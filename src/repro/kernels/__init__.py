@@ -2,4 +2,4 @@
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
 
-from repro.kernels import ops, ref  # noqa: F401,E402
+from repro.kernels import dispatch, ops, ref  # noqa: F401,E402

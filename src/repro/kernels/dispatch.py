@@ -1,0 +1,277 @@
+"""Capability-probing kernel dispatch registry.
+
+One registry maps each op (online-softmax, softmax+top-k, attention) to its
+implementations by execution path:
+
+* ``pallas``           — Pallas kernel compiled natively (TPU Mosaic)
+* ``pallas-interpret`` — same kernel body, Pallas interpret mode (faithful
+                         execution on backends without native lowering)
+* ``xla``              — the semantically-identical XLA form from
+                         ``repro.core`` (chunked/online; production CPU path)
+* ``xla-naive``        — materializing reference (oracle; small shapes only)
+
+Path selection happens once per (op, preference) pair: the first call probes
+``repro.compat.capabilities()`` and the choice is cached for the process.
+Model code states *preferences* (``cfg.use_pallas``, ``cfg.use_online_attention``)
+and the registry resolves them against what the backend can actually do, so
+a config asking for Pallas on a CPU host degrades to interpret mode instead
+of crashing — the portability counterpart of the compat import shims.
+
+Block sizes are not hard-coded either: ``block_decision`` runs a lightweight
+autotune sweep over the ⊕-tree shape (``online_normalizer_blocked``'s
+``block`` knob — §3.1 of the paper: any reduction tree gives the same
+``(m, d)``, so the sweep is free to pick the fastest) and caches the winner
+per (backend, vocab, dtype).  The second call for the same key is a pure
+cache hit.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import asdict, dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro import core
+
+Array = jax.Array
+
+PATH_PALLAS = "pallas"
+PATH_PALLAS_INTERPRET = "pallas-interpret"
+PATH_XLA = "xla"
+PATH_XLA_NAIVE = "xla-naive"
+
+_REGISTRY: dict[str, dict[str, Callable]] = {}
+
+
+def register(op: str, *paths: str):
+    """Decorator: register ``fn`` as the implementation of ``op`` on ``paths``."""
+    def deco(fn: Callable) -> Callable:
+        for path in paths:
+            _REGISTRY.setdefault(op, {})[path] = fn
+        return fn
+    return deco
+
+
+def available(op: str) -> tuple[str, ...]:
+    return tuple(_REGISTRY.get(op, ()))
+
+
+@functools.lru_cache(maxsize=None)
+def select_path(op: str, prefer_pallas: bool = False) -> str:
+    """Resolve the execution path for ``op`` on the probed backend (cached).
+
+    Policy: native Pallas wins wherever it exists; a Pallas *preference* on a
+    backend without native lowering resolves to interpret mode (kernel-body
+    fidelity over speed — what the kernel test suite pins); otherwise the XLA
+    form is the production path.
+    """
+    table = _REGISTRY[op]
+    caps = compat.capabilities()
+    if caps.pallas_native and PATH_PALLAS in table:
+        return PATH_PALLAS
+    if prefer_pallas and PATH_PALLAS_INTERPRET in table:
+        return PATH_PALLAS_INTERPRET
+    if PATH_XLA in table:
+        return PATH_XLA
+    return next(iter(table))
+
+
+def lookup(op: str, prefer_pallas: bool = False) -> tuple[str, Callable]:
+    path = select_path(op, prefer_pallas)
+    return path, _REGISTRY[op][path]
+
+
+# ---------------------------------------------------------------------------
+# Block-size autotune: per-(backend, vocab, dtype), ⊕-tree-shape sweep.
+# ---------------------------------------------------------------------------
+BLOCK_CANDIDATES = (256, 512, 1024, 2048, 4096)
+_TUNE_ROWS = 4           # sample batch height: enough to engage vectorization
+_TUNE_REPS = 3
+
+_BLOCK_CACHE: dict[tuple[str, int, str], "BlockDecision"] = {}
+_SWEEPS = 0              # number of real sweeps run (tests assert cache hits)
+
+
+@dataclass(frozen=True)
+class BlockDecision:
+    backend: str
+    vocab: int
+    dtype: str
+    block: int                       # winning ⊕-tree leaf width
+    timings_us: tuple                # ((candidate, best_of_reps_us), ...)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def _time_blocked(x: Array, block: int) -> float:
+    if compat.pallas_native():
+        # time the thing being configured: the Pallas kernel at this tile
+        # width (an XLA-scan proxy would not rank Mosaic VMEM tiles)
+        from repro.kernels import ops
+        fn = jax.jit(functools.partial(ops.online_normalizer, v_blk=block))
+    else:
+        fn = jax.jit(functools.partial(core.online_normalizer_blocked,
+                                       block=block))
+    jax.block_until_ready(fn(x))                       # compile + warm
+    best = float("inf")
+    for _ in range(_TUNE_REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def block_decision(vocab: int, dtype=jnp.float32) -> BlockDecision:
+    """Winning vocab-axis block for this (backend, vocab, dtype) — cached."""
+    vocab = int(vocab)
+    key = (compat.backend(), vocab, jnp.dtype(dtype).name)
+    hit = _BLOCK_CACHE.get(key)
+    if hit is not None:
+        return hit
+    global _SWEEPS
+    _SWEEPS += 1
+    # The sweep may be triggered while an outer jax.jit is tracing (the
+    # serving step jits decode); without this guard the candidates become
+    # tracers, block_until_ready no-ops, and the "timings" are per-candidate
+    # tracing overhead.  ensure_compile_time_eval suspends the outer trace so
+    # the sweep runs (and measures) real execution; no-op when called eagerly.
+    with jax.ensure_compile_time_eval():
+        cands = sorted({min(b, vocab) for b in BLOCK_CANDIDATES})
+        x = (jnp.arange(_TUNE_ROWS * vocab, dtype=jnp.float32) % 251.0
+             ).reshape(_TUNE_ROWS, vocab).astype(dtype)
+        timings = tuple((b, round(_time_blocked(x, b), 2)) for b in cands)
+    winner = min(timings, key=lambda t: t[1])[0]
+    decision = BlockDecision(backend=key[0], vocab=vocab, dtype=key[2],
+                             block=winner, timings_us=timings)
+    _BLOCK_CACHE[key] = decision
+    return decision
+
+
+def tuned_block(vocab: int, dtype=jnp.float32) -> int:
+    return block_decision(vocab, dtype).block
+
+
+def autotune_stats() -> dict:
+    return {"sweeps": _SWEEPS, "entries": len(_BLOCK_CACHE)}
+
+
+def reset_autotune_cache() -> None:
+    global _SWEEPS
+    _BLOCK_CACHE.clear()
+    _SWEEPS = 0
+
+
+# ---------------------------------------------------------------------------
+# Registered implementations.  Pallas entries import lazily so the registry
+# stays importable on hosts where jax.experimental.pallas cannot load.
+# ---------------------------------------------------------------------------
+@register("online_softmax", PATH_PALLAS, PATH_PALLAS_INTERPRET)
+def _online_softmax_pallas(x: Array) -> Array:
+    from repro.kernels import ops
+    return ops.online_softmax(x)               # v_blk unset → tuned_block
+
+
+@register("online_softmax", PATH_XLA)
+def _online_softmax_xla(x: Array) -> Array:
+    return core.online_softmax(x)
+
+
+@register("softmax_topk", PATH_PALLAS, PATH_PALLAS_INTERPRET)
+def _softmax_topk_pallas(x: Array, k: int) -> "core.SoftmaxTopK":
+    from repro.kernels import ops
+    vals, idx, lse = ops.softmax_topk(x, k)    # v_blk unset → tuned_block
+    return core.SoftmaxTopK(vals, idx, lse)
+
+
+@register("softmax_topk", PATH_XLA)
+def _softmax_topk_xla(x: Array, k: int,
+                      block: int | None = None) -> "core.SoftmaxTopK":
+    return core.softmax_topk(x, k, block=block)
+
+
+@register("attention", PATH_PALLAS, PATH_PALLAS_INTERPRET)
+def _attention_pallas(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale):
+    from repro.kernels import ops
+    return ops.flash_attention(q, k, v, causal=causal)
+
+
+@register("attention", PATH_XLA)
+def _attention_xla(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale):
+    return core.online_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                 kv_valid_len=kv_valid_len,
+                                 chunk_size=cfg.attn_chunk, scale=scale,
+                                 causal_blocks=cfg.attn_causal_blocks)
+
+
+@register("attention", PATH_XLA_NAIVE)
+def _attention_naive(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale):
+    return core.naive_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                kv_valid_len=kv_valid_len, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Public dispatched ops.
+# ---------------------------------------------------------------------------
+def online_softmax(x: Array) -> Array:
+    """Softmax over the last axis via the best path for this backend."""
+    _, fn = lookup("online_softmax")
+    return fn(x)
+
+
+def softmax_topk(x: Array, k: int,
+                 differentiable: bool = False) -> "core.SoftmaxTopK":
+    """Fused softmax+top-k (paper Algorithm 4) via the registry.
+
+    ``differentiable=True`` pins the XLA form: the Pallas top-k kernel has no
+    custom VJP yet (only ``flash_attention`` does), so callers under autodiff
+    — the MoE router — must not be routed to it even on TPU.
+    """
+    if differentiable:
+        return _REGISTRY["softmax_topk"][PATH_XLA](x, k)
+    _, fn = lookup("softmax_topk")
+    return fn(x, k)
+
+
+def sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale=None,
+         decode: bool = False, k_scale=None, v_scale=None):
+    """Attention dispatch — the single entry model layers call.
+
+    Routing order: sharded ⊕-merge decode (ambient ``ShardContext``) →
+    int8-cache direct chunked decode → registry (pallas / pallas-interpret /
+    xla-chunked / naive by config preference and backend capability).
+    """
+    from repro.distributed import context
+    ctx = context.get()
+    if decode and ctx is not None:
+        from repro.distributed.decode_attention import sharded_decode_attention
+        return sharded_decode_attention(
+            q, k, v, kv_valid_len, mesh=ctx.mesh,
+            seq_axes=ctx.cache_seq_axes, batch_axes=ctx.batch_axes,
+            chunk_size=cfg.attn_chunk,
+            scale=scale if scale is not None else q.shape[-1] ** -0.5,
+            k_scale=k_scale, v_scale=v_scale)
+    if k_scale is not None:
+        # int8 cache, single-device decode: inference-only direct call
+        from repro.core.attention import _chunked_fwd_impl
+        b = q.shape[0]
+        out, _ = _chunked_fwd_impl(
+            q, k, v, jnp.asarray(q_offset, jnp.int32),
+            jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (b,)),
+            causal, min(cfg.attn_chunk, k.shape[1]),
+            scale if scale is not None else q.shape[-1] ** -0.5,
+            k_scale=k_scale, v_scale=v_scale)
+        return out
+    if cfg.use_pallas and q.shape[1] > 1:
+        path = select_path("attention", prefer_pallas=True)
+    elif cfg.use_online_attention:
+        path = PATH_XLA
+    else:
+        path = PATH_XLA_NAIVE
+    return _REGISTRY["attention"][path](
+        cfg, q, k, v, causal=causal, q_offset=q_offset,
+        kv_valid_len=kv_valid_len, scale=scale)

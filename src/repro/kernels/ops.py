@@ -5,8 +5,13 @@ Dispatch policy (MaxText-style fallback):
 * On CPU (this container, and the multi-pod dry-run): ``interpret=True``
   executes the kernel body faithfully for correctness tests, while the model
   stack uses the semantically-identical XLA implementations in ``repro.core``
-  (Pallas can't lower to the CPU target).  ``use_pallas`` on ``ModelConfig``
-  selects the path; tests pin ``interpret=True`` explicitly.
+  (Pallas can't lower to the CPU target).
+
+Execution mode comes from ``repro.compat.pallas_interpret()`` — the one place
+that decides interpret-vs-compiled; path *selection* between Pallas and the
+XLA forms lives in ``repro.kernels.dispatch``.  Vocab-axis block sizes
+default to the dispatch registry's autotuned per-(backend, vocab, dtype)
+choice; pass ``v_blk`` explicitly to pin a tree shape (kernel tests do).
 
 ``flash_attention`` is differentiable: Pallas forward + the XLA chunked-online
 backward from ``repro.core.attention`` via ``jax.custom_vjp`` (the backward
@@ -19,6 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import attention as core_attention
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
@@ -31,40 +37,47 @@ from repro.kernels.softmax_topk import softmax_topk_pallas
 Array = jax.Array
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _v_blk(v: int, v_blk: int | None, dtype) -> int:
+    if v_blk is None:
+        from repro.kernels.dispatch import tuned_block
+        v_blk = tuned_block(v, dtype)
+    return _largest_divisor_block(v, v_blk)
 
 
-def online_softmax(x: Array, *, r_blk: int = 256, v_blk: int = 2048) -> Array:
+def online_softmax(x: Array, *, r_blk: int = 256,
+                   v_blk: int | None = None) -> Array:
     """Softmax over the last axis; any leading batch shape."""
     lead = x.shape[:-1]
     v = x.shape[-1]
     x2 = x.reshape(-1, v)
     r = x2.shape[0]
-    r_blk = _largest_divisor_block(r, r_blk)
-    v_blk = _largest_divisor_block(v, v_blk)
-    y = online_softmax_pallas(x2, r_blk=r_blk, v_blk=v_blk,
-                              interpret=_interpret())
+    y = online_softmax_pallas(x2, r_blk=_largest_divisor_block(r, r_blk),
+                              v_blk=_v_blk(v, v_blk, x.dtype),
+                              interpret=compat.pallas_interpret())
     return y.reshape(*lead, v)
 
 
-def online_normalizer(x: Array, *, r_blk: int = 256, v_blk: int = 2048):
+def online_normalizer(x: Array, *, r_blk: int = 256,
+                      v_blk: int | None = None):
     lead = x.shape[:-1]
     v = x.shape[-1]
     x2 = x.reshape(-1, v)
     m, d = online_normalizer_pallas(
         x2, r_blk=_largest_divisor_block(x2.shape[0], r_blk),
-        v_blk=_largest_divisor_block(v, v_blk), interpret=_interpret())
+        v_blk=_v_blk(v, v_blk, x.dtype),
+        interpret=compat.pallas_interpret())
     return m.reshape(lead), d.reshape(lead)
 
 
-def softmax_topk(x: Array, k: int, *, r_blk: int = 256, v_blk: int = 2048):
+def softmax_topk(x: Array, k: int, *, r_blk: int = 256,
+                 v_blk: int | None = None):
     lead = x.shape[:-1]
     v = x.shape[-1]
     x2 = x.reshape(-1, v)
     vals, idx, lse = softmax_topk_pallas(
         x2, k, r_blk=_largest_divisor_block(x2.shape[0], r_blk),
-        v_blk=_largest_divisor_block(v, v_blk), interpret=_interpret())
+        v_blk=_v_blk(v, v_blk, x.dtype),
+        interpret=compat.pallas_interpret())
     return (vals.reshape(*lead, k), idx.reshape(*lead, k), lse.reshape(lead))
 
 
@@ -90,7 +103,7 @@ def _flash_fwd_impl(q, k, v, causal, bq, bk):
     kh = jnp.swapaxes(k, 1, 2)
     vh = jnp.swapaxes(v, 1, 2)
     out, lse = flash_attention_pallas(qh, kh, vh, causal=causal, bq=bq, bk=bk,
-                                      interpret=_interpret())
+                                      interpret=compat.pallas_interpret())
     return jnp.swapaxes(out, 1, 2), lse
 
 
@@ -114,7 +127,7 @@ def _flash_bwd(causal, bq, bk, res, dout):
     doh = jnp.swapaxes(dout, 1, 2)
     dq, dk_h, dv_h = flash_attention_bwd_pallas(
         qh, kh, vh, oh, lse, doh, causal=causal, bq=bq, bk=bk,
-        interpret=_interpret())
+        interpret=compat.pallas_interpret())
     # reduce per-Q-head dk/dv into KV heads (GQA)
     tk = k.shape[1]
     dk = dk_h.reshape(b, hkv, g, tk, dh).sum(axis=2)
@@ -142,4 +155,4 @@ def flash_decode(q: Array, k_cache: Array, v_cache: Array,
     vh = jnp.swapaxes(v_cache, 1, 2)
     bk = _largest_divisor_block(kh.shape[2], bk)
     return flash_decode_pallas(q, kh, vh, kv_valid_len, bk=bk,
-                               interpret=_interpret())
+                               interpret=compat.pallas_interpret())

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.configs as configs
+from repro import compat
 from repro.configs.base import SHAPE_BY_NAME, ModelConfig, ParallelConfig, RunConfig, ShapeConfig
 from repro.distributed import context, sharding
 from repro.launch.mesh import make_production_mesh
@@ -350,14 +351,16 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     rec = rf.to_dict()
     rec.update(status="ok", attn_mode=par.attn_mode, fsdp=par.fsdp,
                n_params=count_params(vals_sds), n_active=n_active,
-               lower_s=round(t_lower, 1), compile_s=round(t_compile, 1))
+               lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+               env=compat.capabilities().to_dict())
     if verbose:
-        ma = compiled.memory_analysis()
+        ma = compat.memory_analysis(compiled)
         print(f"[{arch} × {shape_name} × {rec['mesh']}] "
               f"attn={par.attn_mode} fsdp={par.fsdp}")
-        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
-              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
-              f"alias={ma.alias_size_in_bytes/2**30:.2f}GiB per device")
+        if ma is not None:
+            print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+                  f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+                  f"alias={ma.alias_size_in_bytes/2**30:.2f}GiB per device")
         print(f"  cost_analysis: flops/dev={rec['hlo_flops_per_device']:.3e} "
               f"bytes/dev={rec['hlo_bytes_per_device']:.3e}")
         print(f"  roofline: compute={rec['compute_s']*1e3:.2f}ms "

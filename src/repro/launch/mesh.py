@@ -2,19 +2,21 @@
 
 Functions, not module-level constants — importing this module must never
 touch jax device state (the dry-run sets XLA_FLAGS before first jax use).
+``compat.make_mesh`` resolves ``jax.make_mesh`` vs the pre-0.4.34
+``mesh_utils`` construction.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small host-device mesh for tests (requires XLA_FLAGS device count)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"))
+    return make_mesh((n_data, n_model), ("data", "model"))

@@ -12,6 +12,7 @@ import argparse
 import jax
 
 import repro.configs as configs
+from repro import compat
 from repro.configs.base import OptimizerConfig, ParallelConfig, RunConfig
 from repro.data.synthetic import SyntheticConfig, SyntheticDataset
 from repro.distributed import context, sharding
@@ -50,9 +51,9 @@ def main(argv=None):
     devices = jax.devices()
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh(dims, ("data", "model")[:len(dims)])
+        mesh = compat.make_mesh(dims, ("data", "model")[:len(dims)])
     else:
-        mesh = jax.make_mesh((len(devices), 1), ("data", "model"))
+        mesh = compat.make_mesh((len(devices), 1), ("data", "model"))
 
     params, opt_state, axes = init_state(run_cfg, jax.random.PRNGKey(run_cfg.seed))
     par = sharding.derive_parallel(cfg, mesh, run_cfg.parallel)

@@ -11,6 +11,8 @@ Attention comes in two implementations of the same math:
   the thing the multi-pod dry-run lowers), and
 * ``repro.kernels.ops.flash_attention`` — the Pallas TPU kernel
   (``cfg.use_pallas``).
+Which one runs is resolved by ``repro.kernels.dispatch`` against the probed
+backend capabilities; this module only states preferences.
 """
 from __future__ import annotations
 
@@ -145,37 +147,12 @@ def _shard_ctx():
 def _sdpa(cfg: ModelConfig, q, k, v, *, causal, q_offset, kv_valid_len,
           scale: Optional[float] = None, decode: bool = False,
           k_scale=None, v_scale=None):
-    """Dispatch: shard_map ⊕-merge decode / Pallas kernel / XLA chunked."""
-    ctx = _shard_ctx()
-    if decode and ctx is not None:
-        from repro.distributed.decode_attention import sharded_decode_attention
-        return sharded_decode_attention(
-            q, k, v, kv_valid_len, mesh=ctx.mesh,
-            seq_axes=ctx.cache_seq_axes, batch_axes=ctx.batch_axes,
-            chunk_size=cfg.attn_chunk,
-            scale=scale if scale is not None else q.shape[-1] ** -0.5,
-            k_scale=k_scale, v_scale=v_scale)
-    if k_scale is not None:
-        # int8 cache, single-device decode: inference-only direct call
-        from repro.core.attention import _chunked_fwd_impl
-        b = q.shape[0]
-        out, _ = _chunked_fwd_impl(
-            q, k, v, jnp.asarray(q_offset, jnp.int32),
-            jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (b,)),
-            causal, min(cfg.attn_chunk, k.shape[1]),
-            scale if scale is not None else q.shape[-1] ** -0.5,
-            k_scale=k_scale, v_scale=v_scale)
-        return out
-    if cfg.use_pallas and q.shape[1] > 1:
-        return __import__("repro.kernels.ops", fromlist=["ops"]).flash_attention(
-            q, k, v, causal=causal)
-    if cfg.use_online_attention:
-        return core.online_attention(q, k, v, causal=causal, q_offset=q_offset,
-                                     kv_valid_len=kv_valid_len,
-                                     chunk_size=cfg.attn_chunk, scale=scale,
-                                     causal_blocks=cfg.attn_causal_blocks)
-    return core.naive_attention(q, k, v, causal=causal, q_offset=q_offset,
-                                kv_valid_len=kv_valid_len, scale=scale)
+    """Attention via the capability-probing registry (kernels.dispatch):
+    shard_map ⊕-merge decode / Pallas (compiled or interpret) / XLA chunked."""
+    from repro.kernels import dispatch
+    return dispatch.sdpa(cfg, q, k, v, causal=causal, q_offset=q_offset,
+                         kv_valid_len=kv_valid_len, scale=scale,
+                         decode=decode, k_scale=k_scale, v_scale=v_scale)
 
 
 def _quantize_kv(x: Array) -> tuple[Array, Array]:
@@ -430,8 +407,11 @@ def moe_apply(p: PyTree, x: Array, cfg: ModelConfig) -> tuple[Array, dict]:
     g = n // s
     xg = x.reshape(g, s, d)
     # ---- router: fused softmax+top-k (paper Alg. 4 at V = num_experts) ----
+    from repro.kernels import dispatch
     logits = (xg.astype(jnp.float32) @ p["router"])          # [G,S,E]
-    probs, idx, lse = core.softmax_topk(logits, k)           # [G,S,K]
+    # differentiable: the router sits under value_and_grad in training
+    probs, idx, lse = dispatch.softmax_topk(logits, k,
+                                            differentiable=True)  # [G,S,K]
     probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
     cap = int(math.ceil(s * k * mc.capacity_factor / mc.num_experts))
     cap = max(cap, 4)

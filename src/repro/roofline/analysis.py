@@ -19,6 +19,8 @@ from __future__ import annotations
 import re
 from dataclasses import asdict, dataclass, field
 
+from repro import compat
+
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 LINK_BW = 50e9               # bytes/s per ICI link
@@ -125,7 +127,8 @@ def analyze(compiled, *, arch: str, shape: str, mesh_desc: str, chips: int,
     recorded only as ``raw_cost_analysis`` for reference.
     """
     from repro.roofline.hlo_cost import analyze_hlo
-    ca = compiled.cost_analysis()
+    # normalized dict on every JAX version (0.4.x returns a 1-elem list)
+    ca = compat.cost_analysis(compiled)
     text = compiled.as_text()
     hc = analyze_hlo(text)
     flops = float(hc.flops)
@@ -138,17 +141,20 @@ def analyze(compiled, *, arch: str, shape: str, mesh_desc: str, chips: int,
     collective_s = colls.total_bytes / LINK_BW
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": collective_s}
-    ma = compiled.memory_analysis()
-    mem = {
-        "argument_bytes": int(ma.argument_size_in_bytes),
-        "output_bytes": int(ma.output_size_in_bytes),
-        "temp_bytes": int(ma.temp_size_in_bytes),
-        "alias_bytes": int(ma.alias_size_in_bytes),
-        "total_bytes": int(ma.argument_size_in_bytes
-                           + ma.output_size_in_bytes
-                           + ma.temp_size_in_bytes
-                           - ma.alias_size_in_bytes),
-    }
+    ma = compat.memory_analysis(compiled)
+    if ma is not None:
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "total_bytes": int(ma.argument_size_in_bytes
+                               + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               - ma.alias_size_in_bytes),
+        }
+    else:                                   # backend without memory_analysis
+        mem = {}
     return Roofline(
         arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
         hlo_flops_per_device=flops, hlo_bytes_per_device=byts,

@@ -71,7 +71,8 @@ def dryrun_table(recs: dict, mesh: str = "pod") -> str:
                 lines.append(f"| {arch} | {shape} | skipped | | | | | "
                              f"{r['reason'][:60]} |")
                 continue
-            mem = r["memory"]["total_bytes"] / 2**30
+            # memory may be {} for backends without memory_analysis support
+            mem = r.get("memory", {}).get("total_bytes", 0) / 2**30
             by_kind = r["collectives"]["by_kind"]
             top = ", ".join(f"{k}={v:.1e}" for k, v in
                             sorted(by_kind.items(), key=lambda kv: -kv[1])[:3])

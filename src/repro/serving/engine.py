@@ -106,7 +106,10 @@ def decode_step(params: PyTree, caches: list, cache_len: Array,
             rng, logits, top_k, mesh=ctx.mesh, batch_axes=ctx.batch_axes,
             vocab_axis=ctx.par.model_axis, temperature=temperature)
     else:
-        block = max(logits.shape[-1] // cfg.vocab_chunks, 1024)
+        # single-pass block width: the autotuned ⊕-tree choice for this
+        # (backend, vocab, dtype), not a hard-coded chunk heuristic
+        from repro.kernels import dispatch
+        block = dispatch.tuned_block(logits.shape[-1], logits.dtype)
         next_tok, _ = core.topk_sample(rng, logits, top_k,
                                        temperature=temperature,
                                        block=min(block, logits.shape[-1]))

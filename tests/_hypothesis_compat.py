@@ -1,0 +1,126 @@
+"""Fixed-seed stand-in for ``hypothesis`` when it is not installed.
+
+The online-softmax property tests are written against the hypothesis API
+(``@given`` over strategies).  This container has no network access and no
+hypothesis wheel, and a hard import aborts collection of the whole module —
+which under ``pytest -x`` kills the entire suite.  This shim supplies just
+the API surface those tests use (``given``, ``settings``, ``st.integers/
+floats/lists/tuples``, ``hnp.arrays``) backed by deterministic seeded
+sampling, so offline runs still exercise every property on ``max_examples``
+diverse inputs (boundary values included) instead of skipping.
+
+With hypothesis installed the real library is used and this module is inert.
+Not a general replacement: no shrinking, no database, no coverage-guided
+generation.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample_fn):
+        self._sample = sample_fn
+
+    def sample(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+def _boundary_or(rng, lo, hi, draw):
+    """Mostly ``draw``, sometimes an exact boundary — property tests live on
+    the edges (hypothesis's own heuristic, minus the search)."""
+    r = rng.random()
+    if r < 0.08:
+        return lo
+    if r < 0.16:
+        return hi
+    if r < 0.24 and lo <= 0.0 <= hi:
+        return type(lo)(0.0)
+    return draw()
+
+
+class _St:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        def sample(rng):
+            return int(_boundary_or(
+                rng, min_value, max_value,
+                lambda: int(rng.integers(min_value, max_value + 1))))
+        return _Strategy(sample)
+
+    @staticmethod
+    def floats(*, width: int = 64, min_value=None, max_value=None,
+               allow_nan: bool = False, allow_infinity: bool = False,
+               allow_subnormal: bool = True) -> _Strategy:
+        lo = -1e6 if min_value is None else float(min_value)
+        hi = 1e6 if max_value is None else float(max_value)
+        dt = np.float32 if width == 32 else np.float64
+
+        def sample(rng):
+            v = _boundary_or(rng, lo, hi, lambda: rng.uniform(lo, hi))
+            return float(dt(v))
+        return _Strategy(sample)
+
+    @staticmethod
+    def lists(elements: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.sample(rng) for _ in range(n)]
+        return _Strategy(sample)
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        def sample(rng):
+            return tuple(e.sample(rng) for e in elements)
+        return _Strategy(sample)
+
+
+class _Hnp:
+    @staticmethod
+    def arrays(dtype, shape, *, elements: _Strategy) -> _Strategy:
+        def sample(rng):
+            sh = shape.sample(rng) if isinstance(shape, _Strategy) else shape
+            sh = (sh,) if isinstance(sh, int) else tuple(sh)
+            flat = np.array([elements.sample(rng)
+                             for _ in range(int(np.prod(sh)))], dtype=dtype)
+            return flat.reshape(sh)
+        return _Strategy(sample)
+
+
+st = _St()
+hnp = _Hnp()
+
+_DEFAULT_EXAMPLES = 10
+
+
+def given(*strategies: _Strategy):
+    """Run the test once per generated example, seeded by the test's name."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                fn(*args, *[s.sample(rng) for s in strategies], **kwargs)
+        # Hide the strategy-bound parameters from pytest's fixture resolver:
+        # only what's left (``self``) is a collectable signature.
+        params = list(inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(
+            params[:len(params) - len(strategies)])
+        del wrapper.__wrapped__
+        wrapper._hypothesis_fallback = True
+        return wrapper
+    return deco
+
+
+def settings(*, deadline=None, max_examples: int = _DEFAULT_EXAMPLES,
+             **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
