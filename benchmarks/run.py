@@ -6,14 +6,19 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_topk_sweep     → paper §5.2 (K degradation)
   bench_attention      → beyond-paper (online attention)
   bench_chunked_ce     → beyond-paper (§7 fusion at the LM head)
+  bench_serving        → beyond-paper (continuous batching: tok/s, p50/p95
+                         per-token latency, occupancy vs drain-and-refill)
 
 ``--smoke`` shrinks every sweep to a seconds-long sanity pass (tiny V/batch,
 one case per module) — the tier-1 suite runs it so the harness itself can't
-rot between full benchmark runs.
+rot between full benchmark runs.  ``--json PATH`` additionally records the
+rows plus the probed backend capabilities to a results file (the input format
+the EXPERIMENTS.md results-diffing report will consume).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -29,6 +34,7 @@ def main(argv=None) -> int:
     from benchmarks import (
         bench_attention,
         bench_chunked_ce,
+        bench_serving,
         bench_softmax,
         bench_softmax_topk,
         bench_topk_sweep,
@@ -41,12 +47,15 @@ def main(argv=None) -> int:
         "topk_sweep": bench_topk_sweep,
         "attention": bench_attention,
         "chunked_ce": bench_chunked_ce,
+        "serving": bench_serving,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("benches", nargs="*", metavar="bench",
                     help=f"subset to run (default: all): {', '.join(mods)}")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, one case per module (CI sanity pass)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows + backend capabilities to PATH")
     args = ap.parse_args(argv)
     unknown = [b for b in args.benches if b not in mods]
     if unknown:
@@ -56,6 +65,22 @@ def main(argv=None) -> int:
     for name in args.benches or list(mods):
         rows.extend(mods[name].run(smoke=args.smoke))
     emit(rows)
+    if args.json:
+        from repro import compat
+        caps = compat.capabilities()
+        payload = {
+            "smoke": bool(args.smoke),
+            "env": {"backend": caps.backend,
+                    "jax_version": caps.jax_version,
+                    "device_count": caps.device_count,
+                    "pallas_native": caps.pallas_native},
+            "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
+                     for n, us, d in rows],
+        }
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
     return 0
 
 

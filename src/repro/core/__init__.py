@@ -13,6 +13,7 @@ from repro.core.online_softmax import (
     safe_softmax,
 )
 from repro.core.topk_fusion import (
+    gumbel_pick,
     SoftmaxTopK,
     safe_softmax_then_topk,
     softmax_topk,
@@ -26,6 +27,7 @@ __all__ = [
     "online_log_softmax", "online_logsumexp", "online_normalizer",
     "online_normalizer_blocked", "online_normalizer_scan", "online_softmax",
     "safe_softmax", "SoftmaxTopK", "safe_softmax_then_topk", "softmax_topk",
+    "gumbel_pick",
     "topk_sample", "naive_attention", "online_attention",
     "chunked_cross_entropy", "full_cross_entropy",
 ]

@@ -117,11 +117,20 @@ def online_attention(q: Array, k: Array, v: Array, *, causal: bool = False,
 
 
 def _chunk_mask(q_pos, k_pos, kv_valid_len, causal):
-    """[B, Tq, C] mask for one KV chunk.  q_pos [Tq] (already offset), k_pos [C]."""
+    """[B, Tq, C] mask for one KV chunk.  q_pos [Tq] or [B, Tq] (already
+    offset — the batched form carries per-row offsets, e.g. continuous-batching
+    slots at different lengths), k_pos [C]."""
     m = k_pos[None, None, :] < kv_valid_len[:, None, None]
     if causal:
-        m = m & (k_pos[None, None, :] <= q_pos[None, :, None])
+        qp = q_pos[None, :, None] if q_pos.ndim == 1 else q_pos[:, :, None]
+        m = m & (k_pos[None, None, :] <= qp)
     return m
+
+
+def _q_positions(tq: int, q_offset: Array) -> Array:
+    """Query positions: [Tq] for a scalar offset, [B, Tq] for per-row offsets."""
+    return jnp.asarray(q_offset, jnp.int32)[..., None] \
+        + jnp.arange(tq, dtype=jnp.int32)
 
 
 def _chunked_fwd_impl(q, k, v, q_offset, kv_valid_len, causal, chunk_size,
@@ -144,7 +153,7 @@ def _chunked_fwd_impl(q, k, v, q_offset, kv_valid_len, causal, chunk_size,
         n_chunks += 1
     kv_valid_len = jnp.minimum(kv_valid_len, tk)
     qf = (q.astype(jnp.float32) * scale).reshape(b, tq, hkv, g, dh)
-    q_pos = jnp.arange(tq, dtype=jnp.int32) + q_offset
+    q_pos = _q_positions(tq, q_offset)
 
     def step(carry, idx):
         m_run, d_run, acc = carry
@@ -207,7 +216,7 @@ def _bwd(causal, chunk_size, scale, res, dout):
     of = jnp.moveaxis(out.astype(jnp.float32).reshape(b, tq, hkv, g, dv), 1, 3)
     delta = jnp.sum(dof * of, axis=-1)                # [B,Hkv,G,Tq]
     lse_safe = jnp.where(jnp.isneginf(lse), 0.0, lse)
-    q_pos = jnp.arange(tq, dtype=jnp.int32) + q_offset
+    q_pos = _q_positions(tq, q_offset)
 
     def step(dq_acc, idx):
         kc = jax.lax.dynamic_slice_in_dim(k, idx * chunk_size, chunk_size, 1)

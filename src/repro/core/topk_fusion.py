@@ -90,6 +90,18 @@ def safe_softmax_then_topk(x: Array, k: int) -> SoftmaxTopK:
     return SoftmaxTopK(vals, idx, m + jnp.log(d))
 
 
+def gumbel_pick(out: SoftmaxTopK, g: Array) -> Array:
+    """Sample ∝ p_i from the K retained probs via Gumbel-max on log p.
+
+    ``g`` is Gumbel noise shaped like ``out.values`` — callers choose whether
+    one key covers the batch (``topk_sample``) or each row gets its own
+    (``serving.engine.sample_per_slot``, the batch-size-invariance the
+    continuous-batching equivalence rests on)."""
+    logp = jnp.log(jnp.maximum(out.values.astype(jnp.float32), 1e-30))
+    choice = jnp.argmax(logp + g, axis=-1)
+    return jnp.take_along_axis(out.indices, choice[..., None], axis=-1)[..., 0]
+
+
 def topk_sample(rng: Array, x: Array, k: int, *, temperature: float = 1.0,
                 block: int | None = None) -> tuple[Array, Array]:
     """Sample a token from the fused top-k softmax (the serving fast path).
@@ -102,8 +114,4 @@ def topk_sample(rng: Array, x: Array, k: int, *, temperature: float = 1.0,
         x = x / temperature
     out = softmax_topk(x, k, block=block)
     g = jax.random.gumbel(rng, out.values.shape, dtype=jnp.float32)
-    # values are descending softmax probs; sample ∝ p_i via gumbel on log p.
-    logp = jnp.log(jnp.maximum(out.values.astype(jnp.float32), 1e-30))
-    choice = jnp.argmax(logp + g, axis=-1)
-    token = jnp.take_along_axis(out.indices, choice[..., None], axis=-1)[..., 0]
-    return token, out.values
+    return gumbel_pick(out, g), out.values

@@ -22,11 +22,20 @@ autotune sweep over the ⊕-tree shape (``online_normalizer_blocked``'s
 ``block`` knob — §3.1 of the paper: any reduction tree gives the same
 ``(m, d)``, so the sweep is free to pick the fastest) and caches the winner
 per (backend, vocab, dtype).  The second call for the same key is a pure
-cache hit.
+cache hit.  Decisions persist to an on-disk JSON cache (path overridable via
+``REPRO_AUTOTUNE_CACHE``; set it empty to disable) loaded at import, so a
+serving restart skips the sweep entirely.
+
+Attention tile shapes go through the same seam: ``attention_tiles`` resolves
+``bq``/``bk`` for the Pallas flash kernels (decode ``bk`` is swept on native
+backends; prefill tiles come from the registry defaults until the full sweep
+lands), so ``kernels/ops.py`` carries no hard-coded 512s.
 """
 from __future__ import annotations
 
 import functools
+import json
+import os
 import time
 from dataclasses import asdict, dataclass
 from typing import Callable
@@ -93,7 +102,17 @@ _TUNE_ROWS = 4           # sample batch height: enough to engage vectorization
 _TUNE_REPS = 3
 
 _BLOCK_CACHE: dict[tuple[str, int, str], "BlockDecision"] = {}
+_TILE_CACHE: dict[tuple, "TileDecision"] = {}
 _SWEEPS = 0              # number of real sweeps run (tests assert cache hits)
+
+# Attention tile registry defaults (the former hard-coded ops.py values; the
+# one seam the planned bq/bk sweep extends).  Decode bk is swept on native
+# Pallas backends; the rest resolve to these until their sweeps land.
+ATTN_TILE_DEFAULTS = {
+    "flash_attention": {"bq": 512, "bk": 512},
+    "flash_decode": {"bk": 512},
+}
+DECODE_BK_CANDIDATES = (128, 256, 512, 1024)
 
 
 @dataclass(frozen=True)
@@ -106,6 +125,112 @@ class BlockDecision:
 
     def to_dict(self) -> dict:
         return asdict(self)
+
+
+@dataclass(frozen=True)
+class TileDecision:
+    op: str                          # "flash_attention" | "flash_decode"
+    backend: str
+    kv_len: int
+    head_dim: int
+    dtype: str
+    tiles: dict                      # resolved {"bq": ..} / {"bk": ..}
+    timings_us: tuple                # ((candidate, best_of_reps_us), ...) or ()
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# On-disk persistence: decisions survive the process so serving restarts skip
+# the sweep.  Best-effort — an unwritable/corrupt cache never breaks dispatch.
+# ---------------------------------------------------------------------------
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_DEFAULT_CACHE_PATH = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+
+
+def autotune_cache_path() -> str | None:
+    """Resolved cache file path; ``REPRO_AUTOTUNE_CACHE=`` (empty) disables."""
+    p = os.environ.get(AUTOTUNE_CACHE_ENV)
+    if p is not None:
+        return p or None
+    return _DEFAULT_CACHE_PATH
+
+
+def load_persisted_decisions(path: str | None = None) -> int:
+    """Merge on-disk decisions into the in-process caches (existing in-memory
+    entries win).  Returns the number of entries loaded."""
+    path = path if path is not None else autotune_cache_path()
+    if not path or not os.path.exists(path):
+        return 0
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return 0
+    n = 0
+    for d in data.get("blocks", ()):
+        try:
+            dec = BlockDecision(
+                backend=str(d["backend"]), vocab=int(d["vocab"]),
+                dtype=str(d["dtype"]), block=int(d["block"]),
+                timings_us=tuple(tuple(t) for t in d["timings_us"]))
+        except (KeyError, TypeError, ValueError):
+            continue
+        key = (dec.backend, dec.vocab, dec.dtype)
+        if key not in _BLOCK_CACHE:
+            _BLOCK_CACHE[key] = dec
+            n += 1
+    for d in data.get("tiles", ()):
+        try:
+            dec = TileDecision(
+                op=str(d["op"]), backend=str(d["backend"]),
+                kv_len=int(d["kv_len"]), head_dim=int(d["head_dim"]),
+                dtype=str(d["dtype"]), tiles=dict(d["tiles"]),
+                timings_us=tuple(tuple(t) for t in d["timings_us"]))
+        except (KeyError, TypeError, ValueError):
+            continue
+        key = (dec.op, dec.backend, dec.kv_len, dec.head_dim, dec.dtype)
+        if key not in _TILE_CACHE:
+            _TILE_CACHE[key] = dec
+            n += 1
+    return n
+
+
+def save_persisted_decisions(path: str | None = None) -> bool:
+    """Write the merged (disk ∪ memory, memory wins) decision set to disk."""
+    path = path if path is not None else autotune_cache_path()
+    if not path:
+        return False
+    merged_blocks: dict[tuple, dict] = {}
+    merged_tiles: dict[tuple, dict] = {}
+    try:
+        with open(path) as f:
+            old = json.load(f)
+        for d in old.get("blocks", ()):
+            merged_blocks[(d["backend"], int(d["vocab"]), d["dtype"])] = d
+        for d in old.get("tiles", ()):
+            merged_tiles[(d["op"], d["backend"], int(d["kv_len"]),
+                          int(d["head_dim"]), d["dtype"])] = d
+    except (OSError, ValueError, KeyError, TypeError):
+        pass
+    for key, dec in _BLOCK_CACHE.items():
+        merged_blocks[key] = dec.to_dict()
+    for key, dec in _TILE_CACHE.items():
+        merged_tiles[key] = dec.to_dict()
+    payload = {"version": 1,
+               "blocks": list(merged_blocks.values()),
+               "tiles": list(merged_tiles.values())}
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1)
+        os.replace(tmp, path)
+        return True
+    except OSError:
+        return False
 
 
 def _time_blocked(x: Array, block: int) -> float:
@@ -149,6 +274,7 @@ def block_decision(vocab: int, dtype=jnp.float32) -> BlockDecision:
     decision = BlockDecision(backend=key[0], vocab=vocab, dtype=key[2],
                              block=winner, timings_us=timings)
     _BLOCK_CACHE[key] = decision
+    save_persisted_decisions()
     return decision
 
 
@@ -156,13 +282,72 @@ def tuned_block(vocab: int, dtype=jnp.float32) -> int:
     return block_decision(vocab, dtype).block
 
 
+def _time_decode_bk(kv_len: int, head_dim: int, dtype, bk: int) -> float:
+    from repro.kernels import ops
+    q = jnp.ones((_TUNE_ROWS, 8, head_dim), dtype)
+    kc = jnp.ones((_TUNE_ROWS, kv_len, 8, head_dim), dtype)
+    vlen = jnp.full((_TUNE_ROWS,), kv_len, jnp.int32)
+    fn = jax.jit(functools.partial(ops.flash_decode, bk=bk))
+    jax.block_until_ready(fn(q, kc, kc, vlen))
+    best = float("inf")
+    for _ in range(_TUNE_REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(q, kc, kc, vlen))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def attention_tiles(op: str, *, kv_len: int, head_dim: int,
+                    dtype=jnp.float32) -> dict:
+    """Resolved attention tile sizes for ``op`` — the one seam for bq/bk.
+
+    Decode ``bk`` is swept per (backend, kv_len, head_dim, dtype) on backends
+    with native Pallas lowering (a meaningless interpret-mode timing would
+    just rank Python overhead); elsewhere, and for the not-yet-swept prefill
+    tiles, the registry defaults apply.  Decisions are cached in-process and
+    persisted alongside the vocab-block decisions.
+    """
+    kv_len, head_dim = int(kv_len), int(head_dim)
+    key = (op, compat.backend(), kv_len, head_dim, jnp.dtype(dtype).name)
+    hit = _TILE_CACHE.get(key)
+    if hit is not None:
+        return dict(hit.tiles)
+    defaults = dict(ATTN_TILE_DEFAULTS[op])
+    if op == "flash_decode" and compat.pallas_native():
+        global _SWEEPS
+        _SWEEPS += 1
+        with jax.ensure_compile_time_eval():
+            cands = sorted({min(b, kv_len) for b in DECODE_BK_CANDIDATES
+                            if kv_len % min(b, kv_len) == 0})
+            timings = tuple(
+                (b, round(_time_decode_bk(kv_len, head_dim, dtype, b), 2))
+                for b in cands)
+        defaults["bk"] = min(timings, key=lambda t: t[1])[0]
+    else:
+        timings = ()
+    decision = TileDecision(op=op, backend=key[1], kv_len=kv_len,
+                            head_dim=head_dim, dtype=key[4],
+                            tiles=defaults, timings_us=timings)
+    _TILE_CACHE[key] = decision
+    if timings:                      # defaults-only decisions aren't worth IO
+        save_persisted_decisions()
+    return dict(decision.tiles)
+
+
 def autotune_stats() -> dict:
     return {"sweeps": _SWEEPS, "entries": len(_BLOCK_CACHE)}
 
 
+def tile_stats() -> dict:
+    return {"entries": len(_TILE_CACHE)}
+
+
 def reset_autotune_cache() -> None:
+    """Clear the in-process decision caches (the on-disk cache is untouched;
+    it is only consulted at import via ``load_persisted_decisions``)."""
     global _SWEEPS
     _BLOCK_CACHE.clear()
+    _TILE_CACHE.clear()
     _SWEEPS = 0
 
 
@@ -212,6 +397,27 @@ def _attention_xla(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale):
 def _attention_naive(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale):
     return core.naive_attention(q, k, v, causal=causal, q_offset=q_offset,
                                 kv_valid_len=kv_valid_len, scale=scale)
+
+
+@register("decode_attention", PATH_PALLAS)
+def _decode_attention_pallas(cfg, q, k, v, *, q_offset, kv_valid_len, scale):
+    """Single-token decode on the Pallas streaming kernel.  ``kv_valid_len``
+    [B] is the per-slot length vector — each cache slot masks its own tail,
+    which is what lets continuous batching mix ragged sequences in one call.
+    The kernel bakes in the default 1/sqrt(d) scale; a custom scale (MLA)
+    falls back to the chunked XLA form."""
+    if scale is not None and scale != q.shape[-1] ** -0.5:
+        return _decode_attention_xla(cfg, q, k, v, q_offset=q_offset,
+                                     kv_valid_len=kv_valid_len, scale=scale)
+    from repro.kernels import ops
+    return ops.flash_decode(q[:, 0], k, v, kv_valid_len)[:, None]
+
+
+@register("decode_attention", PATH_XLA)
+def _decode_attention_xla(cfg, q, k, v, *, q_offset, kv_valid_len, scale):
+    return core.online_attention(q, k, v, causal=False, q_offset=q_offset,
+                                 kv_valid_len=kv_valid_len,
+                                 chunk_size=cfg.attn_chunk, scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -266,7 +472,28 @@ def sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale=None,
             scale if scale is not None else q.shape[-1] ** -0.5,
             k_scale=k_scale, v_scale=v_scale)
         return out
-    if cfg.use_pallas and q.shape[1] > 1:
+    if decode:
+        # single-token decode: per-row kv_valid_len masking (ragged slot
+        # lengths under continuous batching).  Same preference semantics as
+        # prefill — Pallas stays opt-in via cfg.use_pallas (streaming kernel
+        # where native, chunked XLA otherwise), use_online_attention picks
+        # chunked XLA, and neither keeps the naive oracle form.
+        if cfg.use_pallas and select_path("decode_attention") == PATH_PALLAS:
+            fn = _REGISTRY["decode_attention"][PATH_PALLAS]
+        elif cfg.use_online_attention or cfg.use_pallas:
+            fn = _REGISTRY["decode_attention"][PATH_XLA]
+        else:
+            return _REGISTRY["attention"][PATH_XLA_NAIVE](
+                cfg, q, k, v, causal=False, q_offset=q_offset,
+                kv_valid_len=kv_valid_len, scale=scale)
+        return fn(cfg, q, k, v, q_offset=q_offset,
+                  kv_valid_len=kv_valid_len, scale=scale)
+    if cfg.use_pallas and q.shape[1] > 1 and kv_valid_len is None:
+        # fresh (train / no-cache) self-attention only: the Pallas flash
+        # kernel has no q_offset/kv_valid_len operands, so cached chunked
+        # prefill — queries offset into a longer, partially-valid cache —
+        # must take the chunked XLA form, which masks both.  (Teaching the
+        # kernel offset+valid tiles is the ROADMAP follow-up.)
         path = select_path("attention", prefer_pallas=True)
     elif cfg.use_online_attention:
         path = PATH_XLA
@@ -275,3 +502,7 @@ def sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale=None,
     return _REGISTRY["attention"][path](
         cfg, q, k, v, causal=causal, q_offset=q_offset,
         kv_valid_len=kv_valid_len, scale=scale)
+
+
+# Import-time: merge persisted decisions so a serving restart skips the sweep.
+load_persisted_decisions()

@@ -11,7 +11,9 @@ Execution mode comes from ``repro.compat.pallas_interpret()`` — the one place
 that decides interpret-vs-compiled; path *selection* between Pallas and the
 XLA forms lives in ``repro.kernels.dispatch``.  Vocab-axis block sizes
 default to the dispatch registry's autotuned per-(backend, vocab, dtype)
-choice; pass ``v_blk`` explicitly to pin a tree shape (kernel tests do).
+choice, and attention tile shapes (``bq``/``bk``) resolve through the same
+registry seam (``dispatch.attention_tiles``); pass them explicitly to pin a
+shape (kernel tests do).
 
 ``flash_attention`` is differentiable: Pallas forward + the XLA chunked-online
 backward from ``repro.core.attention`` via ``jax.custom_vjp`` (the backward
@@ -141,18 +143,35 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
-                    bq: int = 512, bk: int = 512) -> Array:
-    """Differentiable online-softmax attention (Pallas fwd on TPU)."""
+                    bq: int | None = None, bk: int | None = None) -> Array:
+    """Differentiable online-softmax attention (Pallas fwd on TPU).
+
+    ``bq``/``bk`` unset → the dispatch registry's resolved tiles (kernel
+    tests pin explicit values; nothing here is hard-coded)."""
+    if bq is None or bk is None:
+        from repro.kernels.dispatch import attention_tiles
+        tiles = attention_tiles("flash_attention", kv_len=k.shape[1],
+                                head_dim=q.shape[-1], dtype=q.dtype)
+        bq = tiles["bq"] if bq is None else bq
+        bk = tiles["bk"] if bk is None else bk
     bq = _largest_divisor_block(q.shape[1], bq)
     bk = _largest_divisor_block(k.shape[1], bk)
     return _flash(q, k, v, causal, bq, bk)
 
 
 def flash_decode(q: Array, k_cache: Array, v_cache: Array,
-                 kv_valid_len: Array, *, bk: int = 512) -> Array:
-    """Decode attention: q [B,Hq,D] vs caches [B,S,Hkv,D] → [B,Hq,D]."""
+                 kv_valid_len: Array, *, bk: int | None = None) -> Array:
+    """Decode attention: q [B,Hq,D] vs caches [B,S,Hkv,D] → [B,Hq,D].
+
+    ``kv_valid_len`` [B] masks each row's cache tail independently — the
+    per-slot length vector of the continuous-batching pool flows in here.
+    ``bk`` unset → the registry's swept decode tile for this cache length."""
     kh = jnp.swapaxes(k_cache, 1, 2)   # [B,Hkv,S,D]
     vh = jnp.swapaxes(v_cache, 1, 2)
+    if bk is None:
+        from repro.kernels.dispatch import attention_tiles
+        bk = attention_tiles("flash_decode", kv_len=k_cache.shape[1],
+                             head_dim=q.shape[-1], dtype=q.dtype)["bk"]
     bk = _largest_divisor_block(kh.shape[2], bk)
     return flash_decode_pallas(q, kh, vh, kv_valid_len, bk=bk,
                                interpret=compat.pallas_interpret())

@@ -1,9 +1,13 @@
-"""Serving launcher: batched prefill + decode with fused top-k sampling.
+"""Serving launcher: lockstep baseline and the continuous-batching loop.
 
-``python -m repro.launch.serve --arch smollm-360m --smoke --tokens 32``
-runs a batch of synthetic prompts through prefill and autoregressive decode,
-reporting tokens/s.  The decode hot path is the paper's §4 scenario: project
-to the vocabulary, fused online-softmax + top-k, sample.
+``python -m repro.launch.serve --arch smollm-360m --smoke --continuous``
+drives the slot-pool scheduler (``repro.serving.scheduler``) over synthetic
+Poisson-staggered arrivals and reports throughput, p50/p95 per-token latency,
+and batch occupancy against the drain-and-refill bound.  Without
+``--continuous`` the original lockstep batch runs: one shared cache length,
+prefill-everything-then-decode — kept as the baseline the scheduler has to
+beat.  Either way the decode hot path is the paper's §4 scenario: project to
+the vocabulary, fused online-softmax + top-k, sample.
 """
 from __future__ import annotations
 
@@ -18,25 +22,10 @@ from repro.models import layers as L, transformer
 from repro.serving import engine
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--top-k", type=int, default=5)
-    ap.add_argument("--max-len", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = (configs.get_smoke(args.arch) if args.smoke
-           else configs.get(args.arch))
-    if cfg.family == "encdec":
-        raise SystemExit("use examples/serve_whisper.py for enc-dec serving")
+def _lockstep(args, cfg, params) -> int:
+    """The original drain-and-refill loop (one shared cache_len)."""
     max_len = args.max_len or (args.prompt_len + args.tokens)
-
     rng = jax.random.PRNGKey(0)
-    params, _ = L.split_params(transformer.init(rng, cfg))
     vocab = cfg.real_vocab_size or cfg.vocab_size
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, vocab)
@@ -75,6 +64,80 @@ def main(argv=None):
           f"({(args.tokens - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
     print("sample token ids:", gen[0, :16].tolist())
     return 0
+
+
+def _continuous(args, cfg, params) -> int:
+    """Continuous batching over staggered (Poisson) synthetic arrivals."""
+    from repro.serving import scheduler as sched_mod
+
+    vocab = cfg.real_vocab_size or cfg.vocab_size
+    slot_len = args.max_len or (args.prompt_len + args.tokens + 8)
+    requests = sched_mod.poisson_workload(
+        args.requests, rate_per_tick=args.rate,
+        prompt_lens=(max(2, args.prompt_len // 4), args.prompt_len),
+        decode_lens=(max(2, args.tokens // 8), args.tokens),
+        vocab=vocab, seed=1)
+    sched = sched_mod.ContinuousScheduler(
+        params, cfg, num_slots=args.slots, slot_len=slot_len,
+        prefill_chunk=args.prefill_chunk, top_k=args.top_k,
+        base_rng=jax.random.PRNGKey(0))
+    report = sched.run(requests)
+
+    pct = report.latency_percentiles((50, 95))
+    baseline = report.baseline_occupancy(args.slots)
+    print(f"continuous batching: {len(report.results)} requests over "
+          f"{args.slots} slots (slot_len={slot_len}, "
+          f"prefill_chunk={args.prefill_chunk})")
+    print(f"tokens: {report.total_tokens} in {report.wall_time:.2f}s "
+          f"→ {report.tokens_per_s:.1f} tok/s")
+    print(f"per-token latency: p50={pct['p50']*1e3:.1f}ms "
+          f"p95={pct['p95']*1e3:.1f}ms")
+    print(f"decode steps: {report.decode_steps}  "
+          f"prefill chunks: {report.prefill_chunks}")
+    print(f"batch occupancy: {report.occupancy:.3f} "
+          f"(drain-and-refill baseline: {baseline:.3f})")
+    evicted = [r.rid for r in report.results if r.evicted]
+    if evicted:
+        print(f"evicted at slot capacity: {evicted}")
+    if report.occupancy <= baseline:
+        print("WARNING: occupancy did not beat the drain-and-refill baseline")
+        return 1
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--top-k", type=int, default=5)
+    ap.add_argument("--max-len", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-pool continuous batching over Poisson arrivals")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-cache slots in the pool (continuous mode)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="synthetic requests to serve (continuous mode)")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="mean arrivals per scheduler tick (continuous mode)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens prefilled per tick (continuous mode)")
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get(args.arch))
+    if cfg.family == "encdec":
+        raise SystemExit("use examples/serve_whisper.py for enc-dec serving")
+    if args.continuous and cfg.num_patches:
+        raise SystemExit("continuous batching serves text-only archs for now")
+
+    params, _ = L.split_params(
+        transformer.init(jax.random.PRNGKey(0), cfg))
+    if args.continuous:
+        return _continuous(args, cfg, params)
+    return _lockstep(args, cfg, params)
 
 
 if __name__ == "__main__":

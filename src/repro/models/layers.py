@@ -16,7 +16,6 @@ backend capabilities; this module only states preferences.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any, NamedTuple, Optional
 
@@ -144,6 +143,28 @@ def _shard_ctx():
     return context.get()
 
 
+def cache_write(cache_arr: Array, new: Array, cache_len) -> Array:
+    """Write ``new`` ([B, t, ...]) into ``cache_arr`` ([B, S, ...]) at offset
+    ``cache_len`` along the sequence axis.
+
+    A scalar ``cache_len`` is the lockstep-batch case (one shared offset); a
+    ``[B]`` vector writes each row at its own offset — the continuous-batching
+    slot pool, where every cache slot holds a sequence of different length.
+    """
+    ln = jnp.asarray(cache_len, jnp.int32)
+    new = new.astype(cache_arr.dtype)
+    if ln.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache_arr, new, ln, axis=1)
+    return jax.vmap(
+        lambda c, n, l: jax.lax.dynamic_update_slice_in_dim(c, n, l, axis=0)
+    )(cache_arr, new, ln)
+
+
+def _valid_len(cache_len, t: int, b: int) -> Array:
+    """Per-row valid KV length after writing ``t`` new positions."""
+    return jnp.broadcast_to(jnp.asarray(cache_len + t, jnp.int32), (b,))
+
+
 def _sdpa(cfg: ModelConfig, q, k, v, *, causal, q_offset, kv_valid_len,
           scale: Optional[float] = None, decode: bool = False,
           k_scale=None, v_scale=None):
@@ -225,13 +246,11 @@ def attention_apply(p: PyTree, x: Array, cfg: ModelConfig, *,
         # dequantizes per chunk AFTER the HBM read (1 byte/elem streamed)
         k8, ks = _quantize_kv(k)
         v8, vs = _quantize_kv(v)
-        dus = functools.partial(jax.lax.dynamic_update_slice_in_dim,
-                                start_index=cache_len, axis=1)
-        new_cache = {"k": dus(cache["k"], k8),
-                     "v": dus(cache["v"], v8),
-                     "k_scale": dus(cache["k_scale"], ks),
-                     "v_scale": dus(cache["v_scale"], vs)}
-        valid = jnp.full((b,), cache_len + t, jnp.int32)
+        new_cache = {"k": cache_write(cache["k"], k8, cache_len),
+                     "v": cache_write(cache["v"], v8, cache_len),
+                     "k_scale": cache_write(cache["k_scale"], ks, cache_len),
+                     "v_scale": cache_write(cache["v_scale"], vs, cache_len)}
+        valid = _valid_len(cache_len, t, b)
         if t > 1:   # prefill computes on the exact fp tensors
             if ctx is not None and ctx.par.attn_mode == "sequence":
                 q, k, v = _constrain_seq_parallel(ctx, q, k, v)
@@ -245,11 +264,12 @@ def attention_apply(p: PyTree, x: Array, cfg: ModelConfig, *,
                         decode=True, k_scale=new_cache["k_scale"],
                         v_scale=new_cache["v_scale"])
     elif cache is not None:
-        # decode: append this step's k/v at cache_len, attend over the cache
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+        # decode: append this step's k/v at cache_len (scalar: lockstep batch;
+        # [B] vector: per-slot offsets), attend over the cache
+        k_cache = cache_write(cache["k"], k, cache_len)
+        v_cache = cache_write(cache["v"], v, cache_len)
         new_cache = {"k": k_cache, "v": v_cache}
-        valid = jnp.full((b,), cache_len + t, jnp.int32)
+        valid = _valid_len(cache_len, t, b)
         ka, va = k_cache, v_cache
         if t > 1:      # prefill: same compute sharding as the train path
             if ctx is not None and ctx.par.attn_mode == "sequence":
@@ -315,8 +335,8 @@ def mla_apply(p: PyTree, x: Array, cfg: ModelConfig, *, positions: Array,
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     shard_ctx = _shard_ctx()
     if cache is not None:
-        c_cache = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache_len, axis=1)
-        r_cache = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), cache_len, axis=1)
+        c_cache = cache_write(cache["c_kv"], c_kv, cache_len)
+        r_cache = cache_write(cache["k_rope"], k_rope, cache_len)
         new_cache = {"c_kv": c_cache, "k_rope": r_cache}
         # absorbed decode: q_eff = W_uk^T q_nope  ∈ R^{Rkv} per head
         wuk3 = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
@@ -324,7 +344,7 @@ def mla_apply(p: PyTree, x: Array, cfg: ModelConfig, *, positions: Array,
         # scores over latent cache: MQA-like (shared "key" = [c_kv, k_rope])
         q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)       # [B,T,H,Rkv+Dr]
         k_cat = jnp.concatenate([c_cache, r_cache], axis=-1)    # [B,S,Rkv+Dr]
-        valid = jnp.full((b,), cache_len + t, jnp.int32)
+        valid = _valid_len(cache_len, t, b)
         kk = k_cat[:, :, None, :]
         vv = c_cache[:, :, None, :]
         if shard_ctx is not None and t > 1:

@@ -217,8 +217,10 @@ def forward(params: PyTree, tokens: Array, cfg: ModelConfig, *,
         pe = patch_embeds.astype(x.dtype) @ params["mm_proj"]
         x = jnp.concatenate([pe, x], axis=1)
     b, t, _ = x.shape
-    base = cache_len if cache_len is not None else 0
-    positions = base + jnp.arange(t, dtype=jnp.int32)
+    base = jnp.asarray(cache_len if cache_len is not None else 0, jnp.int32)
+    # scalar base → positions [T]; per-sequence base [B] (continuous-batching
+    # slots at ragged lengths) → positions [B, T]; rope broadcasts either.
+    positions = base[..., None] + jnp.arange(t, dtype=jnp.int32)
     if cfg.pos_embedding == "learned":
         x = x + jnp.take(params["pos_embed"], positions, axis=0)
 

@@ -6,8 +6,21 @@ single pass over the vocab, or the Pallas ``softmax_topk`` kernel on TPU).
 
 Cache layout mirrors the model's segment structure: one stacked cache pytree
 per segment (leading axis = layers in the segment).  Attention caches have a
-static ``max_len``; ``cache_len`` tracks validity (continuous batching keeps
-one shared length per batch — the standard serving simplification).
+static ``max_len``; validity is tracked per sequence.  Two serving shapes sit
+on top of that layout:
+
+* **Lockstep batch** (``prefill`` + ``decode_step``): one scalar ``cache_len``
+  shared by every row — the drain-and-refill baseline, still what the dry-run
+  and the whisper path drive.
+* **Slot pool** (``chunked_prefill`` / ``write_slot`` / ``decode_step_slots``):
+  the batch axis is a pool of independent cache *slots*, each with its own
+  length in a ``[B]`` vector that flows through ``kv_valid_len`` into the
+  attention masks.  A finished slot is overwritten in place by the next
+  request's prefilled cache — continuous batching, orchestrated by
+  ``repro.serving.scheduler`` — so decode always runs at full batch occupancy
+  with ragged sequence lengths.  Sampling keys are per-slot
+  (``sample_per_slot``), which makes a slot's token stream independent of its
+  batch neighbours: the scheduler-equivalence guarantee the tests pin.
 """
 from __future__ import annotations
 
@@ -85,19 +98,27 @@ def prefill(params: PyTree, tokens: Array, cfg: ModelConfig, *,
         t + (cfg.num_patches if patch_embeds is not None else 0), jnp.int32)
 
 
+def logits_from_hidden(params: PyTree, last_hidden: Array,
+                       cfg: ModelConfig) -> Array:
+    """LM-head logits [B, V] from the last-position hidden state [B, D],
+    with padded vocab rows masked to -inf."""
+    logits = transformer.logits_last(params, last_hidden[:, None], cfg)
+    if cfg.real_vocab_size and cfg.real_vocab_size < cfg.vocab_size:
+        mask = jnp.arange(cfg.vocab_size) < cfg.real_vocab_size
+        logits = jnp.where(mask, logits, float("-inf"))
+    return logits
+
+
 def decode_step(params: PyTree, caches: list, cache_len: Array,
                 tokens: Array, cfg: ModelConfig, *, rng: Array,
                 top_k: int = 5, temperature: float = 1.0):
-    """One decode step: tokens [B, 1] → (next_token [B], new caches).
+    """One lockstep decode step: tokens [B, 1] → (next_token [B], new caches).
 
     The final vocab softmax+topk+sample is the fused single-pass form.
     """
     hidden, new_caches, _ = transformer.forward(
         params, tokens, cfg, caches=caches, cache_len=cache_len)
-    logits = transformer.logits_last(params, hidden, cfg)
-    if cfg.real_vocab_size and cfg.real_vocab_size < cfg.vocab_size:
-        mask = jnp.arange(cfg.vocab_size) < cfg.real_vocab_size
-        logits = jnp.where(mask, logits, float("-inf"))
+    logits = logits_from_hidden(params, hidden[:, -1], cfg)
     from repro.distributed import context
     ctx = context.get()
     if ctx is not None:
@@ -114,6 +135,123 @@ def decode_step(params: PyTree, caches: list, cache_len: Array,
                                        temperature=temperature,
                                        block=min(block, logits.shape[-1]))
     return next_tok, new_caches, cache_len + 1
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: slot-pool primitives.
+# ---------------------------------------------------------------------------
+def prefill_schedule(t: int, chunk: int) -> list:
+    """Chunk widths for a ``t``-token prompt: full ``chunk``s, then a binary
+    (power-of-two) decomposition of the remainder.
+
+    A jitted per-chunk forward compiles once per distinct width; naive
+    ``t % chunk`` tails would recompile the whole model for nearly every
+    prompt length mid-serving, so the tail is capped at O(log chunk) widths
+    shared by all prompts instead."""
+    sizes = []
+    rem = int(t)
+    while rem >= chunk:
+        sizes.append(chunk)
+        rem -= chunk
+    p = 1
+    while p * 2 <= rem:
+        p *= 2
+    while rem:
+        if p <= rem:
+            sizes.append(p)
+            rem -= p
+        p //= 2
+    return sizes
+
+
+def chunked_prefill(params: PyTree, tokens: Array, cfg: ModelConfig, *,
+                    max_len: int, chunk: int = 0):
+    """Prefill a prompt in chunks against a fresh cache.
+
+    ``chunk=0`` (or ≥ the prompt) degenerates to single-shot prefill.  This is
+    the canonical single-sequence prefill of the slot pool: the scheduler runs
+    the same per-chunk step (``prefill_chunk``) over the same
+    ``prefill_schedule`` interleaved with decode, so a request's cache
+    contents are identical whether it prefilled alone or while the pool was
+    busy.  Returns (last_hidden [B, D], caches, length)."""
+    b, t = tokens.shape
+    if cfg.kv_cache_dtype == "int8":
+        # int8 prefill computes on the CURRENT chunk's exact fp tensors only
+        # (the quantized prefix is never re-read during prefill), so a
+        # chunked int8 prefill would silently drop the prefix — go in whole
+        chunk = 0
+    caches = init_cache(cfg, b, max_len)
+    length = jnp.asarray(0, jnp.int32)
+    last = None
+    pos = 0
+    for c in prefill_schedule(t, chunk or t):
+        last, caches, length = prefill_chunk(
+            params, caches, length, tokens[:, pos:pos + c], cfg)
+        pos += c
+    return last, caches, length
+
+
+def prefill_chunk(params: PyTree, caches: list, cache_len: Array,
+                  tokens: Array, cfg: ModelConfig):
+    """Advance a prefill by one chunk: tokens [B, c] are written into the
+    cache at ``cache_len`` and attended causally against everything before
+    them.  Returns (last_hidden [B, D], new caches, new length)."""
+    hidden, new_caches, _ = transformer.forward(
+        params, tokens, cfg, caches=caches, cache_len=cache_len)
+    return hidden[:, -1], new_caches, cache_len + tokens.shape[1]
+
+
+def write_slot(cfg: ModelConfig, pool: list, seq: list, slot) -> list:
+    """Overwrite slot ``slot`` of the pool cache with a batch-1 sequence cache.
+
+    Both pytrees come from ``init_cache`` with the same ``max_len``; the whole
+    per-slot slice is replaced, so whatever a retired sequence left behind is
+    gone.  Stacked segment leaves carry batch on axis 1 (after the layer
+    axis); Zamba2's shared block is stored unstacked, batch on axis 0."""
+    slot = jnp.asarray(slot, jnp.int32)
+    out: list = []
+    for (kind, _), pc, sc in zip(transformer.block_pattern(cfg), pool, seq):
+        axis = 0 if kind == "shared_attn" else 1
+        out.append(jax.tree.map(
+            lambda p, s, a=axis: jax.lax.dynamic_update_slice_in_dim(
+                p, s.astype(p.dtype), slot, axis=a), pc, sc))
+    return out
+
+
+def sample_per_slot(rngs: Array, logits: Array, top_k: int,
+                    temperature: float = 1.0) -> Array:
+    """Fused softmax+top-k sampling with one PRNG key per row.
+
+    ``rngs`` [B, 2]: independent keys, so row b's token depends only on its
+    own logits and key — a slot samples the same stream at batch size 1 or N,
+    which is what makes continuous batching reproduce single-sequence decode
+    token-for-token.  The single vocab pass (paper Alg. 4) goes through the
+    dispatch registry (Pallas kernel on TPU); only the Gumbel draw is
+    per-row."""
+    if temperature != 1.0:
+        logits = logits / temperature
+    from repro.kernels import dispatch
+    out = dispatch.softmax_topk(logits, top_k)
+    k = out.values.shape[-1]
+    g = jax.vmap(lambda r: jax.random.gumbel(r, (k,), jnp.float32))(rngs)
+    return core.gumbel_pick(out, g)
+
+
+def decode_step_slots(params: PyTree, caches: list, slot_lens: Array,
+                      tokens: Array, cfg: ModelConfig, *, rngs: Array,
+                      top_k: int = 5, temperature: float = 1.0):
+    """One decode step over the whole slot pool: tokens [B, 1], per-slot
+    lengths [B] → (next_token [B], new caches, slot_lens + 1).
+
+    Every slot advances by one position at its own offset; masking comes from
+    the ``kv_valid_len`` vector, so ragged sequences coexist in one fused
+    batch — the full-occupancy regime where the single-pass softmax's memory
+    savings actually pay (ISSUE 2 / Dukhan & Ablavatski 2020)."""
+    hidden, new_caches, _ = transformer.forward(
+        params, tokens, cfg, caches=caches, cache_len=slot_lens)
+    logits = logits_from_hidden(params, hidden[:, -1], cfg)
+    next_tok = sample_per_slot(rngs, logits, top_k, temperature)
+    return next_tok, new_caches, slot_lens + 1
 
 
 # ---------------------------------------------------------------------------

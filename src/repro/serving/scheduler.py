@@ -1,0 +1,442 @@
+"""Continuous-batching scheduler: request queue, slot-based KV pool, and an
+interleaved prefill/decode loop.
+
+The decode hot path — vocab projection + fused online-softmax top-k (paper
+§4) — only realizes its memory-access savings when decode steps run at full
+batch occupancy.  A lockstep batch can't do that: it drains until its longest
+member finishes, leaving slots idle.  This scheduler keeps the batch full:
+
+* **SlotPool** — a fixed pool of KV-cache slots (one batch row each) with a
+  per-slot length vector.  Finished slots are overwritten in place by the
+  next request's prefilled cache; nothing ever waits for the batch to drain.
+* **Admission** — FIFO by arrival tick (ties broken by submission order).  A
+  request is admitted when (a) it has arrived, (b) a slot is free, and (c) no
+  other prefill is in flight (one prefill at a time bounds the decode stall a
+  new request can inflict — the latency-aware part).  Its prompt then prefills **chunked**,
+  interleaved with decode: the per-tick chunk budget scales with the number
+  of idle slots (a nearly-full pool prefills one chunk per decode step to
+  bound the stall; idle slots cost more tokens than a longer stall, so a
+  drained pool prefills faster), and runs flat out when nothing is decoding.
+  Time-to-first-token for queued work thus overlaps token generation for
+  running work.
+* **Eviction** — a sequence is retired when it has produced its
+  ``max_new_tokens``, emits ``eos_id``, or its slot is full
+  (``len == slot_len``; recorded as ``evicted`` — the capacity backstop).
+  Retirement frees the slot in the same tick, so the next queued request is
+  admitted without interrupting anyone else.
+
+Determinism: a request's sample stream is keyed by (base_rng, request id,
+token index) and sampling is per-slot (``engine.sample_per_slot``), so the
+tokens a request produces are identical to running it alone through the
+single-sequence decode path — regardless of arrival order, batch neighbours,
+or how its prefill was chunked.  ``tests/test_serving_continuous.py`` pins
+this equivalence.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving import engine
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Requests and results.
+# ---------------------------------------------------------------------------
+@dataclass(eq=False)                    # identity semantics: ndarray fields
+class Request:                          # make generated __eq__ a crash hazard
+    """One generation request.  ``arrival_tick``: the scheduler tick at which
+    the request becomes visible (0 = already waiting)."""
+    rid: int
+    prompt: np.ndarray                  # [T] token ids
+    max_new_tokens: int
+    arrival_tick: int = 0
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: list = field(default_factory=list)
+    token_times: list = field(default_factory=list)   # wall-clock per token
+    arrival_time: float = 0.0           # wall-clock when first seen arrived
+    finish_time: float = 0.0
+    evicted: bool = False               # retired by the slot-capacity backstop
+
+    @property
+    def latencies(self) -> list:
+        """Per-token latency: first token from arrival, rest inter-token."""
+        prev = self.arrival_time
+        out = []
+        for t in self.token_times:
+            out.append(t - prev)
+            prev = t
+        return out
+
+
+@dataclass
+class ServeReport:
+    results: list                       # RequestResult, by completion order
+    decode_steps: int
+    prefill_chunks: int
+    occupancy: float                    # mean active-slot fraction per decode step
+    wall_time: float
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(len(r.tokens) for r in self.results)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / max(self.wall_time, 1e-9)
+
+    def latency_percentiles(self, qs=(50, 95)) -> dict:
+        lats = [l for r in self.results for l in r.latencies]
+        if not lats:
+            return {f"p{q}": 0.0 for q in qs}
+        return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+    def baseline_occupancy(self, num_slots: int) -> float:
+        """Drain-and-refill bound on THIS workload, batched in the recorded
+        arrival order (completion order would regroup similar lengths and
+        misstate the bound — every report consumer should call this rather
+        than re-deriving the ordering)."""
+        ordered = sorted(self.results,
+                         key=lambda r: (r.arrival_time, r.rid))
+        return drain_and_refill_occupancy(
+            [len(r.tokens) for r in ordered], num_slots)
+
+
+def drain_and_refill_occupancy(decode_lens, num_slots: int) -> float:
+    """Slot-step occupancy of the lockstep baseline on the same workload:
+    batches of up to ``num_slots`` requests (pass ``decode_lens`` in ARRIVAL
+    order — completion order would regroup similar lengths and misstate the
+    bound) decode until the LONGEST member finishes, then the whole batch is
+    swapped.  This is the bound the continuous scheduler has to beat."""
+    decode_lens = list(decode_lens)
+    if not decode_lens:
+        return 0.0
+    steps = 0
+    for i in range(0, len(decode_lens), num_slots):
+        steps += max(decode_lens[i:i + num_slots])
+    return sum(decode_lens) / float(steps * num_slots)
+
+
+# ---------------------------------------------------------------------------
+# Compiled step functions — shared across scheduler instances via lru_cache
+# (ModelConfig is frozen/hashable), so a fresh scheduler (or a benchmark's
+# warmup instance) reuses already-compiled code instead of re-jitting.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _jitted_write(cfg: ModelConfig):
+    return jax.jit(
+        lambda pool, seq, slot: engine.write_slot(cfg, pool, seq, slot),
+        donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_steps(cfg: ModelConfig, top_k: int, temperature: float):
+    def decode(params, caches, lens, tokens, rids, produced, base_rng):
+        # per-slot keys folded INSIDE the jit: one dispatch per tick instead
+        # of 2B host-side fold_ins (bit-identical to the eager fold_in the
+        # single-sequence reference path uses)
+        keys = jax.vmap(lambda r, p: jax.random.fold_in(
+            jax.random.fold_in(base_rng, r), p))(rids, produced)
+        return engine.decode_step_slots(params, caches, lens, tokens, cfg,
+                                        rngs=keys, top_k=top_k,
+                                        temperature=temperature)
+
+    return (jax.jit(decode, donate_argnums=(1,)),
+            jax.jit(functools.partial(engine.prefill_chunk, cfg=cfg),
+                    donate_argnums=(1,)),
+            jax.jit(functools.partial(engine.logits_from_hidden, cfg=cfg)),
+            jax.jit(functools.partial(engine.sample_per_slot, top_k=top_k,
+                                      temperature=temperature)))
+
+
+# ---------------------------------------------------------------------------
+# Slot pool.
+# ---------------------------------------------------------------------------
+class SlotPool:
+    """Fixed pool of per-sequence KV-cache slots with a [num_slots] length
+    vector — the thing that replaces the lockstep batch's shared scalar."""
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, slot_len: int):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.slot_len = slot_len
+        self.caches = engine.init_cache(cfg, num_slots, slot_len)
+        self.lens = jnp.zeros((num_slots,), jnp.int32)
+        self._free = deque(range(num_slots))
+        self._write = _jitted_write(cfg)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        return self._free.popleft() if self._free else None
+
+    def release(self, slot: int) -> None:
+        self.lens = self.lens.at[slot].set(0)
+        self._free.append(slot)
+
+    def insert(self, slot: int, seq_caches: list, length: int) -> None:
+        """Overwrite ``slot`` with a prefilled batch-1 cache of ``length``."""
+        self.caches = self._write(self.caches, seq_caches, jnp.int32(slot))
+        self.lens = self.lens.at[slot].set(length)
+
+
+# ---------------------------------------------------------------------------
+# The scheduler.
+# ---------------------------------------------------------------------------
+@dataclass
+class _InFlight:
+    req: Request
+    result: RequestResult
+    slot: int = -1
+    produced: int = 0                   # tokens sampled so far (keys the rng)
+    remaining: int = 0
+
+
+class ContinuousScheduler:
+    """Drives the slot pool: admission → chunked prefill → pooled decode.
+
+    One ``tick()`` = admit what fits, advance the in-flight prefill by one
+    chunk, run one decode step over every slot.  ``run()`` loops until the
+    queue, the prefill, and the pool are all empty.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
+                 slot_len: int, prefill_chunk: int = 32, top_k: int = 5,
+                 temperature: float = 1.0, base_rng: Optional[Array] = None,
+                 eos_id: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.pool = SlotPool(cfg, num_slots, slot_len)
+        self.prefill_chunk = max(1, prefill_chunk)
+        # int8 caches prefill on the exact fp tensors of the CURRENT chunk
+        # only (layers.attention_apply), so their prompts must go in whole
+        self._single_shot_prefill = cfg.kv_cache_dtype == "int8"
+        self.top_k = top_k
+        self.temperature = temperature
+        self.base_rng = (base_rng if base_rng is not None
+                         else jax.random.PRNGKey(0))
+        self.eos_id = eos_id
+
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, _InFlight] = {}         # slot → in-flight
+        self._prefill: Optional[dict] = None           # in-progress prefill
+        self._arrival_times: dict[int, float] = {}     # rid → wall-clock seen
+        self._seen_rids: set[int] = set()
+        self.finished: list[RequestResult] = []
+        self.tick_count = 0
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+        self._occupancy_sum = 0.0
+        self.tokens = jnp.zeros((num_slots,), jnp.int32)
+        (self._decode, self._prefill_step, self._logits,
+         self._sample) = _jitted_steps(cfg, top_k, float(temperature))
+
+    # -- rng ----------------------------------------------------------------
+    def _key(self, rid: int, token_index: int) -> Array:
+        return jax.random.fold_in(
+            jax.random.fold_in(self.base_rng, rid), token_index)
+
+    # -- API ----------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens must be ≥ 1 "
+                             f"(got {req.max_new_tokens})")
+        if len(req.prompt) >= self.pool.slot_len:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} cannot fit a "
+                f"slot of {self.pool.slot_len} with room to decode")
+        if req.rid in self._seen_rids:
+            raise ValueError(f"duplicate request id {req.rid}: rids key the "
+                             "sample streams and result bookkeeping")
+        self._seen_rids.add(req.rid)
+        self.queue.append(req)
+
+    def tick(self) -> None:
+        self.tick_count += 1
+        now = time.monotonic()
+        for r in self.queue:           # stamp arrivals BEFORE admission, so
+            if (r.arrival_tick <= self.tick_count     # queue wait is counted
+                    and r.rid not in self._arrival_times):
+                self._arrival_times[r.rid] = now
+        self._admit()
+        self._advance_prefill()
+        self._decode_tick()
+
+    def run(self, requests=None, *, max_ticks: int = 100_000) -> ServeReport:
+        t0 = time.monotonic()
+        for r in (requests or ()):
+            self.submit(r)
+        while self.queue or self.active or self._prefill:
+            if self.tick_count >= max_ticks:
+                raise RuntimeError(f"scheduler wedged after {max_ticks} ticks")
+            self.tick()
+        wall = time.monotonic() - t0
+        occ = (self._occupancy_sum / self.decode_steps
+               if self.decode_steps else 0.0)
+        return ServeReport(results=self.finished,
+                           decode_steps=self.decode_steps,
+                           prefill_chunks=self.prefill_chunks,
+                           occupancy=occ, wall_time=wall)
+
+    # -- admission ----------------------------------------------------------
+    def _admit(self) -> None:
+        if self._prefill is not None or not self.queue:
+            return
+        if self.pool.free_slots == 0:
+            return
+        # FIFO by arrival (ties by submission order): a late-arriving request
+        # submitted early must not head-of-line-block one already waiting
+        arrived = [r for r in self.queue if r.arrival_tick <= self.tick_count]
+        if not arrived:
+            return
+        req = min(arrived, key=lambda r: r.arrival_tick)
+        self.queue.remove(req)
+        result = RequestResult(
+            rid=req.rid, prompt_len=len(req.prompt),
+            arrival_time=self._arrival_times[req.rid])
+        self._prefill = {
+            "flight": _InFlight(req=req, result=result,
+                                remaining=req.max_new_tokens),
+            "caches": engine.init_cache(self.cfg, 1, self.pool.slot_len),
+            "length": jnp.asarray(0, jnp.int32),
+            "pos": 0,
+            # same schedule as chunked_prefill → same cache contents as a
+            # solo prefill, and only O(log chunk) compiled tail widths
+            "sizes": deque([len(req.prompt)] if self._single_shot_prefill
+                           else engine.prefill_schedule(len(req.prompt),
+                                                        self.prefill_chunk)),
+            "last": None,
+        }
+
+    # -- prefill ------------------------------------------------------------
+    def _advance_prefill(self) -> None:
+        if self._prefill is None:
+            return
+        # latency/occupancy tradeoff: one chunk per tick while the pool is
+        # nearly full (bounded decode stall), proportionally more when slots
+        # sit idle — idle slots cost more tokens than a longer stall — and
+        # everything at once when nobody is waiting on decode
+        budget = max(1, self.pool.free_slots) if self.active else 10 ** 9
+        pf = self._prefill
+        prompt = pf["flight"].req.prompt
+        while budget > 0 and pf["sizes"]:
+            width = pf["sizes"].popleft()
+            chunk = np.asarray(prompt[pf["pos"]:pf["pos"] + width])[None, :]
+            pf["last"], pf["caches"], pf["length"] = self._prefill_step(
+                self.params, pf["caches"], pf["length"], jnp.asarray(chunk))
+            pf["pos"] += width
+            self.prefill_chunks += 1
+            budget -= 1
+        if pf["sizes"]:
+            return
+        self._finish_prefill()
+
+    def _finish_prefill(self) -> None:
+        pf = self._prefill
+        self._prefill = None
+        flight: _InFlight = pf["flight"]
+        rid = flight.req.rid
+        logits = self._logits(self.params, pf["last"])
+        tok = self._sample(self._key(rid, 0)[None], logits)
+        self._record_token(flight, int(tok[0]))
+        if flight.remaining <= 0 or self._hit_eos(flight):
+            self._finish(flight)
+            return
+        slot = self.pool.acquire()
+        assert slot is not None          # _admit gated on a free slot
+        self.pool.insert(slot, pf["caches"], int(pf["length"]))
+        self.tokens = self.tokens.at[slot].set(int(tok[0]))
+        flight.slot = slot
+        self.active[slot] = flight
+
+    # -- decode -------------------------------------------------------------
+    def _decode_tick(self) -> None:
+        if not self.active:
+            return
+        rids = np.full((self.pool.num_slots,), -1, np.int32)   # -1: idle slot
+        produced = np.zeros((self.pool.num_slots,), np.int32)  # (sample dropped)
+        active_mask = np.zeros((self.pool.num_slots,), bool)
+        for s, flight in self.active.items():
+            rids[s] = flight.req.rid
+            produced[s] = flight.produced
+            active_mask[s] = True
+        tok, self.pool.caches, new_lens = self._decode(
+            self.params, self.pool.caches, self.pool.lens,
+            self.tokens[:, None], jnp.asarray(rids), jnp.asarray(produced),
+            self.base_rng)
+        # idle slots don't age: their garbage write lands at 0 and is fully
+        # overwritten by the next insert
+        self.pool.lens = jnp.where(jnp.asarray(active_mask), new_lens, 0)
+        self.tokens = tok
+        self.decode_steps += 1
+        self._occupancy_sum += len(self.active) / self.pool.num_slots
+        tok_host = np.asarray(tok)
+        lens_host = np.asarray(self.pool.lens)     # one sync, not per slot
+        for slot in list(self.active):
+            flight = self.active[slot]
+            self._record_token(flight, int(tok_host[slot]))
+            slot_full = int(lens_host[slot]) >= self.pool.slot_len
+            if flight.remaining <= 0 or self._hit_eos(flight) or slot_full:
+                flight.result.evicted = (slot_full and flight.remaining > 0
+                                         and not self._hit_eos(flight))
+                self._finish(flight)
+
+    # -- bookkeeping --------------------------------------------------------
+    def _record_token(self, flight: _InFlight, token: int) -> None:
+        flight.result.tokens.append(token)
+        flight.result.token_times.append(time.monotonic())
+        flight.produced += 1
+        flight.remaining -= 1
+
+    def _hit_eos(self, flight: _InFlight) -> bool:
+        return (self.eos_id is not None and flight.result.tokens
+                and flight.result.tokens[-1] == self.eos_id)
+
+    def _finish(self, flight: _InFlight) -> None:
+        flight.result.finish_time = time.monotonic()
+        self.finished.append(flight.result)
+        if flight.slot >= 0:
+            del self.active[flight.slot]
+            self.pool.release(flight.slot)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic workloads.
+# ---------------------------------------------------------------------------
+def poisson_workload(n_requests: int, *, rate_per_tick: float,
+                     prompt_lens=(8, 32), decode_lens=(4, 32),
+                     vocab: int = 1000, seed: int = 0) -> list:
+    """Staggered synthetic requests: Poisson arrivals (exponential
+    inter-arrival gaps in scheduler ticks), uniform prompt/decode lengths."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += rng.exponential(1.0 / max(rate_per_tick, 1e-9))
+        out.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab, rng.integers(prompt_lens[0],
+                                                       prompt_lens[1] + 1)),
+            max_new_tokens=int(rng.integers(decode_lens[0],
+                                            decode_lens[1] + 1)),
+            arrival_tick=int(t)))
+    return out

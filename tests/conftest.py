@@ -20,6 +20,15 @@ for p in (_SRC, _TESTS_DIR):
     if p not in sys.path:
         sys.path.insert(0, p)
 
+# Hermetic autotune persistence: the dispatch registry reads this env var at
+# import and writes to it on every new decision.  Point it at a per-run temp
+# file (unless the caller pinned one) so the suite neither pollutes nor reads
+# the developer's real ~/.cache/repro/autotune.json.
+if "REPRO_AUTOTUNE_CACHE" not in os.environ:
+    import tempfile
+    os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+        tempfile.gettempdir(), f"repro_autotune_test_{os.getpid()}.json")
+
 
 def pytest_report_header(config):
     try:

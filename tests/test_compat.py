@@ -188,6 +188,101 @@ def test_ops_pick_up_tuned_block():
 
 
 # ---------------------------------------------------------------------------
+# Autotune persistence: decisions survive the process (ROADMAP item).
+# ---------------------------------------------------------------------------
+def test_block_decisions_persist_and_reload(tmp_path, monkeypatch):
+    """A restart (simulated: reset + load) must skip the sweep entirely."""
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV, path)
+    dispatch.reset_autotune_cache()
+    d1 = dispatch.block_decision(384, jnp.float32)
+    assert os.path.exists(path)
+    dispatch.reset_autotune_cache()
+    assert dispatch.load_persisted_decisions() >= 1
+    d2 = dispatch.block_decision(384, jnp.float32)
+    assert dispatch.autotune_stats()["sweeps"] == 0      # disk hit, no sweep
+    assert (d2.block, d2.backend, d2.dtype) == (d1.block, d1.backend, d1.dtype)
+    dispatch.reset_autotune_cache()
+
+
+def test_autotune_cache_env_empty_disables_persistence(monkeypatch):
+    monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV, "")
+    assert dispatch.autotune_cache_path() is None
+    assert dispatch.load_persisted_decisions() == 0
+    assert not dispatch.save_persisted_decisions()
+
+
+def test_corrupt_autotune_cache_never_breaks_dispatch(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    path.write_text("{this is not json")
+    monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV, str(path))
+    assert dispatch.load_persisted_decisions() == 0
+    dispatch.reset_autotune_cache()
+    dispatch.block_decision(320, jnp.float32)            # sweeps, then saves
+    import json as _json
+    with open(path) as f:
+        saved = _json.load(f)
+    assert any(int(b["vocab"]) == 320 for b in saved["blocks"])
+    dispatch.reset_autotune_cache()
+
+
+def test_fresh_process_loads_persisted_decisions(tmp_path, monkeypatch):
+    """The import-time load: a new interpreter sees the saved decisions."""
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV, path)
+    dispatch.reset_autotune_cache()
+    dispatch.block_decision(448, jnp.float32)
+    dispatch.reset_autotune_cache()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    env[dispatch.AUTOTUNE_CACHE_ENV] = path
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.kernels import dispatch as d; "
+         "print(d.autotune_stats()['entries'])"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert int(out.stdout.strip()) >= 1
+
+
+# ---------------------------------------------------------------------------
+# Attention tile seam: no hard-coded bq/bk in ops.py (ROADMAP item).
+# ---------------------------------------------------------------------------
+def test_attention_tiles_resolve_through_registry(tmp_path, monkeypatch):
+    monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV, str(tmp_path / "t.json"))
+    dispatch.reset_autotune_cache()
+    tiles = dispatch.attention_tiles("flash_attention", kv_len=64, head_dim=16)
+    assert set(tiles) == {"bq", "bk"} and all(v > 0 for v in tiles.values())
+    td = dispatch.attention_tiles("flash_decode", kv_len=64, head_dim=16)
+    assert td["bk"] > 0
+    assert dispatch.tile_stats()["entries"] == 2
+    assert dispatch.attention_tiles(
+        "flash_decode", kv_len=64, head_dim=16) == td   # cache hit
+    assert dispatch.tile_stats()["entries"] == 2
+    dispatch.reset_autotune_cache()
+
+
+def test_ops_attention_defaults_come_from_registry():
+    """flash_attention / flash_decode with tiles unset must run through the
+    dispatch seam (and still compute correct attention)."""
+    from repro.kernels import ops
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 8))
+    out = ops.flash_attention(q, q, q, causal=True)      # bq/bk unset
+    want = core.naive_attention(q, q, q, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    kc = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 1, 8))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 1, 8))
+    qd = jax.random.normal(jax.random.PRNGKey(3), (2, 2, 8))
+    vlen = jnp.asarray([5, 16], jnp.int32)
+    od = ops.flash_decode(qd, kc, vc, vlen)              # bk unset
+    want_d = core.naive_attention(qd[:, None], kc, vc, causal=False,
+                                  kv_valid_len=vlen)[:, 0]
+    np.testing.assert_allclose(np.asarray(od), np.asarray(want_d),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # Benchmark harness smoke mode (CI tooling).
 # ---------------------------------------------------------------------------
 def test_benchmarks_smoke_mode():
@@ -205,3 +300,27 @@ def test_benchmarks_smoke_mode():
     for row in lines[1:]:
         name, us, _ = row.split(",", 2)
         assert float(us) > 0, row
+
+
+def test_benchmarks_serving_smoke_records_json(tmp_path):
+    """The serving benchmark smoke path: tokens/s + latency percentiles land
+    in a results JSON (first step toward the EXPERIMENTS.md diffing report)."""
+    import json as _json
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    json_path = str(tmp_path / "results.json")
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "--smoke", "serving", "--json", json_path],
+        env=env, capture_output=True, text=True, timeout=600, cwd=REPO)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    with open(json_path) as f:
+        data = _json.load(f)
+    names = {r["name"] for r in data["rows"]}
+    assert {"serving/smoke/per_token", "serving/smoke/p50_latency",
+            "serving/smoke/p95_latency",
+            "serving/smoke/occupancy_pct"} <= names
+    assert data["smoke"] is True
+    assert data["env"]["backend"] in ("cpu", "gpu", "tpu")
+    for r in data["rows"]:
+        assert r["us_per_call"] > 0, r

@@ -1,0 +1,240 @@
+"""Continuous-batching serving subsystem: scheduler equivalence and policy.
+
+The load-bearing guarantee: the tokens a request produces under continuous
+batching — admitted into a shared slot pool, prefilled in chunks between
+other sequences' decode steps, decoded at full batch occupancy next to ragged
+neighbours — are IDENTICAL to running that request alone through the
+single-sequence decode path.  Sampling keys are per-(request, token index)
+and ``engine.sample_per_slot`` draws per-row, so batch composition cannot
+leak into any request's stream.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import layers as L, transformer
+from repro.serving import engine, scheduler
+
+SLOT_LEN = 48
+CHUNK = 8
+TOP_K = 5
+BASE_RNG = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("smollm_360m")
+    params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
+    return params, cfg
+
+
+def _key(rid, step):
+    return jax.random.fold_in(jax.random.fold_in(BASE_RNG, rid), step)
+
+
+def _single_sequence_decode(params, cfg, req):
+    """The request alone: chunked prefill + per-slot decode at batch size 1."""
+    last, caches, ln = engine.chunked_prefill(
+        params, jnp.asarray(req.prompt)[None], cfg, max_len=SLOT_LEN,
+        chunk=CHUNK)
+    logits = engine.logits_from_hidden(params, last, cfg)
+    tok = engine.sample_per_slot(_key(req.rid, 0)[None], logits, TOP_K)
+    tokens = [int(tok[0])]
+    lens = jnp.asarray([int(ln)], jnp.int32)
+    for step in range(1, req.max_new_tokens):
+        tok, caches, lens = engine.decode_step_slots(
+            params, caches, lens, tok[:, None], cfg,
+            rngs=_key(req.rid, step)[None], top_k=TOP_K)
+        tokens.append(int(tok[0]))
+    return tokens
+
+
+def _workload(pattern):
+    """≥ 8 requests, all prompt lengths distinct, mixed decode budgets."""
+    rng = np.random.default_rng(11)
+    prompt_lens = [4, 6, 7, 9, 11, 13, 16, 18]
+    decode_lens = [5, 3, 7, 4, 6, 3, 5, 4]
+    arrivals = {
+        "burst": [0] * 8,                       # everyone at once
+        "staggered": [0, 0, 1, 2, 4, 5, 7, 9],  # trickling in mid-flight
+        "reversed": [0, 8, 7, 6, 5, 4, 3, 2],   # later rids arrive earlier
+    }[pattern]
+    return [scheduler.Request(
+        rid=i, prompt=rng.integers(0, 512, p), max_new_tokens=d,
+        arrival_tick=a)
+        for i, (p, d, a) in enumerate(zip(prompt_lens, decode_lens, arrivals))]
+
+
+@pytest.mark.parametrize("pattern", ["burst", "staggered", "reversed"])
+def test_continuous_batching_matches_single_sequence(model, pattern):
+    params, cfg = model
+    requests = _workload(pattern)
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=3, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG)
+    report = sched.run(requests)
+    assert len(report.results) == len(requests)
+    by_rid = {r.rid: r for r in report.results}
+    for req in requests:
+        want = _single_sequence_decode(params, cfg, req)
+        got = by_rid[req.rid]
+        assert got.tokens == want, (
+            f"request {req.rid} diverged under {pattern} arrivals:"
+            f" pool={got.tokens} alone={want}")
+        assert len(got.tokens) == req.max_new_tokens
+        assert not got.evicted
+
+
+def test_no_drain_between_requests(model):
+    """A finished slot is reused without waiting for the batch to empty:
+    with more requests than slots the pool must overlap generations."""
+    params, cfg = model
+    requests = _workload("burst")
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=2, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG)
+    report = sched.run(requests)
+    assert len(report.results) == 8
+    # lockstep would need sum over batches of max(decode); continuous decode
+    # steps must come in strictly under serialized execution
+    assert report.decode_steps < sum(len(r.tokens) for r in report.results)
+
+
+def test_occupancy_beats_drain_and_refill(model):
+    """The acceptance bar: under a backlogged staggered workload the pool
+    stays fuller than the lockstep schedule's slot-step occupancy."""
+    params, cfg = model
+    requests = scheduler.poisson_workload(
+        12, rate_per_tick=3.0, prompt_lens=(4, 16), decode_lens=(2, 16),
+        vocab=512, seed=5)
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=3, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG)
+    report = sched.run(requests)
+    baseline = report.baseline_occupancy(3)
+    assert report.occupancy > baseline, (report.occupancy, baseline)
+    pct = report.latency_percentiles((50, 95))
+    assert 0 < pct["p50"] <= pct["p95"]
+    assert report.tokens_per_s > 0
+
+
+def test_eviction_at_slot_capacity(model):
+    """A sequence that would outgrow its slot is retired by the capacity
+    backstop and flagged ``evicted``; everyone else is unaffected."""
+    params, cfg = model
+    small = 24
+    requests = [
+        scheduler.Request(rid=0, prompt=np.arange(10) % 512,
+                          max_new_tokens=100),          # wants > slot space
+        scheduler.Request(rid=1, prompt=np.arange(5) % 512,
+                          max_new_tokens=4),
+    ]
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=2, slot_len=small, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG)
+    report = sched.run(requests)
+    by_rid = {r.rid: r for r in report.results}
+    assert by_rid[0].evicted
+    # prompt 10 + first token + (slot_len - prompt - 1) decode writes
+    assert len(by_rid[0].tokens) == small - 10 + 1
+    assert not by_rid[1].evicted
+    assert len(by_rid[1].tokens) == 4
+
+
+def test_invalid_submissions_rejected(model):
+    params, cfg = model
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=1, slot_len=16, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG)
+    with pytest.raises(ValueError, match="cannot fit"):
+        sched.submit(scheduler.Request(rid=0, prompt=np.zeros(16, np.int64),
+                                       max_new_tokens=2))
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(scheduler.Request(rid=1, prompt=np.zeros(0, np.int64),
+                                       max_new_tokens=2))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit(scheduler.Request(rid=3, prompt=np.zeros(4, np.int64),
+                                       max_new_tokens=0))
+    sched.submit(scheduler.Request(rid=2, prompt=np.zeros(4, np.int64),
+                                   max_new_tokens=2))
+    with pytest.raises(ValueError, match="duplicate request id"):
+        sched.submit(scheduler.Request(rid=2, prompt=np.zeros(5, np.int64),
+                                       max_new_tokens=2))
+
+
+def test_eos_retires_request_without_evicted_flag(model):
+    """Retirement on eos_id: the request stops at its first eos token, is
+    not flagged evicted, and (per the equivalence guarantee) every other
+    request's stream is untouched by the early exit."""
+    params, cfg = model
+    requests = _workload("burst")[:4]
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=2, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG)
+    streams = {r.rid: r.tokens for r in sched.run(requests).results}
+    # pick a token some request emits that no OTHER stream contains, so eos
+    # retires exactly one request and leaves the rest comparable
+    target = eos = None
+    for rid, toks in streams.items():
+        unique = [t for t in toks
+                  if all(t not in o for orid, o in streams.items()
+                         if orid != rid)]
+        if unique:
+            target, eos = rid, unique[0]
+            break
+    assert target is not None, streams
+    cut = streams[target].index(eos)
+    sched2 = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=2, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG, eos_id=int(eos))
+    by_rid = {r.rid: r for r in sched2.run(requests).results}
+    assert by_rid[target].tokens == streams[target][:cut + 1]
+    assert not by_rid[target].evicted
+    for rid, toks in streams.items():
+        if rid != target:
+            assert by_rid[rid].tokens == toks
+
+
+def test_chunked_prefill_correct_under_pallas_preference(model):
+    """Cached chunked prefill must never route to the offset-less Pallas
+    flash kernel: its causal mask uses chunk-local query positions, so the
+    second chunk would mask out the entire already-prefilled prefix.  The
+    dispatch rule (prefill-with-kv_valid_len → chunked XLA form) keeps a
+    use_pallas config bit-identical to the plain one here."""
+    params, cfg = model
+    prompt = jnp.asarray(np.arange(12)[None] % 512)
+    ref_last, _, _ = engine.chunked_prefill(params, prompt, cfg,
+                                            max_len=32, chunk=5)
+    got_last, _, _ = engine.chunked_prefill(params, prompt,
+                                            cfg.replace(use_pallas=True),
+                                            max_len=32, chunk=5)
+    np.testing.assert_allclose(np.asarray(got_last), np.asarray(ref_last),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_slot_pool_acquire_release_insert(model):
+    params, cfg = model
+    pool = scheduler.SlotPool(cfg, num_slots=2, slot_len=16)
+    assert pool.free_slots == 2
+    s0, s1 = pool.acquire(), pool.acquire()
+    assert {s0, s1} == {0, 1} and pool.acquire() is None
+    prompt = jnp.arange(6)[None] % 512
+    _, seq, ln = engine.chunked_prefill(params, prompt, cfg, max_len=16)
+    pool.insert(s1, seq, int(ln))
+    assert int(pool.lens[s1]) == 6 and int(pool.lens[s0]) == 0
+    # the inserted slice must equal the sequence cache, slot-for-slot
+    got = jax.tree.leaves(pool.caches[0])[0][:, s1]
+    want = jax.tree.leaves(seq[0])[0][:, 0]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    pool.release(s1)
+    assert pool.free_slots == 1 and int(pool.lens[s1]) == 0
+
+
+def test_drain_and_refill_occupancy_math():
+    # two batches of 2: steps = 8 + 6, busy = 8+2+6+4 → 20/28
+    assert scheduler.drain_and_refill_occupancy([8, 2, 6, 4], 2) == \
+        pytest.approx(20 / 28)
+    assert scheduler.drain_and_refill_occupancy([5, 5, 5, 5], 4) == 1.0
+    assert scheduler.drain_and_refill_occupancy([], 4) == 0.0
