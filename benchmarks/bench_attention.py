@@ -1,12 +1,20 @@
 """Beyond-paper: online (chunked) attention vs naive attention — the paper's
 ⊕ recurrence is what makes the chunked form exact.  Forward and fwd+bwd, with
-the naive path's materialized-score memory as the derived column."""
+the naive path's materialized-score memory as the derived column.
+
+Also recorded: the serving-prefill comparison — cached chunked prefill at
+``q_offset > 0`` on the offset-aware Pallas flash kernel vs the chunked XLA
+form (the two sides of the PR-3 dispatch routing decision).  On a host
+without native Pallas lowering the kernel runs in interpret mode; the derived
+column records which, so cross-machine diffs (``run.py report``) aren't read
+as kernel regressions."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
+from repro import compat
 from repro.core import naive_attention, online_attention
 
 CASES = [
@@ -17,9 +25,41 @@ CASES = [
 ]
 SMOKE_CASES = [(1, 256, 4, 2, 32, 64)]
 
+# cached prefill: (B, chunk_t, S_cache, Hq, Hkv, Dh, q_offset)
+PREFILL_CASES = [
+    (4, 32, 2048, 8, 2, 64, 1024),
+    (8, 64, 4096, 8, 2, 64, 2048),
+]
+PREFILL_SMOKE = [(2, 8, 128, 4, 2, 32, 64)]
+
+
+def _prefill_rows(smoke: bool) -> list[tuple]:
+    """Pallas (offset kernel) vs chunked XLA on the cached-prefill shape."""
+    from repro.kernels import ops
+    mode = "pallas" if compat.pallas_native() else "pallas-interpret"
+    rows = []
+    for b, t, s, hq, hkv, dh, off in (PREFILL_SMOKE if smoke
+                                      else PREFILL_CASES):
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = jax.random.normal(ks[0], (b, t, hq, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, hkv, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, hkv, dh), jnp.float32)
+        qoff = jnp.full((b,), off, jnp.int32)
+        vlen = qoff + t
+        tag = f"attention/prefill_S={s}_t={t}_off={off}"
+        pallas_f = jax.jit(lambda q, k, v: ops.flash_attention(
+            q, k, v, causal=True, q_offset=qoff, kv_valid_len=vlen))
+        xla_f = jax.jit(lambda q, k, v: online_attention(
+            q, k, v, causal=True, q_offset=qoff, kv_valid_len=vlen,
+            chunk_size=min(512, s)))
+        rows.append((f"{tag}/pallas_fwd", time_fn(pallas_f, q, k, v), mode))
+        rows.append((f"{tag}/xla_chunked_fwd", time_fn(xla_f, q, k, v),
+                     "chunked-xla"))
+    return rows
+
 
 def run(smoke: bool = False) -> list[tuple]:
-    rows = []
+    rows = _prefill_rows(smoke)
     for b, t, hq, hkv, dh, chunk in (SMOKE_CASES if smoke else CASES):
         ks = jax.random.split(jax.random.PRNGKey(3), 3)
         q = jax.random.normal(ks[0], (b, t, hq, dh), jnp.float32)

@@ -12,8 +12,12 @@ Prints ``name,us_per_call,derived`` CSV:
 ``--smoke`` shrinks every sweep to a seconds-long sanity pass (tiny V/batch,
 one case per module) — the tier-1 suite runs it so the harness itself can't
 rot between full benchmark runs.  ``--json PATH`` additionally records the
-rows plus the probed backend capabilities to a results file (the input format
-the EXPERIMENTS.md results-diffing report will consume).
+rows plus the probed backend capabilities to a results file.
+
+``report A.json B.json`` diffs two such result files into an
+EXPERIMENTS.md-style markdown table (name | baseline | candidate | Δ%),
+flagging rows present on only one side and any env mismatch — paste it into
+EXPERIMENTS.md as the record of a before/after run.
 """
 from __future__ import annotations
 
@@ -30,7 +34,71 @@ for _p in (_REPO, os.path.join(_REPO, "src")):
         sys.path.insert(0, _p)
 
 
+def _load_results(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or "rows" not in data:
+        raise SystemExit(f"{path}: not a benchmarks/run.py --json results "
+                         "file (no 'rows')")
+    return data
+
+
+def report(baseline_path: str, candidate_path: str, out=None) -> str:
+    """Markdown diff of two ``--json`` result files (EXPERIMENTS.md-style)."""
+    base = _load_results(baseline_path)
+    cand = _load_results(candidate_path)
+    b_rows = {r["name"]: r for r in base["rows"]}
+    c_rows = {r["name"]: r for r in cand["rows"]}
+    lines = [f"## Benchmark diff — {os.path.basename(baseline_path)} → "
+             f"{os.path.basename(candidate_path)}", ""]
+    env_keys = sorted(set(base.get("env", {})) | set(cand.get("env", {})))
+    if env_keys:
+        lines += ["| env | baseline | candidate |", "|---|---|---|"]
+        for k in env_keys:
+            bv = base.get("env", {}).get(k, "—")
+            cv = cand.get("env", {}).get(k, "—")
+            flag = "" if bv == cv else " ⚠"
+            lines.append(f"| {k}{flag} | {bv} | {cv} |")
+        lines.append("")
+    lines += ["| name | baseline µs | candidate µs | Δ% | derived |",
+              "|---|---:|---:|---:|---|"]
+    for name in sorted(set(b_rows) & set(c_rows)):
+        b, c = b_rows[name], c_rows[name]
+        bu, cu = float(b["us_per_call"]), float(c["us_per_call"])
+        delta = (cu - bu) / bu * 100.0 if bu else float("inf")
+        derived = c.get("derived") or b.get("derived") or ""
+        lines.append(f"| {name} | {bu:.2f} | {cu:.2f} | {delta:+.1f}% "
+                     f"| {derived} |")
+    only_b = sorted(set(b_rows) - set(c_rows))
+    only_c = sorted(set(c_rows) - set(b_rows))
+    if only_b:
+        lines += ["", "Rows only in baseline: " + ", ".join(only_b)]
+    if only_c:
+        lines += ["", "Rows only in candidate: " + ", ".join(only_c)]
+    text = "\n".join(lines) + "\n"
+    if out:
+        with open(out, "w") as f:
+            f.write(text)
+    return text
+
+
+def _report_main(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="run.py report",
+        description="Diff two --json result files into a markdown table.")
+    ap.add_argument("baseline", help="results JSON of the 'before' run")
+    ap.add_argument("candidate", help="results JSON of the 'after' run")
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="also write the markdown to PATH")
+    args = ap.parse_args(argv)
+    sys.stdout.write(report(args.baseline, args.candidate, out=args.out))
+    return 0
+
+
 def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "report":
+        return _report_main(argv[1:])
     from benchmarks import (
         bench_attention,
         bench_chunked_ce,

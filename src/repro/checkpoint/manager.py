@@ -29,6 +29,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro import compat
+
 PyTree = Any
 _SEP = "/"
 
@@ -40,7 +42,7 @@ def _flatten(tree: PyTree) -> dict:
     """Flatten to numpy; bfloat16 (not npz-serializable) is stored as a
     uint16 bit view under a marked key and re-viewed on restore."""
     flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+    for path, leaf in compat.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(_path_str(p) for p in path)
         arr = np.asarray(leaf)
         if arr.dtype.name == "bfloat16":
@@ -73,7 +75,7 @@ class CheckpointManager:
              extra: Optional[dict] = None):
         """Snapshot now, write in the background (or block if asked)."""
         self.wait()                      # one in-flight write at a time
-        host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
+        host_tree = compat.tree_map(lambda x: jax.device_get(x), tree)
         flat = _flatten(host_tree)
 
         def write():
@@ -140,7 +142,7 @@ class CheckpointManager:
         path = os.path.join(self.dir, f"step_{step}")
         with np.load(os.path.join(path, "arrays.npz")) as z:
             flat = {k: z[k] for k in z.files}
-        leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves_like, treedef = compat.tree_flatten_with_path(like)
         out = []
         for pth, leaf in leaves_like:
             key = _SEP.join(_path_str(p) for p in pth)
@@ -151,9 +153,9 @@ class CheckpointManager:
                 arr = flat[key]
             assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
             out.append(arr.astype(leaf.dtype))
-        tree = jax.tree_util.tree_unflatten(
-            jax.tree_util.tree_structure(like), out)
+        tree = compat.tree_unflatten(
+            compat.tree_structure(like), out)
         if shardings is not None:
-            tree = jax.tree.map(
+            tree = compat.tree_map(
                 lambda x, s: jax.device_put(x, s), tree, shardings)
         return tree

@@ -6,8 +6,10 @@ The seed suite broke at the JAX API boundary three different ways (missing
 untouched.  The policy that prevents a recurrence:
 
 * **No module outside ``repro.compat`` imports ``shard_map``, calls
-  ``cost_analysis()`` / ``make_mesh`` raw, or decides Pallas interpret mode
-  itself.**  Grep-enforced by ``tests/test_compat.py``.
+  ``cost_analysis()`` / ``make_mesh`` raw, decides Pallas interpret mode
+  itself, touches the ``jax.tree``/``jax.tree_util`` namespaces directly, or
+  constructs a ``NamedSharding`` raw.**  Grep-enforced by
+  ``tests/test_compat.py``.
 * Probes are attribute/signature/behavior based, never version-string
   comparisons — backports and vendored builds lie about versions.
 * ``capabilities()`` snapshots the probe results once per process; the kernel
@@ -17,7 +19,19 @@ untouched.  The policy that prevents a recurrence:
 from repro.compat.capabilities import Capabilities, capabilities
 from repro.compat.meshes import make_mesh
 from repro.compat.pallas import backend, pallas_interpret, pallas_native
+from repro.compat.shardings import NAMED_SHARDING_SOURCE, named_sharding
 from repro.compat.shmap import SHARD_MAP_SOURCE, shard_map
+from repro.compat.trees import (
+    TREE_SOURCE,
+    tree_flatten,
+    tree_flatten_with_path,
+    tree_leaves,
+    tree_map,
+    tree_map_with_path,
+    tree_reduce,
+    tree_structure,
+    tree_unflatten,
+)
 from repro.compat.versions import has_api, jax_version, jax_version_str
 from repro.compat.xla import cost_analysis, memory_analysis
 
@@ -25,7 +39,11 @@ __all__ = [
     "Capabilities", "capabilities",
     "make_mesh",
     "backend", "pallas_interpret", "pallas_native",
+    "NAMED_SHARDING_SOURCE", "named_sharding",
     "SHARD_MAP_SOURCE", "shard_map",
+    "TREE_SOURCE", "tree_flatten", "tree_flatten_with_path",
+    "tree_leaves", "tree_map", "tree_map_with_path", "tree_reduce",
+    "tree_structure", "tree_unflatten",
     "has_api", "jax_version", "jax_version_str",
     "cost_analysis", "memory_analysis",
 ]

@@ -23,6 +23,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 PyTree = Any
 
 
@@ -30,7 +32,7 @@ def cast_grads(grads: PyTree, dtype: str) -> PyTree:
     if dtype in ("float32", "fp32", None):
         return grads
     dt = jnp.dtype(dtype)
-    return jax.tree.map(lambda g: g.astype(dt), grads)
+    return compat.tree_map(lambda g: g.astype(dt), grads)
 
 
 # ---------------------------------------------------------------------------
@@ -38,7 +40,7 @@ def cast_grads(grads: PyTree, dtype: str) -> PyTree:
 # ---------------------------------------------------------------------------
 def ef_init(params: PyTree) -> PyTree:
     """Zero error-feedback residuals shaped like the grads."""
-    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return compat.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
 def _quantize(x: jax.Array):
@@ -59,21 +61,21 @@ def ef_compress(grads: PyTree, errors: PyTree):
         deq = _dequantize(q, scale)
         return (q, scale), x - deq
 
-    out = jax.tree.map(one, grads, errors)
-    qs = jax.tree.map(lambda t: t[0][0], out,
+    out = compat.tree_map(one, grads, errors)
+    qs = compat.tree_map(lambda t: t[0][0], out,
                       is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
                       and isinstance(t[0], tuple))
-    scales = jax.tree.map(lambda t: t[0][1], out,
+    scales = compat.tree_map(lambda t: t[0][1], out,
                           is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
                           and isinstance(t[0], tuple))
-    new_err = jax.tree.map(lambda t: t[1], out,
+    new_err = compat.tree_map(lambda t: t[1], out,
                            is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
                            and isinstance(t[0], tuple))
     return qs, scales, new_err
 
 
 def ef_decompress(qs: PyTree, scales: PyTree) -> PyTree:
-    return jax.tree.map(_dequantize, qs, scales)
+    return compat.tree_map(_dequantize, qs, scales)
 
 
 def ef_roundtrip(grads: PyTree, errors: PyTree):
@@ -86,10 +88,10 @@ def ef_roundtrip(grads: PyTree, errors: PyTree):
         deq = _dequantize(q, scale)
         return deq, x - deq
 
-    pairs = jax.tree.map(one, grads, errors)
-    deq = jax.tree.map(lambda t: t[0], pairs,
+    pairs = compat.tree_map(one, grads, errors)
+    deq = compat.tree_map(lambda t: t[0], pairs,
                        is_leaf=lambda t: isinstance(t, tuple))
-    err = jax.tree.map(lambda t: t[1], pairs,
+    err = compat.tree_map(lambda t: t[1], pairs,
                        is_leaf=lambda t: isinstance(t, tuple))
     return deq, err
 

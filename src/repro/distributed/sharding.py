@@ -17,12 +17,16 @@ Model code annotates every parameter with *logical* axes ("embed", "ffn",
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import TYPE_CHECKING, Any, Optional
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+if TYPE_CHECKING:   # annotation-only: the runtime class resolves via compat
+    from jax.sharding import NamedSharding
+
+from repro import compat
 from repro.configs.base import ModelConfig, ParallelConfig
 
 PyTree = Any
@@ -102,9 +106,9 @@ def param_sharding(axes_tree: PyTree, cfg: ModelConfig, par: ParallelConfig,
 
     def to_sharding(axes: tuple) -> NamedSharding:
         spec = tuple(rules.get(a) for a in axes)
-        return NamedSharding(mesh, P(*spec))
+        return compat.named_sharding(mesh, P(*spec))
 
-    return jax.tree.map(to_sharding, axes_tree,
+    return compat.tree_map(to_sharding, axes_tree,
                         is_leaf=lambda x: isinstance(x, tuple))
 
 
@@ -138,8 +142,8 @@ def optimizer_sharding(p_sh: PyTree, like: PyTree, mesh: Mesh,
     """Shardings for fp32 optimizer moments: param sharding + data axis."""
     def one(sh: NamedSharding, leaf) -> NamedSharding:
         spec = add_data_axis(sh.spec, tuple(leaf.shape), mesh, par)
-        return NamedSharding(mesh, spec)
-    return jax.tree.map(one, p_sh, like)
+        return compat.named_sharding(mesh, spec)
+    return compat.tree_map(one, p_sh, like)
 
 
 def fsdp_param_sharding(p_sh: PyTree, like: PyTree, mesh: Mesh,
@@ -150,8 +154,8 @@ def fsdp_param_sharding(p_sh: PyTree, like: PyTree, mesh: Mesh,
     def one(sh: NamedSharding, leaf) -> NamedSharding:
         spec = add_data_axis(sh.spec, tuple(leaf.shape), mesh, par,
                              min_bytes=min_bytes, bytes_per_elem=2)
-        return NamedSharding(mesh, spec)
-    return jax.tree.map(one, p_sh, like)
+        return compat.named_sharding(mesh, spec)
+    return compat.tree_map(one, p_sh, like)
 
 
 def batch_spec(par: ParallelConfig) -> P:
@@ -164,17 +168,17 @@ def batch_sharding(tree_example: PyTree, par: ParallelConfig,
     """Shard dim 0 of every batch leaf over the data axes."""
     def sh(x):
         ndim = x.ndim if hasattr(x, "ndim") else len(x.shape)
-        return NamedSharding(mesh, P(par.data_axes, *([None] * (ndim - 1))))
-    return jax.tree.map(sh, tree_example)
+        return compat.named_sharding(mesh, P(par.data_axes, *([None] * (ndim - 1))))
+    return compat.tree_map(sh, tree_example)
 
 
 def constrain(x, mesh: Mesh, spec: P):
     """with_sharding_constraint if x's shape is compatible, else no-op."""
     try:
-        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        return jax.lax.with_sharding_constraint(x, compat.named_sharding(mesh, spec))
     except (ValueError, TypeError):
         return x
 
 
 def replicated(mesh: Mesh) -> NamedSharding:
-    return NamedSharding(mesh, P())
+    return compat.named_sharding(mesh, P())

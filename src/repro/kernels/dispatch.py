@@ -146,8 +146,10 @@ class TileDecision:
 # the sweep.  Best-effort — an unwritable/corrupt cache never breaks dispatch.
 # ---------------------------------------------------------------------------
 AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+CACHE_SCHEMA_VERSION = 1       # stamped into every payload; mismatch → re-sweep
 _DEFAULT_CACHE_PATH = os.path.join(
     os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+_CACHE_WARNED = False          # warn once per process, then stay quiet
 
 
 def autotune_cache_path() -> str | None:
@@ -158,16 +160,50 @@ def autotune_cache_path() -> str | None:
     return _DEFAULT_CACHE_PATH
 
 
-def load_persisted_decisions(path: str | None = None) -> int:
-    """Merge on-disk decisions into the in-process caches (existing in-memory
-    entries win).  Returns the number of entries loaded."""
-    path = path if path is not None else autotune_cache_path()
-    if not path or not os.path.exists(path):
-        return 0
+def _warn_cache_once(path: str, why: str) -> None:
+    global _CACHE_WARNED
+    if _CACHE_WARNED:
+        return
+    _CACHE_WARNED = True
+    import warnings
+    warnings.warn(f"ignoring autotune cache {path!r} ({why}); decisions will "
+                  "be re-swept and the file rewritten", stacklevel=3)
+
+
+def _read_cache_payload(path: str) -> dict | None:
+    """Parse + schema-check one cache file; None (with a one-time warning)
+    on anything unusable.  This runs at import, so it must never raise."""
     try:
         with open(path) as f:
             data = json.load(f)
-    except (OSError, ValueError):
+    except (OSError, ValueError) as e:
+        _warn_cache_once(path, f"unreadable: {e}")
+        return None
+    if not isinstance(data, dict):
+        _warn_cache_once(path, f"top-level {type(data).__name__}, not an "
+                               "object")
+        return None
+    if data.get("version") != CACHE_SCHEMA_VERSION:
+        _warn_cache_once(path, f"schema version {data.get('version')!r} != "
+                               f"{CACHE_SCHEMA_VERSION}")
+        return None
+    if not isinstance(data.get("blocks", []), list) \
+            or not isinstance(data.get("tiles", []), list):
+        _warn_cache_once(path, "blocks/tiles are not lists")
+        return None
+    return data
+
+
+def load_persisted_decisions(path: str | None = None) -> int:
+    """Merge on-disk decisions into the in-process caches (existing in-memory
+    entries win).  Returns the number of entries loaded.  A corrupt or
+    schema-mismatched file warns once and loads nothing — the sweeps run
+    again and the next save rewrites the file with the current schema."""
+    path = path if path is not None else autotune_cache_path()
+    if not path or not os.path.exists(path):
+        return 0
+    data = _read_cache_payload(path)
+    if data is None:
         return 0
     n = 0
     for d in data.get("blocks", ()):
@@ -199,27 +235,29 @@ def load_persisted_decisions(path: str | None = None) -> int:
 
 
 def save_persisted_decisions(path: str | None = None) -> bool:
-    """Write the merged (disk ∪ memory, memory wins) decision set to disk."""
+    """Write the merged (disk ∪ memory, memory wins) decision set to disk.
+    A corrupt or schema-mismatched existing file contributes nothing to the
+    merge and is simply overwritten with the current schema."""
     path = path if path is not None else autotune_cache_path()
     if not path:
         return False
     merged_blocks: dict[tuple, dict] = {}
     merged_tiles: dict[tuple, dict] = {}
-    try:
-        with open(path) as f:
-            old = json.load(f)
-        for d in old.get("blocks", ()):
-            merged_blocks[(d["backend"], int(d["vocab"]), d["dtype"])] = d
-        for d in old.get("tiles", ()):
-            merged_tiles[(d["op"], d["backend"], int(d["kv_len"]),
-                          int(d["head_dim"]), d["dtype"])] = d
-    except (OSError, ValueError, KeyError, TypeError):
-        pass
+    old = _read_cache_payload(path) if os.path.exists(path) else None
+    if old is not None:
+        try:
+            for d in old.get("blocks", ()):
+                merged_blocks[(d["backend"], int(d["vocab"]), d["dtype"])] = d
+            for d in old.get("tiles", ()):
+                merged_tiles[(d["op"], d["backend"], int(d["kv_len"]),
+                              int(d["head_dim"]), d["dtype"])] = d
+        except (KeyError, TypeError, ValueError):
+            pass
     for key, dec in _BLOCK_CACHE.items():
         merged_blocks[key] = dec.to_dict()
     for key, dec in _TILE_CACHE.items():
         merged_tiles[key] = dec.to_dict()
-    payload = {"version": 1,
+    payload = {"version": CACHE_SCHEMA_VERSION,
                "blocks": list(merged_blocks.values()),
                "tiles": list(merged_tiles.values())}
     try:
@@ -345,10 +383,11 @@ def tile_stats() -> dict:
 def reset_autotune_cache() -> None:
     """Clear the in-process decision caches (the on-disk cache is untouched;
     it is only consulted at import via ``load_persisted_decisions``)."""
-    global _SWEEPS
+    global _SWEEPS, _CACHE_WARNED
     _BLOCK_CACHE.clear()
     _TILE_CACHE.clear()
     _SWEEPS = 0
+    _CACHE_WARNED = False
 
 
 # ---------------------------------------------------------------------------
@@ -382,7 +421,14 @@ def _softmax_topk_xla(x: Array, k: int,
 @register("attention", PATH_PALLAS, PATH_PALLAS_INTERPRET)
 def _attention_pallas(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale):
     from repro.kernels import ops
-    return ops.flash_attention(q, k, v, causal=causal)
+    if kv_valid_len is None and isinstance(q_offset, int) and q_offset == 0:
+        # fresh (train / no-cache) self-attention: the differentiable form
+        return ops.flash_attention(q, k, v, causal=causal)
+    # cached (chunked) prefill: queries offset into a partially-valid cache —
+    # absolute-coordinate causal masking + per-row valid-length masking on
+    # the kernel (inference-only)
+    return ops.flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               kv_valid_len=kv_valid_len)
 
 
 @register("attention", PATH_XLA)
@@ -433,12 +479,14 @@ def softmax_topk(x: Array, k: int,
                  differentiable: bool = False) -> "core.SoftmaxTopK":
     """Fused softmax+top-k (paper Algorithm 4) via the registry.
 
-    ``differentiable=True`` pins the XLA form: the Pallas top-k kernel has no
-    custom VJP yet (only ``flash_attention`` does), so callers under autodiff
-    — the MoE router — must not be routed to it even on TPU.
+    Every path is differentiable: the Pallas kernel carries a custom VJP
+    (recompute-the-softmax-from-LSE backward, mirroring ``flash_attention``'s
+    recompute-from-(m, d) rule), so autodiff callers — the MoE router under
+    ``value_and_grad`` — route through the same backend policy as everyone
+    else.  ``differentiable`` is kept for caller compatibility; it no longer
+    pins the XLA form.
     """
-    if differentiable:
-        return _REGISTRY["softmax_topk"][PATH_XLA](x, k)
+    del differentiable
     _, fn = lookup("softmax_topk")
     return fn(x, k)
 
@@ -488,14 +536,19 @@ def sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale=None,
                 kv_valid_len=kv_valid_len, scale=scale)
         return fn(cfg, q, k, v, q_offset=q_offset,
                   kv_valid_len=kv_valid_len, scale=scale)
-    if cfg.use_pallas and q.shape[1] > 1 and kv_valid_len is None:
-        # fresh (train / no-cache) self-attention only: the Pallas flash
-        # kernel has no q_offset/kv_valid_len operands, so cached chunked
-        # prefill — queries offset into a longer, partially-valid cache —
-        # must take the chunked XLA form, which masks both.  (Teaching the
-        # kernel offset+valid tiles is the ROADMAP follow-up.)
+    if (cfg.use_pallas and q.shape[1] > 1
+            and (scale is None or scale == q.shape[-1] ** -0.5)
+            and v.shape[-1] == q.shape[-1]):
+        # prefill — fresh OR cached/chunked: the flash kernel carries
+        # q_offset/kv_valid_len operands (absolute-coordinate causal mask,
+        # per-row valid-length mask), so cached chunked prefill no longer
+        # has to detour through the chunked XLA form on native backends.
+        # Still XLA: custom-scale or value-dim≠key-dim attention (MLA's
+        # absorbed decode), which the kernel does not model.
         path = select_path("attention", prefer_pallas=True)
-    elif cfg.use_online_attention:
+    elif cfg.use_online_attention or cfg.use_pallas:
+        # chunked XLA fallback (masks offset + valid length exactly) — also
+        # the landing spot for the kernel-unrepresentable cases above
         path = PATH_XLA
     else:
         path = PATH_XLA_NAIVE

@@ -15,9 +15,19 @@ choice, and attention tile shapes (``bq``/``bk``) resolve through the same
 registry seam (``dispatch.attention_tiles``); pass them explicitly to pin a
 shape (kernel tests do).
 
-``flash_attention`` is differentiable: Pallas forward + the XLA chunked-online
-backward from ``repro.core.attention`` via ``jax.custom_vjp`` (the backward
-recomputes from the forward's saved LSE — FlashAttention economics).
+Autodiff:
+* ``flash_attention`` (fresh prefill, ``q_offset``/``kv_valid_len`` unset) is
+  differentiable: Pallas forward + Pallas backward via ``jax.custom_vjp``
+  (the backward recomputes P from the forward's saved LSE — FlashAttention
+  economics).  The *offset* form (cached chunked prefill: queries offset into
+  a longer, partially-valid cache) is inference-only — the backward kernels
+  have no offset operands yet, so the residual rule is never installed for it
+  and a grad through it fails loudly instead of silently mis-masking.
+* ``softmax_topk`` is differentiable on every path: the kernel forward saves
+  ``(x, values, lse)`` and the backward recomputes the full softmax from the
+  saved LSE — the paper's ``(m, d)`` in log form — in one extra pass
+  (``softmax_j = e^{x_j - lse}``), so the forward stays single-pass and no
+  [R, V] probability matrix is ever stored.
 """
 from __future__ import annotations
 
@@ -28,7 +38,10 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core import attention as core_attention
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (
+    flash_attention_offset_pallas,
+    flash_attention_pallas,
+)
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.online_softmax import (
     online_normalizer_pallas,
@@ -71,15 +84,55 @@ def online_normalizer(x: Array, *, r_blk: int = 256,
     return m.reshape(lead), d.reshape(lead)
 
 
+# ---------------------------------------------------------------------------
+# Differentiable fused softmax+top-k: Pallas forward, recompute-from-LSE
+# backward.  The custom_vjp lives on the 2-D core; the public wrapper only
+# reshapes.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _softmax_topk2d(x, k, r_blk, v_blk):
+    vals, idx, lse = softmax_topk_pallas(
+        x, k, r_blk=r_blk, v_blk=v_blk, interpret=compat.pallas_interpret())
+    return vals, idx, lse
+
+
+def _softmax_topk2d_fwd(x, k, r_blk, v_blk):
+    out = _softmax_topk2d(x, k, r_blk, v_blk)
+    vals, idx, lse = out
+    return out, (x, vals, idx, lse)
+
+
+def _softmax_topk2d_bwd(k, r_blk, v_blk, res, dout):
+    """∂/∂x of (values, lse): values_i = e^{x_{p_i} − lse}, lse = logsumexp.
+
+    dx_j = softmax_j · (dlse − Σᵢ dvalᵢ·valᵢ) + [j = pᵢ]·dvalᵢ·valᵢ, with
+    softmax recomputed from the saved LSE (one extra pass over x; nothing
+    beyond (values, indices, lse) was stored by the forward).  ``indices``
+    is integer-valued — its cotangent is discarded.
+    """
+    x, vals, idx, lse = res
+    dvals, _, dlse = dout
+    r = x.shape[0]
+    xf = x.astype(jnp.float32)
+    s = jnp.exp(xf - lse[:, None])                       # [R, V]
+    dv_v = dvals.astype(jnp.float32) * vals.astype(jnp.float32)   # [R, K]
+    coeff = dlse.astype(jnp.float32) - jnp.sum(dv_v, axis=-1)     # [R]
+    dx = s * coeff[:, None]
+    dx = dx.at[jnp.arange(r)[:, None], idx].add(dv_v)
+    return (dx.astype(x.dtype),)
+
+
+_softmax_topk2d.defvjp(_softmax_topk2d_fwd, _softmax_topk2d_bwd)
+
+
 def softmax_topk(x: Array, k: int, *, r_blk: int = 256,
                  v_blk: int | None = None):
     lead = x.shape[:-1]
     v = x.shape[-1]
     x2 = x.reshape(-1, v)
-    vals, idx, lse = softmax_topk_pallas(
-        x2, k, r_blk=_largest_divisor_block(x2.shape[0], r_blk),
-        v_blk=_v_blk(v, v_blk, x.dtype),
-        interpret=compat.pallas_interpret())
+    vals, idx, lse = _softmax_topk2d(
+        x2, k, _largest_divisor_block(x2.shape[0], r_blk),
+        _v_blk(v, v_blk, x.dtype))
     return (vals.reshape(*lead, k), idx.reshape(*lead, k), lse.reshape(lead))
 
 
@@ -116,7 +169,11 @@ def _flash_fwd(q, k, v, causal, bq, bk):
 
 def _flash_bwd(causal, bq, bk, res, dout):
     """Backward: Pallas dq/dkv kernels (interpret on CPU); recomputes P from
-    the forward's saved LSE — the paper's (m, d) in log form."""
+    the forward's saved LSE — the paper's (m, d) in log form.
+
+    Only the fresh-prefill forward (self-aligned q/k, fully-valid KV) installs
+    this rule; the backward kernels have no ``q_offset``/``kv_valid_len``
+    operands, so the offset forward below stays out of the custom_vjp."""
     from repro.kernels.flash_attention_bwd import flash_attention_bwd_pallas
     q, k, v, out, lse = res
     b, tq, hq, dh = q.shape
@@ -143,11 +200,22 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
-                    bq: int | None = None, bk: int | None = None) -> Array:
-    """Differentiable online-softmax attention (Pallas fwd on TPU).
+                    bq: int | None = None, bk: int | None = None,
+                    q_offset: Array | None = None,
+                    kv_valid_len: Array | None = None) -> Array:
+    """Online-softmax attention (Pallas fwd on TPU).
 
     ``bq``/``bk`` unset → the dispatch registry's resolved tiles (kernel
-    tests pin explicit values; nothing here is hard-coded)."""
+    tests pin explicit values; nothing here is hard-coded).
+
+    ``q_offset``/``kv_valid_len`` unset → the fresh-prefill differentiable
+    form (training path).  Set, they select the serving form: ``q_offset``
+    (scalar or [B]) is the absolute position of query row 0 and
+    ``kv_valid_len`` (scalar or [B]) the per-row valid cache prefix; causal
+    masking runs in absolute coordinates and out-of-range KV columns are
+    masked before the online update.  KV is padded up to a tile multiple
+    (padded columns sit past ``kv_valid_len``, so the mask erases them) —
+    this form is inference-only (no VJP installed)."""
     if bq is None or bk is None:
         from repro.kernels.dispatch import attention_tiles
         tiles = attention_tiles("flash_attention", kv_len=k.shape[1],
@@ -155,8 +223,33 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
         bq = tiles["bq"] if bq is None else bq
         bk = tiles["bk"] if bk is None else bk
     bq = _largest_divisor_block(q.shape[1], bq)
-    bk = _largest_divisor_block(k.shape[1], bk)
-    return _flash(q, k, v, causal, bq, bk)
+    if q_offset is None and kv_valid_len is None:
+        bk = _largest_divisor_block(k.shape[1], bk)
+        return _flash(q, k, v, causal, bq, bk)
+    return _flash_offset(q, k, v, q_offset, kv_valid_len, causal, bq, bk)
+
+
+def _flash_offset(q, k, v, q_offset, kv_valid_len, causal, bq, bk):
+    """Cached-prefill flash attention (model layout), inference-only."""
+    b, tq, _, _ = q.shape
+    tk = k.shape[1]
+    if q_offset is None:
+        q_offset = 0
+    if kv_valid_len is None:
+        kv_valid_len = tk
+    q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    kv_valid_len = jnp.minimum(
+        jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (b,)), tk)
+    bk = min(bk, tk)
+    pad_k = -tk % bk
+    if pad_k:     # padded KV columns sit at positions ≥ kv_valid_len: masked
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    out, _ = flash_attention_offset_pallas(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        q_offset, kv_valid_len, causal=causal, bq=bq, bk=bk,
+        interpret=compat.pallas_interpret())
+    return jnp.swapaxes(out, 1, 2)
 
 
 def flash_decode(q: Array, k_cache: Array, v_cache: Array,

@@ -30,7 +30,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 import repro.configs as configs
 from repro import compat
@@ -60,7 +60,7 @@ FSDP_ARCHS = {"llama4-scout-17b-a16e", "deepseek-coder-33b", "llava-next-34b"}
 
 
 def sds(shape, dtype, mesh=None, spec=None):
-    sh = NamedSharding(mesh, spec) if mesh is not None else None
+    sh = compat.named_sharding(mesh, spec) if mesh is not None else None
     return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
 
 
@@ -95,7 +95,7 @@ def eval_params(cfg: ModelConfig):
 
 
 def count_params(vals_sds) -> int:
-    return int(sum(x.size for x in jax.tree.leaves(vals_sds)))
+    return int(sum(x.size for x in compat.tree_leaves(vals_sds)))
 
 
 def active_params(cfg: ModelConfig, vals_sds) -> int:
@@ -104,7 +104,7 @@ def active_params(cfg: ModelConfig, vals_sds) -> int:
     if cfg.moe is None:
         return total
     routed = 0
-    for path, leaf in jax.tree_util.tree_flatten_with_path(vals_sds)[0]:
+    for path, leaf in compat.tree_flatten_with_path(vals_sds)[0]:
         keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
         if "moe" in keys and "shared" not in keys and \
                 any(k in ("w_gate", "w_up", "w_down") for k in keys):
@@ -152,9 +152,9 @@ def cache_shardings(cache_sds, mesh, rules: dict, ba: tuple, sa: tuple):
             spec = P(None, ba_s, None, None)
         else:  # state tuples (mlstm/slstm scalar states)
             spec = P(*([None, ba_s] + [None] * (nd - 2))) if nd >= 2 else P()
-        return NamedSharding(mesh, spec)
+        return compat.named_sharding(mesh, spec)
 
-    return jax.tree_util.tree_map_with_path(one, cache_sds)
+    return compat.tree_map_with_path(one, cache_sds)
 
 
 # ---------------------------------------------------------------------------
@@ -167,16 +167,16 @@ def build_train(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
     if par.fsdp:
         p_sh = sharding.fsdp_param_sharding(p_sh, vals_sds, mesh, par)
     opt_moments = sharding.optimizer_sharding(p_sh, vals_sds, mesh, par)
-    opt_sh = adamw.AdamWState(step=NamedSharding(mesh, P()),
+    opt_sh = adamw.AdamWState(step=compat.named_sharding(mesh, P()),
                               mu=opt_moments, nu=opt_moments)
-    params = jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
+    params = compat.tree_map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
                           vals_sds, p_sh)
     opt_shape = jax.eval_shape(adamw.init, vals_sds)
     opt = adamw.AdamWState(
         step=sds((), jnp.int32, mesh, P()),
-        mu=jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
+        mu=compat.tree_map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
                         opt_shape.mu, opt_moments),
-        nu=jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
+        nu=compat.tree_map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
                         opt_shape.nu, opt_moments))
     ba = _ba(shape_cfg, mesh)
     ba_s = ba if ba else None
@@ -200,7 +200,7 @@ def build_prefill(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
     cfg = run.model
     vals_sds, axes = eval_params(cfg)
     p_sh = sharding.param_sharding(axes, cfg, par, mesh)
-    params = jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
+    params = compat.tree_map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
                           vals_sds, p_sh)
     ba = _ba(shape_cfg, mesh)
     sa = _sa(shape_cfg, mesh, ba)
@@ -244,7 +244,7 @@ def build_prefill(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
         args = tuple(args)
         cache_sds = jax.eval_shape(lambda: serving.init_cache(cfg, gb, t))
     cache_sh = cache_shardings(cache_sds, mesh, rules, ba, sa)
-    out_sh = (NamedSharding(mesh, P(ba_s)), cache_sh, NamedSharding(mesh, P()))
+    out_sh = (compat.named_sharding(mesh, P(ba_s)), cache_sh, compat.named_sharding(mesh, P()))
     return fn, args, out_sh, ()
 
 
@@ -264,7 +264,7 @@ def build_decode(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
     cfg = run.model
     vals_sds, axes = eval_params(cfg)
     p_sh = sharding.param_sharding(axes, cfg, par, mesh)
-    params = jax.tree.map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
+    params = compat.tree_map(lambda s, sh: sds(s.shape, s.dtype, mesh, sh.spec),
                           vals_sds, p_sh)
     ba = _ba(shape_cfg, mesh)
     sa = _sa(shape_cfg, mesh, ba)
@@ -285,12 +285,12 @@ def build_decode(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
             return serving.decode_step(params, caches, cache_len, tokens,
                                        cfg, rng=rng, top_k=5)
     cache_sh = cache_shardings(cache_sds, mesh, rules, ba, sa)
-    caches = jax.tree.map(lambda x, sh: sds(x.shape, x.dtype, mesh, sh.spec),
+    caches = compat.tree_map(lambda x, sh: sds(x.shape, x.dtype, mesh, sh.spec),
                           cache_sds, cache_sh)
     args = (params, caches, sds((), jnp.int32, mesh, P()),
             sds((gb, 1), jnp.int32, mesh, P(ba_s, None)),
             sds((2,), jnp.uint32, mesh, P()))
-    out_sh = (NamedSharding(mesh, P(ba_s)), cache_sh, NamedSharding(mesh, P()))
+    out_sh = (compat.named_sharding(mesh, P(ba_s)), cache_sh, compat.named_sharding(mesh, P()))
     return fn, args, out_sh, (1,)
 
 

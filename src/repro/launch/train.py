@@ -59,7 +59,7 @@ def main(argv=None):
     par = sharding.derive_parallel(cfg, mesh, run_cfg.parallel)
     p_sh = sharding.param_sharding(axes, cfg, par, mesh)
     params = jax.device_put(params, p_sh)
-    opt_sh = jax.tree.map(lambda _: None, opt_state)  # follow params
+    opt_sh = compat.tree_map(lambda _: None, opt_state)  # follow params
     step_fn = jax.jit(make_train_step(run_cfg), donate_argnums=(0, 1))
 
     ds = SyntheticDataset(SyntheticConfig(

@@ -22,7 +22,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro import core
+from repro import compat, core
 from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
 
 Array = jax.Array
@@ -42,8 +42,8 @@ def is_param(x) -> bool:
 
 
 def split_params(tree: PyTree) -> tuple[PyTree, PyTree]:
-    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
-    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    values = compat.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = compat.tree_map(lambda p: p.axes, tree, is_leaf=is_param)
     return values, axes
 
 
@@ -53,15 +53,15 @@ def stack_layer_init(init_fn, key, n: int) -> PyTree:
     values are batched separately and re-boxed.)"""
     keys = jax.random.split(key, n)
     template = init_fn(keys[0])
-    boxes = jax.tree.leaves(template, is_leaf=is_param)
-    treedef = jax.tree.structure(template, is_leaf=is_param)
+    boxes = compat.tree_leaves(template, is_leaf=is_param)
+    treedef = compat.tree_structure(template, is_leaf=is_param)
 
     def values_only(k):
-        return [p.value for p in jax.tree.leaves(init_fn(k), is_leaf=is_param)]
+        return [p.value for p in compat.tree_leaves(init_fn(k), is_leaf=is_param)]
 
     stacked = jax.vmap(values_only)(keys)
     reboxed = [Param(v, ("layers",) + p.axes) for v, p in zip(stacked, boxes)]
-    return jax.tree.unflatten(treedef, reboxed)
+    return compat.tree_unflatten(treedef, reboxed)
 
 
 def _dense_init(key, shape, axes, *, scale: Optional[float] = None,
@@ -189,16 +189,16 @@ def _constrain_seq_parallel(ctx, q, k, v):
     """Sequence-parallel (context-parallel) attention sharding: q sharded on
     T over the model axis, K/V gathered — used when the head count does not
     divide the model axis (DESIGN.md §4)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     dp = ctx.batch_axes
     m = ctx.par.model_axis
     mesh = ctx.mesh
     q = jax.lax.with_sharding_constraint(
-        q, NamedSharding(mesh, P(dp, m, None, None)))
+        q, compat.named_sharding(mesh, P(dp, m, None, None)))
     k = jax.lax.with_sharding_constraint(
-        k, NamedSharding(mesh, P(dp, None, None, None)))
+        k, compat.named_sharding(mesh, P(dp, None, None, None)))
     v = jax.lax.with_sharding_constraint(
-        v, NamedSharding(mesh, P(dp, None, None, None)))
+        v, compat.named_sharding(mesh, P(dp, None, None, None)))
     return q, k, v
 
 
@@ -429,9 +429,10 @@ def moe_apply(p: PyTree, x: Array, cfg: ModelConfig) -> tuple[Array, dict]:
     # ---- router: fused softmax+top-k (paper Alg. 4 at V = num_experts) ----
     from repro.kernels import dispatch
     logits = (xg.astype(jnp.float32) @ p["router"])          # [G,S,E]
-    # differentiable: the router sits under value_and_grad in training
-    probs, idx, lse = dispatch.softmax_topk(logits, k,
-                                            differentiable=True)  # [G,S,K]
+    # the router sits under value_and_grad in training; the Pallas kernel's
+    # custom VJP (recompute-from-LSE) makes the registry's own backend choice
+    # safe here — no XLA pin
+    probs, idx, lse = dispatch.softmax_topk(logits, k)       # [G,S,K]
     probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
     cap = int(math.ceil(s * k * mc.capacity_factor / mc.num_experts))
     cap = max(cap, 4)

@@ -11,6 +11,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import OptimizerConfig
 
 PyTree = Any
@@ -25,8 +26,8 @@ class AdamWState(NamedTuple):
 def init(params: PyTree) -> AdamWState:
     zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
     return AdamWState(step=jnp.zeros((), jnp.int32),
-                      mu=jax.tree.map(zeros, params),
-                      nu=jax.tree.map(zeros, params))
+                      mu=compat.tree_map(zeros, params),
+                      nu=compat.tree_map(zeros, params))
 
 
 def schedule(step: jax.Array, cfg: OptimizerConfig) -> jax.Array:
@@ -46,19 +47,19 @@ def schedule(step: jax.Array, cfg: OptimizerConfig) -> jax.Array:
 
 def global_norm(tree: PyTree) -> jax.Array:
     return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-                        for x in jax.tree.leaves(tree)))
+                        for x in compat.tree_leaves(tree)))
 
 
 def clip_by_global_norm(grads: PyTree, max_norm: float):
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
-    return jax.tree.map(lambda g: g * scale, grads), gnorm
+    return compat.tree_map(lambda g: g * scale, grads), gnorm
 
 
 def update(grads: PyTree, state: AdamWState, params: PyTree,
            cfg: OptimizerConfig):
     """One AdamW step.  Returns (new_params, new_state, metrics)."""
-    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads = compat.tree_map(lambda g: g.astype(jnp.float32), grads)
     if cfg.grad_clip > 0:
         grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
     else:
@@ -66,8 +67,8 @@ def update(grads: PyTree, state: AdamWState, params: PyTree,
     step = state.step + 1
     lr = schedule(step, cfg)
     b1, b2 = cfg.beta1, cfg.beta2
-    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
-    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+    mu = compat.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = compat.tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
                       state.nu, grads)
     bc1 = 1 - b1 ** step.astype(jnp.float32)
     bc2 = 1 - b2 ** step.astype(jnp.float32)
@@ -80,5 +81,5 @@ def update(grads: PyTree, state: AdamWState, params: PyTree,
             delta = delta + cfg.weight_decay * p.astype(jnp.float32)
         return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
 
-    new_params = jax.tree.map(upd, params, mu, nu)
+    new_params = compat.tree_map(upd, params, mu, nu)
     return new_params, AdamWState(step, mu, nu), {"grad_norm": gnorm, "lr": lr}

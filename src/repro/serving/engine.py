@@ -29,7 +29,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro import core
+from repro import compat, core
 from repro.configs.base import ModelConfig
 from repro.models import encdec, ssm, transformer
 from repro.models import xlstm as xlstm_mod
@@ -61,7 +61,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> list:
             caches.append(attn_cache(count))
         elif kind == "shared_attn":
             c = attn_cache(1)
-            caches.append(jax.tree.map(lambda x: x[0], c))
+            caches.append(compat.tree_map(lambda x: x[0], c))
         elif kind == "mla":
             m = cfg.mla
             caches.append({"attn": {
@@ -70,13 +70,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> list:
                                      m.qk_rope_head_dim), dt)}})
         elif kind == "mamba":
             one = ssm.mamba2_cache_init(cfg, batch, dt)
-            caches.append(jax.tree.map(
+            caches.append(compat.tree_map(
                 lambda x: jnp.broadcast_to(x, (count,) + x.shape), one))
         elif kind in ("mlstm", "slstm"):
             one = xlstm_mod.xlstm_cache_init(
                 cfg, layer_idx if kind == "slstm" else layer_idx, batch, dt)
             # pick representative layer of right kind
-            caches.append(jax.tree.map(
+            caches.append(compat.tree_map(
                 lambda x: jnp.broadcast_to(x, (count,) + x.shape), one))
         else:
             raise ValueError(kind)
@@ -173,7 +173,10 @@ def chunked_prefill(params: PyTree, tokens: Array, cfg: ModelConfig, *,
     the same per-chunk step (``prefill_chunk``) over the same
     ``prefill_schedule`` interleaved with decode, so a request's cache
     contents are identical whether it prefilled alone or while the pool was
-    busy.  Returns (last_hidden [B, D], caches, length)."""
+    busy.  Every chunk after the first runs at ``q_offset > 0`` against the
+    partially-valid cache — the case the offset-aware flash kernel serves
+    natively (``dispatch.sdpa`` routes it; XLA chunked elsewhere).
+    Returns (last_hidden [B, D], caches, length)."""
     b, t = tokens.shape
     if cfg.kv_cache_dtype == "int8":
         # int8 prefill computes on the CURRENT chunk's exact fp tensors only
@@ -195,7 +198,14 @@ def prefill_chunk(params: PyTree, caches: list, cache_len: Array,
                   tokens: Array, cfg: ModelConfig):
     """Advance a prefill by one chunk: tokens [B, c] are written into the
     cache at ``cache_len`` and attended causally against everything before
-    them.  Returns (last_hidden [B, D], new caches, new length)."""
+    them.  Returns (last_hidden [B, D], new caches, new length).
+
+    ``cache_len`` is a scalar (one sequence, or a lockstep batch) or a [B]
+    vector (per-slot offsets).  Either way it threads through the model as
+    ``q_offset`` with ``kv_valid_len = cache_len + c``, which is exactly the
+    operand pair the Pallas flash kernel masks on — so chunked prefill at
+    ``q_offset > 0`` runs the kernel on native backends instead of detouring
+    through the chunked XLA form (the PR-2 routing pin, now lifted)."""
     hidden, new_caches, _ = transformer.forward(
         params, tokens, cfg, caches=caches, cache_len=cache_len)
     return hidden[:, -1], new_caches, cache_len + tokens.shape[1]
@@ -212,7 +222,7 @@ def write_slot(cfg: ModelConfig, pool: list, seq: list, slot) -> list:
     out: list = []
     for (kind, _), pc, sc in zip(transformer.block_pattern(cfg), pool, seq):
         axis = 0 if kind == "shared_attn" else 1
-        out.append(jax.tree.map(
+        out.append(compat.tree_map(
             lambda p, s, a=axis: jax.lax.dynamic_update_slice_in_dim(
                 p, s.astype(p.dtype), slot, axis=a), pc, sc))
     return out

@@ -18,7 +18,10 @@ member finishes, leaving slots idle.  This scheduler keeps the batch full:
   bound the stall; idle slots cost more tokens than a longer stall, so a
   drained pool prefills faster), and runs flat out when nothing is decoding.
   Time-to-first-token for queued work thus overlaps token generation for
-  running work.
+  running work.  Each chunk prefills at its slot's running offset
+  (``q_offset = cache_len``, ``kv_valid_len = cache_len + chunk``), operands
+  the Pallas flash kernel now masks natively — chunked prefill is no longer
+  pinned to the chunked XLA form on TPU serving.
 * **Eviction** — a sequence is retired when it has produced its
   ``max_new_tokens``, emits ``eos_id``, or its slot is full
   (``len == slot_len``; recorded as ``evicted`` — the capacity backstop).

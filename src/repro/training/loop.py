@@ -28,6 +28,7 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
+from repro import compat
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import RunConfig
 from repro.data.synthetic import SyntheticConfig, SyntheticDataset
@@ -84,7 +85,7 @@ def run(run_cfg: RunConfig, *, steps: int, train_step: Callable,
     step = start
     while step < steps:
         batch = dataset.batch(step)
-        batch = jax.tree.map(lambda x: jax.numpy.asarray(x), batch)
+        batch = compat.tree_map(lambda x: jax.numpy.asarray(x), batch)
         if inject_failure is not None:
             inject_failure(step)          # may raise — simulated node death
         t0 = time.monotonic()

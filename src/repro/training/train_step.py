@@ -14,8 +14,9 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import RunConfig
 from repro.distributed import compression, sharding
 from repro.models import encdec, layers as L, transformer
@@ -40,23 +41,23 @@ def make_train_step(run: RunConfig) -> Callable:
         if n_micro == 1:
             (loss, metrics), grads = grad_fn(params, batch)
         else:
-            mb = jax.tree.map(
+            mb = compat.tree_map(
                 lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
                                     + x.shape[1:]), batch)
 
             def body(acc, b_i):
                 (l, m), g = grad_fn(params, b_i)
                 g = compression.cast_grads(g, run.parallel.grad_reduce_dtype)
-                acc = jax.tree.map(
+                acc = compat.tree_map(
                     lambda a, x: a + x.astype(jnp.float32), acc, g)
                 return acc, (l, m)
 
-            zeros = jax.tree.map(
+            zeros = compat.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
             grads, (losses, ms) = jax.lax.scan(body, zeros, mb)
-            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            grads = compat.tree_map(lambda g: g / n_micro, grads)
             loss = losses.mean()
-            metrics = jax.tree.map(jnp.mean, ms)
+            metrics = compat.tree_map(jnp.mean, ms)
         grads = compression.cast_grads(grads, run.parallel.grad_reduce_dtype)
         params, opt_state, om = adamw.update(grads, opt_state, params,
                                              run.optimizer)
@@ -81,9 +82,9 @@ def jit_train_step(run: RunConfig, mesh: Mesh, axes: PyTree):
     par = sharding.derive_parallel(cfg, mesh, run.parallel)
     p_sh = sharding.param_sharding(axes, cfg, par, mesh)
     opt_sh = adamw.AdamWState(
-        step=NamedSharding(mesh, P()),
+        step=compat.named_sharding(mesh, P()),
         mu=p_sh, nu=p_sh)
-    bspec = NamedSharding(mesh, P(par.data_axes, None))
+    bspec = compat.named_sharding(mesh, P(par.data_axes, None))
     step = make_train_step(run)
     return jax.jit(
         step,

@@ -35,6 +35,34 @@ def test_shard_map_shim_resolves_and_runs():
                                [0.0, 2.0, 4.0, 6.0])
 
 
+def test_tree_shims_resolve_and_run():
+    assert compat.TREE_SOURCE in ("jax.tree", "jax.tree_util")
+    t = {"a": [1, 2], "b": 3}
+    assert compat.tree_map(lambda x: x * 2, t) == {"a": [2, 4], "b": 6}
+    leaves, treedef = compat.tree_flatten(t)
+    assert compat.tree_leaves(t) == leaves == [1, 2, 3]
+    assert compat.tree_structure(t) == treedef
+    assert compat.tree_unflatten(treedef, leaves) == t
+    assert compat.tree_reduce(lambda a, b: a + b, t) == 6
+    # is_leaf threads through (the Param-boxing pattern in models.layers)
+    pairs = compat.tree_map(lambda p: p[0], {"w": (1, "x")},
+                            is_leaf=lambda x: isinstance(x, tuple))
+    assert pairs == {"w": 1}
+
+
+def test_named_sharding_shim_constructs():
+    from jax.sharding import PartitionSpec as P
+    assert compat.NAMED_SHARDING_SOURCE.startswith("jax")
+    mesh = compat.make_mesh((1,), ("data",))
+    s = compat.named_sharding(mesh, P("data"))
+    assert s.spec == P("data")
+    assert compat.named_sharding(mesh).spec == P()          # replicated
+    assert compat.named_sharding(mesh, ("data", None)).spec == P("data", None)
+    # it is a real sharding: jax accepts it as a device_put target
+    x = jax.device_put(jnp.arange(4.0), compat.named_sharding(mesh))
+    np.testing.assert_allclose(np.asarray(x), [0.0, 1.0, 2.0, 3.0])
+
+
 def test_cost_analysis_always_a_dict():
     compiled = jax.jit(lambda x: x @ x).lower(
         jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
@@ -66,6 +94,11 @@ _FORBIDDEN = (
     (".cost_analysis()", "use compat.cost_analysis(compiled)"),
     ("jax.make_mesh(", "use compat.make_mesh"),
     ("default_backend()", "use compat.backend()/pallas_interpret()"),
+    # pytree namespace: jax.tree.* vs jax.tree_util.tree_* differs by version
+    ("jax.tree.", "use compat.tree_map/tree_leaves/... aliases"),
+    ("jax.tree_util", "use compat.tree_map/tree_leaves/... aliases"),
+    # NamedSharding construction differs pre-0.4.30
+    ("NamedSharding(", "use compat.named_sharding(mesh, spec)"),
 )
 
 
@@ -226,6 +259,63 @@ def test_corrupt_autotune_cache_never_breaks_dispatch(tmp_path, monkeypatch):
     dispatch.reset_autotune_cache()
 
 
+def test_schema_mismatched_autotune_cache_warns_once_and_resweeps(
+        tmp_path, monkeypatch):
+    """A version stamp from another schema era must not be trusted: the load
+    warns (once), returns nothing, and the next sweep rewrites the file with
+    the current stamp."""
+    import json as _json
+    path = tmp_path / "autotune.json"
+    path.write_text(_json.dumps({"version": 99, "blocks": [
+        {"backend": "cpu", "vocab": 352, "dtype": "float32", "block": 7,
+         "timings_us": [[7, 1.0]]}]}))
+    monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV, str(path))
+    dispatch.reset_autotune_cache()
+    with pytest.warns(UserWarning, match="schema version"):
+        assert dispatch.load_persisted_decisions() == 0
+    import warnings as _warnings
+    with _warnings.catch_warnings(record=True) as rec:
+        _warnings.simplefilter("always")
+        assert dispatch.load_persisted_decisions() == 0
+    assert not rec                                        # warned once only
+    d = dispatch.block_decision(352, jnp.float32)         # re-sweeps
+    assert dispatch.autotune_stats()["sweeps"] == 1
+    assert d.block != 7 or d.timings_us != ((7, 1.0),)    # not the stale row
+    saved = _json.loads(path.read_text())
+    assert saved["version"] == dispatch.CACHE_SCHEMA_VERSION
+    assert any(int(b["vocab"]) == 352 for b in saved["blocks"])
+    dispatch.reset_autotune_cache()
+
+
+def test_non_object_autotune_cache_ignored(tmp_path, monkeypatch):
+    """A top-level JSON list (valid JSON, wrong shape) used to crash the
+    import-time load with AttributeError; it must be ignored instead."""
+    path = tmp_path / "autotune.json"
+    path.write_text('[{"version": 1}]')
+    monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV, str(path))
+    dispatch.reset_autotune_cache()
+    with pytest.warns(UserWarning, match="top-level list"):
+        assert dispatch.load_persisted_decisions() == 0
+    dispatch.reset_autotune_cache()
+
+
+def test_corrupt_autotune_cache_does_not_break_import(tmp_path):
+    """The real failure mode: dispatch loads the cache at import, so a bad
+    file must not take down a fresh interpreter."""
+    bad = tmp_path / "autotune.json"
+    bad.write_text("]]] definitely not json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    env[dispatch.AUTOTUNE_CACHE_ENV] = str(bad)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.kernels import dispatch as d; "
+         "print(d.autotune_stats()['entries'])"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert int(out.stdout.strip()) == 0
+
+
 def test_fresh_process_loads_persisted_decisions(tmp_path, monkeypatch):
     """The import-time load: a new interpreter sees the saved decisions."""
     path = str(tmp_path / "autotune.json")
@@ -300,6 +390,54 @@ def test_benchmarks_smoke_mode():
     for row in lines[1:]:
         name, us, _ = row.split(",", 2)
         assert float(us) > 0, row
+
+
+def test_benchmarks_attention_smoke_records_prefill_comparison():
+    """The prefill Pallas-vs-XLA comparison rides the attention bench."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "--smoke", "attention"],
+        env=env, capture_output=True, text=True, timeout=600, cwd=REPO)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    lines = out.stdout.splitlines()
+    assert any("/pallas_fwd" in l and "prefill" in l for l in lines)
+    assert any("/xla_chunked_fwd" in l for l in lines)
+
+
+def test_benchmarks_report_diffs_two_result_files(tmp_path):
+    """`run.py report A.json B.json` renders the EXPERIMENTS.md-style diff
+    table, flags one-sided rows and env mismatches."""
+    import json as _json
+    a = {"smoke": True, "env": {"backend": "cpu", "jax_version": "x"},
+         "rows": [
+             {"name": "softmax/a", "us_per_call": 10.0, "derived": "d1"},
+             {"name": "only/base", "us_per_call": 5.0, "derived": ""}]}
+    b = {"smoke": True, "env": {"backend": "tpu", "jax_version": "x"},
+         "rows": [
+             {"name": "softmax/a", "us_per_call": 8.0, "derived": "d1"},
+             {"name": "only/cand", "us_per_call": 2.0, "derived": ""}]}
+    pa, pb = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    with open(pa, "w") as f:
+        _json.dump(a, f)
+    with open(pb, "w") as f:
+        _json.dump(b, f)
+    md_out = str(tmp_path / "diff.md")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "report", pa, pb, "--out", md_out],
+        env=env, capture_output=True, text=True, timeout=300, cwd=REPO)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    text = out.stdout
+    assert "| softmax/a | 10.00 | 8.00 | -20.0% | d1 |" in text
+    assert "backend ⚠" in text                 # env mismatch flagged
+    assert "Rows only in baseline: only/base" in text
+    assert "Rows only in candidate: only/cand" in text
+    with open(md_out) as f:
+        assert f.read() == text
 
 
 def test_benchmarks_serving_smoke_records_json(tmp_path):

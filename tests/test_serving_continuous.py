@@ -198,11 +198,11 @@ def test_eos_retires_request_without_evicted_flag(model):
 
 
 def test_chunked_prefill_correct_under_pallas_preference(model):
-    """Cached chunked prefill must never route to the offset-less Pallas
-    flash kernel: its causal mask uses chunk-local query positions, so the
-    second chunk would mask out the entire already-prefilled prefix.  The
-    dispatch rule (prefill-with-kv_valid_len → chunked XLA form) keeps a
-    use_pallas config bit-identical to the plain one here."""
+    """Cached chunked prefill under a Pallas preference now routes to the
+    offset-aware flash kernel (interpret mode on this host): absolute-position
+    causal masking means the second chunk still attends the already-prefilled
+    prefix.  This pins the end-to-end engine result against the XLA form —
+    the exact masking bug class PR 2 had to route around."""
     params, cfg = model
     prompt = jnp.asarray(np.arange(12)[None] % 512)
     ref_last, _, _ = engine.chunked_prefill(params, prompt, cfg,
