@@ -4,29 +4,40 @@ Reports throughput (as µs per generated token), p50/p95 per-token latency,
 and batch occupancy against the drain-and-refill bound — the serving-side
 numbers the paper's §4 fusion is supposed to move.  Smoke mode runs a
 seconds-long workload so tier-1 keeps the harness honest.
+
+``paged=True`` serves the same workload through the paged KV cache
+(``repro.serving.paged``): block-pool allocation, a shared prompt prefix so
+the prefix index engages, and extra rows for the block accounting.  The
+common row names are deliberately identical to the slot-pool run so
+``run.py report slotpool.json paged.json`` diffs the two modes directly.
 """
 from __future__ import annotations
 
 import jax
 
 
-def run(smoke: bool = False) -> list:
+def run(smoke: bool = False, paged: bool = False) -> list:
     import repro.configs as configs
     from repro.models import layers as L, transformer
     from repro.serving import scheduler
 
     cfg = configs.get_smoke("smollm_360m")
+    block_size = 8
     if smoke:
         n_req, slots, slot_len, chunk = 6, 2, 40, 8
         prompt_lens, decode_lens, rate = (4, 12), (2, 8), 2.0
+        shared_prefix = 8              # one full block at block_size=8
     else:
         n_req, slots, slot_len, chunk = 32, 8, 96, 16
         prompt_lens, decode_lens, rate = (8, 48), (4, 40), 3.0
+        shared_prefix = 16
+    paged_kw = dict(paged=True, block_size=block_size) if paged else {}
 
     params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
     requests = scheduler.poisson_workload(
         n_req, rate_per_tick=rate, prompt_lens=prompt_lens,
-        decode_lens=decode_lens, vocab=cfg.vocab_size, seed=0)
+        decode_lens=decode_lens, vocab=cfg.vocab_size, seed=0,
+        shared_prefix=shared_prefix if paged else 0)
 
     # warmup: the compiled step functions are shared across scheduler
     # instances, and a prompt of 2*chunk-1 hits every prefill width the
@@ -35,19 +46,19 @@ def run(smoke: bool = False) -> list:
     import numpy as np
     warm = scheduler.ContinuousScheduler(
         params, cfg, num_slots=slots, slot_len=slot_len, prefill_chunk=chunk,
-        top_k=5, base_rng=jax.random.PRNGKey(1))
+        top_k=5, base_rng=jax.random.PRNGKey(1), **paged_kw)
     warm.run([scheduler.Request(rid=0, prompt=np.arange(2 * chunk - 1) % 100,
                                 max_new_tokens=2)])
 
     sched = scheduler.ContinuousScheduler(
         params, cfg, num_slots=slots, slot_len=slot_len, prefill_chunk=chunk,
-        top_k=5, base_rng=jax.random.PRNGKey(0))
+        top_k=5, base_rng=jax.random.PRNGKey(0), **paged_kw)
     report = sched.run(requests)
 
     pct = report.latency_percentiles((50, 95))
     baseline = report.baseline_occupancy(slots)
     tag = "smoke" if smoke else "full"
-    return [
+    rows = [
         (f"serving/{tag}/per_token", 1e6 / max(report.tokens_per_s, 1e-9),
          f"{report.tokens_per_s:.1f}tok/s"),
         (f"serving/{tag}/p50_latency", pct["p50"] * 1e6,
@@ -57,3 +68,10 @@ def run(smoke: bool = False) -> list:
         (f"serving/{tag}/occupancy_pct", report.occupancy * 100.0,
          f"drain_refill={baseline * 100.0:.1f}"),
     ]
+    if report.paged is not None:
+        p = report.paged
+        rows.append((f"serving/{tag}/blocks_shared", float(p["blocks_shared"]),
+                     f"tokens_reused={p['tokens_reused']} "
+                     f"cow={p['cow_copies']} "
+                     f"min_free={p['min_free_blocks']}/{p['num_blocks']}"))
+    return rows

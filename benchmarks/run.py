@@ -7,7 +7,9 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_attention      → beyond-paper (online attention)
   bench_chunked_ce     → beyond-paper (§7 fusion at the LM head)
   bench_serving        → beyond-paper (continuous batching: tok/s, p50/p95
-                         per-token latency, occupancy vs drain-and-refill)
+                         per-token latency, occupancy vs drain-and-refill;
+                         ``--paged`` serves through the paged KV cache and
+                         adds block-sharing accounting)
 
 ``--smoke`` shrinks every sweep to a seconds-long sanity pass (tiny V/batch,
 one case per module) — the tier-1 suite runs it so the harness itself can't
@@ -122,6 +124,10 @@ def main(argv=None) -> int:
                     help=f"subset to run (default: all): {', '.join(mods)}")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, one case per module (CI sanity pass)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serving bench uses the paged KV cache (block pool "
+                         "+ prefix sharing); rows keep the slot-pool names "
+                         "so `report` diffs the two modes directly")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + backend capabilities to PATH")
     args = ap.parse_args(argv)
@@ -131,7 +137,8 @@ def main(argv=None) -> int:
 
     rows = []
     for name in args.benches or list(mods):
-        rows.extend(mods[name].run(smoke=args.smoke))
+        kwargs = {"paged": True} if (args.paged and name == "serving") else {}
+        rows.extend(mods[name].run(smoke=args.smoke, **kwargs))
     emit(rows)
     if args.json:
         from repro import compat

@@ -1,0 +1,46 @@
+"""Paged KV-cache serving — block pool, prefix sharing, copy-on-write live.
+
+Every prompt opens with the same 16-token "system prompt".  The first
+request prefills it; every later overlapping request finds the prefix in the
+block index, adopts the physical blocks (refcount++), copy-on-writes the
+divergence block, and prefills only its own suffix.  Decode then walks each
+sequence's block table — same token streams as the contiguous slot pool,
+bit for bit, with the memory accounting printed to prove the sharing.
+
+    PYTHONPATH=src python examples/serve_paged.py
+"""
+import jax
+
+import repro.configs as configs
+from repro.models import layers as L, transformer
+from repro.serving import scheduler
+
+cfg = configs.get_smoke("smollm_360m")
+params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
+
+SLOTS, SLOT_LEN, BLOCK = 4, 64, 8
+requests = scheduler.poisson_workload(
+    12, rate_per_tick=3.0, prompt_lens=(4, 16), decode_lens=(2, 24),
+    vocab=cfg.vocab_size, seed=0, shared_prefix=16)
+print(f"{len(requests)} requests, all sharing a 16-token prompt prefix "
+      f"(= {16 // BLOCK} full blocks at block_size={BLOCK})")
+
+sched = scheduler.ContinuousScheduler(
+    params, cfg, num_slots=SLOTS, slot_len=SLOT_LEN, prefill_chunk=12,
+    top_k=5, base_rng=jax.random.PRNGKey(42), paged=True, block_size=BLOCK)
+report = sched.run(requests)
+
+pct = report.latency_percentiles((50, 95))
+print(f"served {report.total_tokens} tokens in {report.wall_time:.2f}s "
+      f"→ {report.tokens_per_s:.1f} tok/s "
+      f"(occupancy {report.occupancy:.3f})")
+p = report.paged
+print(f"block pool: {p['num_blocks']}×{p['block_size']}, "
+      f"min free {p['min_free_blocks']}, free at end {p['free_blocks']}")
+print(f"blocks saved by sharing: {p['blocks_shared']}  "
+      f"prefill tokens skipped: {p['tokens_reused']}  "
+      f"copy-on-write copies: {p['cow_copies']}")
+for r in sorted(report.results, key=lambda r: r.rid):
+    print(f"  req {r.rid}: prompt {r.prompt_len:2d} → "
+          f"{len(r.tokens):2d} tokens {r.tokens[:8]}"
+          f"{'…' if len(r.tokens) > 8 else ''}")

@@ -27,9 +27,15 @@ cache hit.  Decisions persist to an on-disk JSON cache (path overridable via
 serving restart skips the sweep entirely.
 
 Attention tile shapes go through the same seam: ``attention_tiles`` resolves
-``bq``/``bk`` for the Pallas flash kernels (decode ``bk`` is swept on native
-backends; prefill tiles come from the registry defaults until the full sweep
-lands), so ``kernels/ops.py`` carries no hard-coded 512s.
+``bq``/``bk`` for the Pallas flash kernels — decode ``bk`` AND the prefill
+forms (fresh, offset, paged ``bq``) are swept on native backends — so
+``kernels/ops.py`` carries no hard-coded 512s.
+
+Paged KV serving adds ``paged_attention`` / ``paged_decode_attention``:
+block-pool K/V addressed through a ``[B, max_blocks]`` block table
+(``sdpa(block_tables=...)`` routes them).  The Pallas paths gather pages in
+kernel index maps; the XLA fallback gathers the table into a contiguous
+cache and reuses the chunked online form.
 """
 from __future__ import annotations
 
@@ -105,14 +111,21 @@ _BLOCK_CACHE: dict[tuple[str, int, str], "BlockDecision"] = {}
 _TILE_CACHE: dict[tuple, "TileDecision"] = {}
 _SWEEPS = 0              # number of real sweeps run (tests assert cache hits)
 
-# Attention tile registry defaults (the former hard-coded ops.py values; the
-# one seam the planned bq/bk sweep extends).  Decode bk is swept on native
-# Pallas backends; the rest resolve to these until their sweeps land.
+# Attention tile registry defaults (the former hard-coded ops.py values).
+# On native Pallas backends every entry is swept: decode ``bk``, prefill
+# ``bq``/``bk`` for the fresh and offset forms, and ``bq`` for the paged
+# form (its KV tile is pinned to the pool block size).  Off-TPU these
+# defaults stand in — an interpret-mode timing would only rank Python
+# overhead.
 ATTN_TILE_DEFAULTS = {
     "flash_attention": {"bq": 512, "bk": 512},
+    "flash_attention_offset": {"bq": 512, "bk": 512},
+    "flash_attention_paged": {"bq": 512},
     "flash_decode": {"bk": 512},
 }
 DECODE_BK_CANDIDATES = (128, 256, 512, 1024)
+PREFILL_TILE_CANDIDATES = (256, 512, 1024)
+_PAGED_TUNE_BLOCK = 128      # synthetic pool page size for the paged sweep
 
 
 @dataclass(frozen=True)
@@ -335,15 +348,67 @@ def _time_decode_bk(kv_len: int, head_dim: int, dtype, bk: int) -> float:
     return best * 1e6
 
 
+def _time_prefill_tiles(op: str, kv_len: int, head_dim: int, dtype,
+                        bq: int, bk: int) -> float:
+    """Time one (bq, bk) candidate of a prefill-form flash kernel.
+
+    ``flash_attention`` times the fresh self-attention form;
+    ``flash_attention_offset`` the cached-chunk form (queries offset halfway
+    into the cache); ``flash_attention_paged`` a synthetic block pool of
+    ``_PAGED_TUNE_BLOCK``-wide pages (bk is the page size there — only bq is
+    a free knob)."""
+    from repro.kernels import ops
+    hq, hkv = 8, 8
+    if op == "flash_attention_paged":
+        bs = _PAGED_TUNE_BLOCK
+        m = max(kv_len // bs, 1)
+        tq = max(min(bq, kv_len), 1)
+        q = jnp.ones((_TUNE_ROWS, tq, hq, head_dim), dtype)
+        pool = jnp.ones((_TUNE_ROWS * m + 1, hkv, bs, head_dim), dtype)
+        tables = (jnp.arange(_TUNE_ROWS * m, dtype=jnp.int32)
+                  .reshape(_TUNE_ROWS, m) + 1)
+        qoff = jnp.full((_TUNE_ROWS,), (m - 1) * bs, jnp.int32)
+        vlen = jnp.full((_TUNE_ROWS,), m * bs, jnp.int32)
+        fn = jax.jit(functools.partial(ops.paged_flash_attention, bq=bq))
+        args = (q, pool, pool, qoff, vlen, tables)
+    elif op == "flash_attention_offset":
+        tq = max(kv_len // 2, 1)
+        q = jnp.ones((_TUNE_ROWS, tq, hq, head_dim), dtype)
+        kv = jnp.ones((_TUNE_ROWS, kv_len, hkv, head_dim), dtype)
+        qoff = jnp.full((_TUNE_ROWS,), kv_len - tq, jnp.int32)
+        vlen = jnp.full((_TUNE_ROWS,), kv_len, jnp.int32)
+        fn = jax.jit(functools.partial(ops.flash_attention, bq=bq, bk=bk))
+        args = (q, kv, kv)
+        fn = functools.partial(fn, q_offset=qoff, kv_valid_len=vlen)
+    else:
+        q = jnp.ones((_TUNE_ROWS, kv_len, hq, head_dim), dtype)
+        kv = jnp.ones((_TUNE_ROWS, kv_len, hkv, head_dim), dtype)
+        fn = jax.jit(functools.partial(ops.flash_attention, bq=bq, bk=bk))
+        args = (q, kv, kv)
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(_TUNE_REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+_PREFILL_TILE_OPS = ("flash_attention", "flash_attention_offset",
+                     "flash_attention_paged")
+
+
 def attention_tiles(op: str, *, kv_len: int, head_dim: int,
                     dtype=jnp.float32) -> dict:
     """Resolved attention tile sizes for ``op`` — the one seam for bq/bk.
 
-    Decode ``bk`` is swept per (backend, kv_len, head_dim, dtype) on backends
-    with native Pallas lowering (a meaningless interpret-mode timing would
-    just rank Python overhead); elsewhere, and for the not-yet-swept prefill
-    tiles, the registry defaults apply.  Decisions are cached in-process and
-    persisted alongside the vocab-block decisions.
+    On backends with native Pallas lowering every form is swept per
+    (backend, kv_len, head_dim, dtype): decode ``bk``, prefill ``bq``/``bk``
+    for the fresh and offset forms, and ``bq`` for the paged form (whose KV
+    tile is the pool block size).  Elsewhere the registry defaults apply (a
+    meaningless interpret-mode timing would just rank Python overhead).
+    Decisions are cached in-process and persisted alongside the vocab-block
+    decisions in the version-stamped ``REPRO_AUTOTUNE_CACHE``.
     """
     kv_len, head_dim = int(kv_len), int(head_dim)
     key = (op, compat.backend(), kv_len, head_dim, jnp.dtype(dtype).name)
@@ -351,8 +416,8 @@ def attention_tiles(op: str, *, kv_len: int, head_dim: int,
     if hit is not None:
         return dict(hit.tiles)
     defaults = dict(ATTN_TILE_DEFAULTS[op])
+    global _SWEEPS
     if op == "flash_decode" and compat.pallas_native():
-        global _SWEEPS
         _SWEEPS += 1
         with jax.ensure_compile_time_eval():
             cands = sorted({min(b, kv_len) for b in DECODE_BK_CANDIDATES
@@ -361,6 +426,25 @@ def attention_tiles(op: str, *, kv_len: int, head_dim: int,
                 (b, round(_time_decode_bk(kv_len, head_dim, dtype, b), 2))
                 for b in cands)
         defaults["bk"] = min(timings, key=lambda t: t[1])[0]
+    elif op in _PREFILL_TILE_OPS and compat.pallas_native():
+        _SWEEPS += 1
+        with jax.ensure_compile_time_eval():
+            bqs = sorted({min(c, kv_len) for c in PREFILL_TILE_CANDIDATES})
+            if op == "flash_attention_paged":   # bk pinned to the page size
+                cands = [(bq, 0) for bq in bqs]
+            else:
+                bks = sorted({min(c, kv_len) for c in PREFILL_TILE_CANDIDATES
+                              if kv_len % min(c, kv_len) == 0})
+                cands = [(bq, bk) for bq in bqs for bk in bks]
+            timings = tuple(
+                ((bq, bk),
+                 round(_time_prefill_tiles(op, kv_len, head_dim, dtype,
+                                           bq, bk), 2))
+                for bq, bk in cands)
+        best_bq, best_bk = min(timings, key=lambda t: t[1])[0]
+        defaults["bq"] = best_bq
+        if "bk" in defaults:
+            defaults["bk"] = best_bk
     else:
         timings = ()
     decision = TileDecision(op=op, backend=key[1], kv_len=kv_len,
@@ -467,6 +551,100 @@ def _decode_attention_xla(cfg, q, k, v, *, q_offset, kv_valid_len, scale):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache: block-pool + block-table attention.  The pools are
+# [P, Hkv, BS, D]; ``block_tables`` [B, M] maps each row's logical blocks to
+# physical pool blocks.  Pallas paths gather pages in the kernel's index
+# maps; the XLA fallback gathers the table into a contiguous [B, M·BS] cache
+# and runs the chunked online form — bit-identical to the contiguous
+# slot-pool path for every valid position (masked columns update (m, d)
+# exactly), which is what the paged serving equivalence tests pin.
+# ---------------------------------------------------------------------------
+def _gather_pages(pool: Array, block_tables: Array) -> Array:
+    """[P, Hkv, BS, D] + [B, M] → contiguous [B, M·BS, Hkv, D] (model layout).
+
+    Positions past a row's ``kv_valid_len`` gather stale or sentinel blocks —
+    finite garbage the attention mask erases exactly."""
+    g = pool[block_tables]                      # [B, M, Hkv, BS, D]
+    g = jnp.swapaxes(g, 2, 3)                   # [B, M, BS, Hkv, D]
+    return g.reshape(block_tables.shape[0], -1, pool.shape[1], pool.shape[3])
+
+
+@register("paged_attention", PATH_PALLAS, PATH_PALLAS_INTERPRET)
+def _paged_attention_pallas(cfg, q, k, v, *, causal, q_offset, kv_valid_len,
+                            block_tables, scale):
+    from repro.kernels import ops
+    return ops.paged_flash_attention(q, k, v, q_offset, kv_valid_len,
+                                     block_tables, causal=causal)
+
+
+@register("paged_attention", PATH_XLA)
+def _paged_attention_xla(cfg, q, k, v, *, causal, q_offset, kv_valid_len,
+                         block_tables, scale):
+    return core.online_attention(
+        q, _gather_pages(k, block_tables), _gather_pages(v, block_tables),
+        causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len,
+        chunk_size=cfg.attn_chunk, scale=scale)
+
+
+@register("paged_decode_attention", PATH_PALLAS)
+def _paged_decode_attention_pallas(cfg, q, k, v, *, q_offset, kv_valid_len,
+                                   block_tables, scale):
+    """Single-token decode over paged KV on the Pallas streaming kernel.
+    The kernel bakes in the default 1/sqrt(d) scale; a custom scale falls
+    back to the gather + chunked XLA form."""
+    if scale is not None and scale != q.shape[-1] ** -0.5:
+        return _paged_decode_attention_xla(
+            cfg, q, k, v, q_offset=q_offset, kv_valid_len=kv_valid_len,
+            block_tables=block_tables, scale=scale)
+    from repro.kernels import ops
+    return ops.paged_flash_decode(q[:, 0], k, v, block_tables,
+                                  kv_valid_len)[:, None]
+
+
+@register("paged_decode_attention", PATH_XLA)
+def _paged_decode_attention_xla(cfg, q, k, v, *, q_offset, kv_valid_len,
+                                block_tables, scale):
+    return core.online_attention(
+        q, _gather_pages(k, block_tables), _gather_pages(v, block_tables),
+        causal=False, q_offset=q_offset, kv_valid_len=kv_valid_len,
+        chunk_size=cfg.attn_chunk, scale=scale)
+
+
+def _paged_sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale,
+                decode, block_tables):
+    """Routing for block-table attention: mirrors the contiguous policy.
+
+    Decode: Pallas paged streaming kernel where native under a Pallas
+    preference, else the gather + chunked XLA form.  Prefill: Pallas
+    (compiled or interpret) under a Pallas preference unless the shape is
+    kernel-unrepresentable (custom scale, value-dim ≠ key-dim), else XLA.
+    Paged serving is single-host: an ambient ShardContext is a routing bug,
+    not a fallback case."""
+    from repro.distributed import context
+    if context.get() is not None:
+        raise NotImplementedError(
+            "paged KV attention has no sharded ⊕-merge form yet; drop the "
+            "ShardContext or serve unpaged")
+    kernel_ok = ((scale is None or scale == q.shape[-1] ** -0.5)
+                 and v.shape[-1] == q.shape[-1])
+    if decode:
+        if cfg.use_pallas and \
+                select_path("paged_decode_attention") == PATH_PALLAS:
+            fn = _REGISTRY["paged_decode_attention"][PATH_PALLAS]
+        else:
+            fn = _REGISTRY["paged_decode_attention"][PATH_XLA]
+        return fn(cfg, q, k, v, q_offset=q_offset, kv_valid_len=kv_valid_len,
+                  block_tables=block_tables, scale=scale)
+    if cfg.use_pallas and kernel_ok:
+        path = select_path("paged_attention", prefer_pallas=True)
+    else:
+        path = PATH_XLA
+    return _REGISTRY["paged_attention"][path](
+        cfg, q, k, v, causal=causal, q_offset=q_offset,
+        kv_valid_len=kv_valid_len, block_tables=block_tables, scale=scale)
+
+
+# ---------------------------------------------------------------------------
 # Public dispatched ops.
 # ---------------------------------------------------------------------------
 def online_softmax(x: Array) -> Array:
@@ -492,13 +670,20 @@ def softmax_topk(x: Array, k: int,
 
 
 def sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale=None,
-         decode: bool = False, k_scale=None, v_scale=None):
+         decode: bool = False, k_scale=None, v_scale=None,
+         block_tables=None):
     """Attention dispatch — the single entry model layers call.
 
-    Routing order: sharded ⊕-merge decode (ambient ``ShardContext``) →
-    int8-cache direct chunked decode → registry (pallas / pallas-interpret /
-    xla-chunked / naive by config preference and backend capability).
+    Routing order: paged block-table attention (``block_tables`` set: K/V
+    are block pools, see ``_paged_sdpa``) → sharded ⊕-merge decode (ambient
+    ``ShardContext``) → int8-cache direct chunked decode → registry (pallas /
+    pallas-interpret / xla-chunked / naive by config preference and backend
+    capability).
     """
+    if block_tables is not None:
+        return _paged_sdpa(cfg, q, k, v, causal=causal, q_offset=q_offset,
+                           kv_valid_len=kv_valid_len, scale=scale,
+                           decode=decode, block_tables=block_tables)
     from repro.distributed import context
     ctx = context.get()
     if decode and ctx is not None:

@@ -28,6 +28,12 @@ Two entry points share the masking math:
   them — ragged slots don't pay HBM traffic for dead tiles.  This is what
   lets cached chunked prefill (queries offset into a longer, partially-valid
   cache) run on the kernel instead of the chunked XLA fallback.
+* ``flash_attention_paged_pallas`` — the paged-KV serving form: same masking
+  math as the offset kernel, but K/V live in a shared pool of fixed-size
+  blocks and a scalar-prefetched ``[B, max_blocks]`` block table maps each
+  row's logical blocks to physical pool blocks.  The K/V index maps gather
+  one pool block per grid step (the tile width IS the block size); dead
+  table entries clamp to the last live block so they are never dereferenced.
 """
 from __future__ import annotations
 
@@ -259,4 +265,131 @@ def flash_attention_offset_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                    jax.ShapeDtypeStruct((b, hq, tq, 1), jnp.float32)],
         interpret=interpret,
     )(q_offset, kv_valid_len, q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Paged form: offset/valid-length prefill over a block pool + block table.
+# ---------------------------------------------------------------------------
+def _make_paged_kernel(*, scale: float, causal: bool, bq: int, bs: int,
+                       n_blocks: int):
+    def kernel(qoff_ref, vlen_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+               lse_ref, m_sc, d_sc, acc_sc):
+        del tbl_ref                   # consumed by the index maps only
+        b = pl.program_id(0)
+        i = pl.program_id(2)          # q block
+        j = pl.program_id(3)          # logical KV block of row b
+
+        @pl.when(j == 0)
+        def _init():
+            _init_scratch(m_sc, d_sc, acc_sc)
+
+        qoff = qoff_ref[b]
+        vlen = vlen_ref[b]
+        # live block: starts inside the valid cache, and (causal) at or below
+        # the absolute diagonal of this q block's last row
+        run = j * bs < vlen
+        if causal:
+            run = jnp.logical_and(run, j * bs <= qoff + i * bq + bq - 1)
+
+        @pl.when(run)
+        def _compute():
+            q = q_ref[0, 0].astype(jnp.float32) * scale      # [BQ, D]
+            k = k_ref[0, 0].astype(jnp.float32)              # [BS, D]
+            v = v_ref[0, 0].astype(jnp.float32)
+            s = q @ k.T                                      # [BQ, BS]
+            k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 1)
+            mask = k_pos < vlen
+            if causal:
+                q_pos = qoff + i * bq + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq, bs), 0)
+                mask = jnp.logical_and(mask, k_pos <= q_pos)
+            _online_update(jnp.where(mask, s, NEG_INF), v, m_sc, d_sc, acc_sc)
+
+        @pl.when(j == n_blocks - 1)
+        def _finalize():
+            d = jnp.maximum(d_sc[...], 1e-30)
+            o_ref[0, 0] = (acc_sc[...] / d).astype(o_ref.dtype)
+            lse_ref[0, 0] = jnp.where(d_sc[...] > 0,
+                                      m_sc[...] + jnp.log(d), NEG_INF)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "interpret"))
+def flash_attention_paged_pallas(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, q_offset: jax.Array,
+                                 kv_valid_len: jax.Array,
+                                 block_tables: jax.Array, *,
+                                 causal: bool = True, bq: int = 512,
+                                 interpret: bool = False):
+    """Paged cached-prefill flash attention.
+
+    q [B, Hq, Tq, D]; pools [P, Hkv, BS, D] (a shared pool of fixed-size KV
+    blocks); q_offset [B]; kv_valid_len [B]; block_tables [B, M] (physical
+    pool block per logical block, scalar-prefetched) →
+    (out [B,Hq,Tq,D], lse [B,Hq,Tq,1]).  Tq % bq == 0 (pad upstream).
+
+    The KV tile is one pool block, gathered through the table by the K/V
+    index maps.  Dead logical blocks (entirely past ``kv_valid_len`` or
+    entirely above the causal diagonal) clamp to the row's last live block —
+    their table entries are never read as addresses and no fetch is
+    scheduled — and partial tail blocks mask out-of-range columns to −inf
+    before the online-softmax update, exactly like the contiguous offset
+    kernel above.  The online ``(m, d)`` carry (paper Alg. 3) is what makes
+    one pass over an arbitrary page list correct.
+    """
+    b, hq, tq, dh = q.shape
+    _, hkv, bs, _ = k_pool.shape
+    m = block_tables.shape[1]
+    g = hq // hkv
+    bq = min(bq, tq)
+    assert tq % bq == 0
+    scale = dh ** -0.5
+    q_offset = jnp.asarray(q_offset, jnp.int32).reshape(b)
+    kv_valid_len = jnp.asarray(kv_valid_len, jnp.int32).reshape(b)
+
+    def last_live_block(b_, i, qoff_ref, vlen_ref):
+        last = jnp.maximum((vlen_ref[b_] + bs - 1) // bs - 1, 0)
+        if causal:
+            diag = (qoff_ref[b_] + i * bq + bq - 1) // bs
+            last = jnp.minimum(last, jnp.maximum(diag, 0))
+        return last
+
+    def kv_index(qoff_ref, vlen_ref, tbl_ref, b_, h, i, j):
+        jc = jnp.minimum(j, last_live_block(b_, i, qoff_ref, vlen_ref))
+        return (tbl_ref[b_, jc], h // g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hq, tq // bq, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh),
+                         lambda b_, h, i, j, qo, vl, tbl: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bs, dh),
+                         lambda b_, h, i, j, qo, vl, tbl: kv_index(
+                             qo, vl, tbl, b_, h, i, j)),
+            pl.BlockSpec((1, 1, bs, dh),
+                         lambda b_, h, i, j, qo, vl, tbl: kv_index(
+                             qo, vl, tbl, b_, h, i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, dh),
+                         lambda b_, h, i, j, qo, vl, tbl: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1),
+                         lambda b_, h, i, j, qo, vl, tbl: (b_, h, i, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dh), jnp.float32)],
+    )
+    out, lse = pl.pallas_call(
+        _make_paged_kernel(scale=scale, causal=causal, bq=bq, bs=bs,
+                           n_blocks=m),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, hq, tq, dh), q.dtype),
+                   jax.ShapeDtypeStruct((b, hq, tq, 1), jnp.float32)],
+        interpret=interpret,
+    )(q_offset, kv_valid_len, jnp.asarray(block_tables, jnp.int32), q,
+      k_pool, v_pool)
     return out, lse

@@ -10,6 +10,15 @@ Grid: (batch, kv_head, kv_block).  All G query heads of a KV group are
 processed together so the score tile is [G, BK] (sublanes × lanes).  The valid
 cache length is a scalar-prefetch operand (SMEM) used to mask the tail tile;
 tiles entirely past ``valid_len`` are skipped.
+
+``flash_decode_paged_pallas`` is the paged-KV form: the cache is a pool of
+fixed-size blocks shared by every sequence and a scalar-prefetched
+``[B, max_blocks]`` block table maps each row's logical block *j* to a
+physical pool block.  The K/V index maps gather one pool block per grid step
+(the paper's order-agnostic ``(m, d)`` update is what makes walking an
+arbitrary page list in one pass safe), clamping dead table entries to the
+row's last live block so they schedule no fetch — the paged twin of the
+offset kernel's clamped index maps.
 """
 from __future__ import annotations
 
@@ -92,4 +101,101 @@ def flash_decode_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
         interpret=interpret,
     )(jnp.asarray(kv_valid_len, jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, hq, dh)
+
+
+# ---------------------------------------------------------------------------
+# Paged form: the cache is a block pool + per-row block table.
+# ---------------------------------------------------------------------------
+def _make_paged_kernel(*, scale: float, g: int, bs: int, n_blocks: int):
+    def kernel(tbl_ref, vlen_ref, q_ref, k_ref, v_ref, o_ref, m_sc, d_sc,
+               acc_sc):
+        b = pl.program_id(0)
+        j = pl.program_id(2)          # logical block of row b
+
+        @pl.when(j == 0)
+        def _init():
+            m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+            d_sc[...] = jnp.zeros_like(d_sc)
+            acc_sc[...] = jnp.zeros_like(acc_sc)
+
+        vlen = vlen_ref[b]
+        run = j * bs < vlen           # skip blocks wholly past the valid cache
+
+        @pl.when(run)
+        def _compute():
+            q = q_ref[0, 0].astype(jnp.float32) * scale     # [G, D]
+            k = k_ref[0, 0].astype(jnp.float32)             # [BS, D]
+            v = v_ref[0, 0].astype(jnp.float32)
+            s = q @ k.T                                     # [G, BS]
+            k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(k_pos < vlen, s, NEG_INF)
+            m_prev = m_sc[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+            alpha = jnp.exp(jnp.where(m_prev == m_new, 0.0, m_prev - m_new))
+            p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - m_new))
+            d_sc[...] = d_sc[...] * alpha + jnp.sum(p, -1, keepdims=True)
+            acc_sc[...] = acc_sc[...] * alpha + p @ v
+            m_sc[...] = m_new
+
+        @pl.when(j == n_blocks - 1)
+        def _finalize():
+            o_ref[0, 0] = (acc_sc[...] /
+                           jnp.maximum(d_sc[...], 1e-30)).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged_pallas(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, block_tables: jax.Array,
+                              kv_valid_len: jax.Array, *,
+                              interpret: bool = False) -> jax.Array:
+    """q [B, Hq, D]; pools [P, Hkv, BS, D]; block_tables [B, M] (physical pool
+    block per logical block, scalar-prefetched); kv_valid_len [B] →
+    out [B, Hq, D].
+
+    The KV tile width is the pool's block size: each grid step streams one
+    physical block, addressed through the table.  Logical blocks at or past
+    ``ceil(valid_len / BS)`` are dead — their table entries may be stale or
+    the sentinel — so the index maps clamp to the row's last live block (no
+    fetch scheduled, compute skipped via ``pl.when``), and the tail block's
+    out-of-range columns are masked to −inf before the online update.
+    """
+    b, hq, dh = q.shape
+    _, hkv, bs, _ = k_pool.shape
+    m = block_tables.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh)
+
+    def page_index(tbl_ref, vlen_ref, b_, h, j):
+        last = jnp.maximum((vlen_ref[b_] + bs - 1) // bs - 1, 0)
+        return (tbl_ref[b_, jnp.minimum(j, last)], h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh),
+                         lambda b_, h, j, tbl, vl: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dh),
+                         lambda b_, h, j, tbl, vl: page_index(tbl, vl, b_,
+                                                              h, j)),
+            pl.BlockSpec((1, 1, bs, dh),
+                         lambda b_, h, j, tbl, vl: page_index(tbl, vl, b_,
+                                                              h, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda b_, h, j, tbl, vl: (b_, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, dh), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _make_paged_kernel(scale=dh ** -0.5, g=g, bs=bs, n_blocks=m),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32),
+      jnp.asarray(kv_valid_len, jnp.int32), qg, k_pool, v_pool)
     return out.reshape(b, hq, dh)

@@ -40,9 +40,13 @@ from repro import compat
 from repro.core import attention as core_attention
 from repro.kernels.flash_attention import (
     flash_attention_offset_pallas,
+    flash_attention_paged_pallas,
     flash_attention_pallas,
 )
-from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.flash_decode import (
+    flash_decode_paged_pallas,
+    flash_decode_pallas,
+)
 from repro.kernels.online_softmax import (
     online_normalizer_pallas,
     online_softmax_pallas,
@@ -218,8 +222,10 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     this form is inference-only (no VJP installed)."""
     if bq is None or bk is None:
         from repro.kernels.dispatch import attention_tiles
-        tiles = attention_tiles("flash_attention", kv_len=k.shape[1],
-                                head_dim=q.shape[-1], dtype=q.dtype)
+        offset_form = q_offset is not None or kv_valid_len is not None
+        tiles = attention_tiles(
+            "flash_attention_offset" if offset_form else "flash_attention",
+            kv_len=k.shape[1], head_dim=q.shape[-1], dtype=q.dtype)
         bq = tiles["bq"] if bq is None else bq
         bk = tiles["bk"] if bk is None else bk
     bq = _largest_divisor_block(q.shape[1], bq)
@@ -268,3 +274,51 @@ def flash_decode(q: Array, k_cache: Array, v_cache: Array,
     bk = _largest_divisor_block(kh.shape[2], bk)
     return flash_decode_pallas(q, kh, vh, kv_valid_len, bk=bk,
                                interpret=compat.pallas_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: block-pool + block-table forms (inference-only).
+# Pool layout is the kernel-native [P, Hkv, BS, D] — one physical block is
+# one KV tile, so the kernels gather pages with zero re-layout on the hot
+# path.  Block tables are CONSUMED here; building them is the exclusive
+# business of ``repro.serving.paged`` (grep-enforced).
+# ---------------------------------------------------------------------------
+def paged_flash_decode(q: Array, k_pool: Array, v_pool: Array,
+                       block_tables: Array, kv_valid_len: Array) -> Array:
+    """Paged decode attention: q [B,Hq,D]; pools [P,Hkv,BS,D]; block_tables
+    [B,M]; kv_valid_len [B] → [B,Hq,D].
+
+    The KV tile width is the pool block size (no free tile knob — paging
+    fixes the gather granularity), so nothing resolves through
+    ``attention_tiles`` here."""
+    return flash_decode_paged_pallas(q, k_pool, v_pool, block_tables,
+                                     kv_valid_len,
+                                     interpret=compat.pallas_interpret())
+
+
+def paged_flash_attention(q: Array, k_pool: Array, v_pool: Array,
+                          q_offset: Array, kv_valid_len: Array,
+                          block_tables: Array, *, causal: bool = True,
+                          bq: int | None = None) -> Array:
+    """Paged cached-prefill flash attention (model layout), inference-only.
+
+    q [B, Tq, Hq, D]; pools [P, Hkv, BS, D]; q_offset / kv_valid_len [B];
+    block_tables [B, M] → out [B, Tq, Hq, D].  ``bq`` unset resolves through
+    the registry's paged-prefill sweep; the KV tile is pinned to the pool
+    block size."""
+    b, tq = q.shape[:2]
+    bs = k_pool.shape[2]
+    if bq is None:
+        from repro.kernels.dispatch import attention_tiles
+        bq = attention_tiles("flash_attention_paged",
+                             kv_len=block_tables.shape[1] * bs,
+                             head_dim=q.shape[-1], dtype=q.dtype)["bq"]
+    bq = _largest_divisor_block(tq, bq)
+    q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    kv_valid_len = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32),
+                                    (b,))
+    out, _ = flash_attention_paged_pallas(
+        jnp.swapaxes(q, 1, 2), k_pool, v_pool, q_offset, kv_valid_len,
+        block_tables, causal=causal, bq=bq,
+        interpret=compat.pallas_interpret())
+    return jnp.swapaxes(out, 1, 2)

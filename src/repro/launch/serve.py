@@ -1,13 +1,18 @@
 """Serving launcher: lockstep baseline and the continuous-batching loop.
 
-``python -m repro.launch.serve --arch smollm-360m --smoke --continuous``
-drives the slot-pool scheduler (``repro.serving.scheduler``) over synthetic
-Poisson-staggered arrivals and reports throughput, p50/p95 per-token latency,
-and batch occupancy against the drain-and-refill bound.  Without
-``--continuous`` the original lockstep batch runs: one shared cache length,
-prefill-everything-then-decode — kept as the baseline the scheduler has to
-beat.  Either way the decode hot path is the paper's §4 scenario: project to
-the vocabulary, fused online-softmax + top-k, sample.
+``python -m repro.launch.serve --smoke --continuous`` drives the slot-pool
+scheduler (``repro.serving.scheduler``) over synthetic Poisson-staggered
+arrivals and reports throughput, p50/p95 per-token latency, and batch
+occupancy against the drain-and-refill bound.  Adding ``--paged`` switches
+the KV cache to the block pool (``repro.serving.paged``): admission gates on
+free blocks, every prompt carries a shared synthetic prefix
+(``--shared-prefix``, the system-prompt pattern), and the report adds
+block-pool accounting — free-block low-water mark, blocks saved by prefix
+sharing, copy-on-write count.  Without ``--continuous`` the original
+lockstep batch runs: one shared cache length, prefill-everything-then-decode
+— kept as the baseline the scheduler has to beat.  Either way the decode hot
+path is the paper's §4 scenario: project to the vocabulary, fused
+online-softmax + top-k, sample.
 """
 from __future__ import annotations
 
@@ -72,20 +77,26 @@ def _continuous(args, cfg, params) -> int:
 
     vocab = cfg.real_vocab_size or cfg.vocab_size
     slot_len = args.max_len or (args.prompt_len + args.tokens + 8)
+    if args.paged:                     # the paged determinism contract
+        slot_len += -slot_len % args.block_size
+    shared_prefix = args.shared_prefix if args.paged else 0
     requests = sched_mod.poisson_workload(
         args.requests, rate_per_tick=args.rate,
         prompt_lens=(max(2, args.prompt_len // 4), args.prompt_len),
         decode_lens=(max(2, args.tokens // 8), args.tokens),
-        vocab=vocab, seed=1)
+        vocab=vocab, seed=1, shared_prefix=shared_prefix)
     sched = sched_mod.ContinuousScheduler(
         params, cfg, num_slots=args.slots, slot_len=slot_len,
         prefill_chunk=args.prefill_chunk, top_k=args.top_k,
-        base_rng=jax.random.PRNGKey(0))
+        base_rng=jax.random.PRNGKey(0), paged=args.paged,
+        block_size=args.block_size,
+        num_blocks=args.blocks or None)
     report = sched.run(requests)
 
     pct = report.latency_percentiles((50, 95))
     baseline = report.baseline_occupancy(args.slots)
-    print(f"continuous batching: {len(report.results)} requests over "
+    mode = "paged continuous batching" if args.paged else "continuous batching"
+    print(f"{mode}: {len(report.results)} requests over "
           f"{args.slots} slots (slot_len={slot_len}, "
           f"prefill_chunk={args.prefill_chunk})")
     print(f"tokens: {report.total_tokens} in {report.wall_time:.2f}s "
@@ -96,9 +107,17 @@ def _continuous(args, cfg, params) -> int:
           f"prefill chunks: {report.prefill_chunks}")
     print(f"batch occupancy: {report.occupancy:.3f} "
           f"(drain-and-refill baseline: {baseline:.3f})")
+    if report.paged is not None:
+        p = report.paged
+        print(f"block pool: {p['num_blocks']}×{p['block_size']} blocks, "
+              f"free now {p['free_blocks']}, "
+              f"min free {p['min_free_blocks']}")
+        print(f"blocks saved by sharing: {p['blocks_shared']} "
+              f"(prefill tokens reused: {p['tokens_reused']}, "
+              f"copy-on-write copies: {p['cow_copies']})")
     evicted = [r.rid for r in report.results if r.evicted]
     if evicted:
-        print(f"evicted at slot capacity: {evicted}")
+        print(f"evicted at capacity: {evicted}")
     if report.occupancy <= baseline:
         print("WARNING: occupancy did not beat the drain-and-refill baseline")
         return 1
@@ -107,7 +126,7 @@ def _continuous(args, cfg, params) -> int:
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="smollm_360m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -124,6 +143,17 @@ def main(argv=None):
                     help="mean arrivals per scheduler tick (continuous mode)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="prompt tokens prefilled per tick (continuous mode)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: block pool + prefix sharing "
+                         "(continuous mode)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="KV block size in tokens (paged mode)")
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="pool capacity in blocks (paged mode; 0 = enough "
+                         "for every slot at full length)")
+    ap.add_argument("--shared-prefix", type=int, default=8,
+                    help="shared synthetic prompt prefix length (paged "
+                         "mode; demonstrates block sharing)")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
@@ -132,6 +162,9 @@ def main(argv=None):
         raise SystemExit("use examples/serve_whisper.py for enc-dec serving")
     if args.continuous and cfg.num_patches:
         raise SystemExit("continuous batching serves text-only archs for now")
+    if args.paged and not args.continuous:
+        raise SystemExit("--paged requires --continuous (the lockstep "
+                         "baseline keeps its contiguous cache)")
 
     params, _ = L.split_params(
         transformer.init(jax.random.PRNGKey(0), cfg))

@@ -160,6 +160,28 @@ def cache_write(cache_arr: Array, new: Array, cache_len) -> Array:
     )(cache_arr, new, ln)
 
 
+def paged_cache_write(pool: Array, new: Array, cache_len,
+                      block_tables: Array) -> Array:
+    """Write ``new`` ([B, t, Hkv, D]) into the block pool ([P, Hkv, BS, D])
+    through the block table ([B, M]).
+
+    Row b's position ``cache_len[b] + i`` lands in physical block
+    ``block_tables[b, pos // BS]`` at offset ``pos % BS``.  The allocator
+    guarantees distinct rows never write the same (block, offset) — shared
+    prefix blocks are copy-on-write'd by ``serving.paged`` before any write —
+    except idle rows (length 0), which all land harmlessly in the sentinel
+    block the allocator never hands out."""
+    b, t = new.shape[:2]
+    bs = pool.shape[2]
+    ln = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    pos = ln[:, None] + jnp.arange(t, dtype=jnp.int32)          # [B, t]
+    bids = jnp.take_along_axis(jnp.asarray(block_tables, jnp.int32),
+                               pos // bs, axis=1)
+    offs = pos % bs
+    flat = new.astype(pool.dtype).reshape((b * t,) + new.shape[2:])
+    return pool.at[bids.reshape(-1), :, offs.reshape(-1)].set(flat)
+
+
 def _valid_len(cache_len, t: int, b: int) -> Array:
     """Per-row valid KV length after writing ``t`` new positions."""
     return jnp.broadcast_to(jnp.asarray(cache_len + t, jnp.int32), (b,))
@@ -167,13 +189,15 @@ def _valid_len(cache_len, t: int, b: int) -> Array:
 
 def _sdpa(cfg: ModelConfig, q, k, v, *, causal, q_offset, kv_valid_len,
           scale: Optional[float] = None, decode: bool = False,
-          k_scale=None, v_scale=None):
+          k_scale=None, v_scale=None, block_tables=None):
     """Attention via the capability-probing registry (kernels.dispatch):
-    shard_map ⊕-merge decode / Pallas (compiled or interpret) / XLA chunked."""
+    shard_map ⊕-merge decode / Pallas (compiled or interpret) / XLA chunked;
+    ``block_tables`` set routes the paged block-pool forms."""
     from repro.kernels import dispatch
     return dispatch.sdpa(cfg, q, k, v, causal=causal, q_offset=q_offset,
                          kv_valid_len=kv_valid_len, scale=scale,
-                         decode=decode, k_scale=k_scale, v_scale=v_scale)
+                         decode=decode, k_scale=k_scale, v_scale=v_scale,
+                         block_tables=block_tables)
 
 
 def _quantize_kv(x: Array) -> tuple[Array, Array]:
@@ -219,13 +243,18 @@ def attention_apply(p: PyTree, x: Array, cfg: ModelConfig, *,
                     positions: Array, causal: bool = True,
                     cache: Optional[dict] = None,
                     cache_len: Optional[Array] = None,
-                    kv_source: Optional[Array] = None):
+                    kv_source: Optional[Array] = None,
+                    block_tables: Optional[Array] = None):
     """x [B, T, D] → (out [B, T, D], new_cache).
 
     * train/prefill: ``cache=None`` (prefill callers build the cache from the
       returned k/v — see ``serving``).
     * decode: ``cache={k,v}`` with static length S, ``cache_len`` giving the
       number of valid entries; the new token is written at ``cache_len``.
+    * paged serving: ``block_tables`` [B, M] set — ``cache`` leaves are block
+      *pools* ([P, Hkv, BS, D], shared by every sequence); this step's K/V
+      are scattered through the table at ``cache_len`` and attention gathers
+      pages (Pallas index maps, or a gather + chunked-XLA fallback).
     * ``kv_source``: cross-attention (whisper decoder) reads K/V from here.
     """
     b, t, d = x.shape
@@ -241,7 +270,19 @@ def attention_apply(p: PyTree, x: Array, cfg: ModelConfig, *,
 
     ctx = _shard_ctx()
     new_cache = None
-    if cache is not None and cfg.kv_cache_dtype == "int8":
+    if cache is not None and block_tables is not None:
+        # paged: scatter this step's K/V into the shared pool through the
+        # block table, then attend over the gathered page list.  fp caches
+        # only (int8 prefill recomputes on exact fp tensors) and single-host
+        # (dispatch raises under an ambient ShardContext).
+        k_pool = paged_cache_write(cache["k"], k, cache_len, block_tables)
+        v_pool = paged_cache_write(cache["v"], v, cache_len, block_tables)
+        new_cache = {"k": k_pool, "v": v_pool}
+        valid = _valid_len(cache_len, t, b)
+        out = _sdpa(cfg, q, k_pool, v_pool, causal=t > 1, q_offset=cache_len,
+                    kv_valid_len=valid, decode=(t == 1),
+                    block_tables=block_tables)
+    elif cache is not None and cfg.kv_cache_dtype == "int8":
         # quantized cache: store int8 + per-(pos, head) scales; decode
         # dequantizes per chunk AFTER the HBM read (1 byte/elem streamed)
         k8, ks = _quantize_kv(k)

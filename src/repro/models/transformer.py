@@ -122,9 +122,18 @@ BLOCK_INIT = {
 
 def block_apply(kind: str, p: PyTree, x: Array, cfg: ModelConfig, *,
                 positions: Array, cache: Optional[PyTree] = None,
-                cache_len: Optional[Array] = None):
-    """Returns (x_out, new_cache, aux-losses dict)."""
+                cache_len: Optional[Array] = None,
+                block_tables: Optional[Array] = None):
+    """Returns (x_out, new_cache, aux-losses dict).
+
+    ``block_tables`` (paged KV serving) is only meaningful for standard
+    attention caches; MLA/SSM/xLSTM block kinds reject it loudly rather than
+    silently ignoring the paging request."""
     aux: dict = {}
+    if block_tables is not None and kind not in ("dense", "moe",
+                                                 "shared_attn"):
+        raise ValueError(f"paged KV cache serves standard attention blocks "
+                         f"only (got {kind!r})")
     if kind in ("dense", "moe", "mla", "shared_attn"):
         h = _norm(cfg, p["ln1"], x)
         attn_cache = None if cache is None else cache["attn"]
@@ -137,7 +146,8 @@ def block_apply(kind: str, p: PyTree, x: Array, cfg: ModelConfig, *,
             a, new_attn_cache = L.attention_apply(p["attn"], h, cfg,
                                                   positions=positions,
                                                   cache=attn_cache,
-                                                  cache_len=cache_len)
+                                                  cache_len=cache_len,
+                                                  block_tables=block_tables)
         x = x + a
         h = _norm(cfg, p["ln2"], x)
         if kind == "moe":
@@ -207,10 +217,14 @@ def _maybe_remat(cfg: ModelConfig, fn, *, inference: bool = False):
 def forward(params: PyTree, tokens: Array, cfg: ModelConfig, *,
             patch_embeds: Optional[Array] = None,
             caches: Optional[list] = None,
-            cache_len: Optional[Array] = None):
+            cache_len: Optional[Array] = None,
+            block_tables: Optional[Array] = None):
     """tokens [B, T] → (hidden [B, T', D], new_caches).
 
     VLM: ``patch_embeds [B, P, D]`` are projected and prepended; T' = P + T.
+    ``block_tables`` [B, M]: paged KV serving — ``caches`` hold block *pools*
+    (no batch axis; see ``serving.engine.init_paged_cache``) and every
+    attention layer reads/writes through the table.
     """
     x = L.embed_tokens(params["embedding"], tokens)
     if cfg.num_patches and patch_embeds is not None:
@@ -233,7 +247,8 @@ def forward(params: PyTree, tokens: Array, cfg: ModelConfig, *,
             step = _maybe_remat(
                 cfg, functools.partial(block_apply, "shared_attn", cfg=cfg,
                                        positions=positions,
-                                       cache_len=cache_len),
+                                       cache_len=cache_len,
+                                       block_tables=block_tables),
                 inference=caches is not None)
             x, nc, _ = step(params["shared_attn"], x, cache=cache)
             new_caches.append(nc)
@@ -245,7 +260,8 @@ def forward(params: PyTree, tokens: Array, cfg: ModelConfig, *,
             p_i, cache_i = layer_in
             out, nc, aux = block_apply(kind, p_i, x, cfg,
                                        positions=positions, cache=cache_i,
-                                       cache_len=cache_len)
+                                       cache_len=cache_len,
+                                       block_tables=block_tables)
             return out, (nc, aux)
 
         body = _maybe_remat(cfg, body, inference=caches is not None)

@@ -21,6 +21,14 @@ on top of that layout:
   with ragged sequence lengths.  Sampling keys are per-slot
   (``sample_per_slot``), which makes a slot's token stream independent of its
   batch neighbours: the scheduler-equivalence guarantee the tests pin.
+* **Paged pool** (``init_paged_cache`` / ``prefill_chunk_paged`` /
+  ``decode_step_paged`` / ``copy_paged_block``): KV memory is a shared pool
+  of fixed-size blocks with per-sequence **block tables** ([B, max_blocks])
+  mapping logical to physical blocks — capacity scales with tokens actually
+  held rather than worst-case slot length, and identical prompt prefixes
+  share physical blocks (copy-on-write on divergence).  Allocation, prefix
+  hashing, and table construction live in ``repro.serving.paged``; these
+  primitives only run model steps through tables they are handed.
 """
 from __future__ import annotations
 
@@ -262,6 +270,85 @@ def decode_step_slots(params: PyTree, caches: list, slot_lens: Array,
     logits = logits_from_hidden(params, hidden[:, -1], cfg)
     next_tok = sample_per_slot(rngs, logits, top_k, temperature)
     return next_tok, new_caches, slot_lens + 1
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: block-pool primitives.  Allocation, prefix sharing, and
+# block-TABLE construction live exclusively in ``repro.serving.paged``
+# (grep-enforced); this module only initializes pools and runs model steps
+# through tables it is handed.
+# ---------------------------------------------------------------------------
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Paged serving covers archs whose caches are all standard attention
+    K/V in a float dtype: every block kind must carry a [.., S, Hkv, D]
+    cache (no SSM/xLSTM recurrent state, no MLA latent cache) and int8
+    caches are out (their prefill computes on exact fp tensors only)."""
+    kinds = {kind for kind, _ in transformer.block_pattern(cfg)}
+    return kinds <= {"dense", "moe"} and cfg.kv_cache_dtype != "int8"
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> list:
+    """Build the per-segment block-pool cache pytree (zeros).
+
+    Leaves are [n_layers, P, Hkv, BS, D] — kernel-native page layout, NO
+    batch axis: the pool is shared by every sequence and block tables carry
+    the per-sequence mapping.  ``num_blocks`` counts physical blocks
+    including the sentinel block 0 (see ``serving.paged.PagedPool``)."""
+    if not paged_supported(cfg):
+        raise ValueError(
+            f"paged KV cache unsupported for arch {cfg.name!r}: needs "
+            "standard fp attention caches in every block "
+            f"(family={cfg.family!r}, kv_cache_dtype={cfg.kv_cache_dtype!r})")
+    dt = jnp.dtype(cfg.dtype)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return [{"attn": {
+        "k": jnp.zeros((count, num_blocks, hkv, block_size, hd), dt),
+        "v": jnp.zeros((count, num_blocks, hkv, block_size, hd), dt)}}
+        for _, count in transformer.block_pattern(cfg)]
+
+
+def copy_paged_block(pools: list, src, dst) -> list:
+    """Copy physical block ``src`` over block ``dst`` in every layer's pool —
+    the copy-on-write primitive behind prefix-sharing divergence."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    return compat.tree_map(
+        lambda x: jax.lax.dynamic_update_slice_in_dim(
+            x, jax.lax.dynamic_slice_in_dim(x, src, 1, axis=1), dst, axis=1),
+        pools)
+
+
+def prefill_chunk_paged(params: PyTree, pools: list, block_tables: Array,
+                        cache_len: Array, tokens: Array, cfg: ModelConfig):
+    """Advance a paged prefill by one chunk: tokens [1, c] are scattered into
+    pool blocks through ``block_tables`` [1, M] at offset ``cache_len`` and
+    attended causally (absolute coordinates) against the already-valid
+    prefix — which may include blocks shared from another request's
+    identical prompt prefix.  Returns (last_hidden [1, D], new pools, new
+    length)."""
+    hidden, new_pools, _ = transformer.forward(
+        params, tokens, cfg, caches=pools, cache_len=cache_len,
+        block_tables=block_tables)
+    return hidden[:, -1], new_pools, cache_len + tokens.shape[1]
+
+
+def decode_step_paged(params: PyTree, pools: list, block_tables: Array,
+                      slot_lens: Array, tokens: Array, cfg: ModelConfig, *,
+                      rngs: Array, top_k: int = 5, temperature: float = 1.0):
+    """One decode step over the paged pool: tokens [B, 1], block_tables
+    [B, M], per-slot lengths [B] → (next_token [B], new pools, lens + 1).
+
+    Identical sampling scheme to ``decode_step_slots`` (per-slot keys), and
+    — because the gather fallback masks exactly and pool values equal what a
+    contiguous slot would hold — identical token streams, which is the
+    equivalence ``tests/test_serving_paged.py`` pins."""
+    hidden, new_pools, _ = transformer.forward(
+        params, tokens, cfg, caches=pools, cache_len=slot_lens,
+        block_tables=block_tables)
+    logits = logits_from_hidden(params, hidden[:, -1], cfg)
+    next_tok = sample_per_slot(rngs, logits, top_k, temperature)
+    return next_tok, new_pools, slot_lens + 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,428 @@
+"""Paged KV-cache serving: block allocator, prefix sharing, block tables.
+
+PR 2's slot pool reserves one contiguous max-length KV region per sequence,
+so batch size is capped by worst-case length and identical prompt prefixes
+are stored once *per request*.  This module replaces the region with a pool
+of fixed-size KV **blocks**:
+
+* ``BlockAllocator`` — a fixed pool of physical blocks with a free list and
+  per-block refcounts.  Allocation is O(1); freeing is refcount-aware, so a
+  block shared by several sequences survives until its last reference drops.
+  Double-frees raise instead of corrupting the pool.
+* ``PrefixIndex`` — hash-of-token-prefix → block chain.  Every *full* prompt
+  block is registered under the chain key of everything before it, so a new
+  request with the same prompt prefix adopts the existing physical blocks
+  (refcount++) instead of recomputing and re-storing them.  Partial tail
+  blocks are indexed too: a new request copies the shared content into a
+  fresh block and prefills only from the point of divergence — block-granular
+  **copy-on-write**.  Entries live exactly as long as the block does (they
+  are dropped when the block is freed), so sharing happens between
+  temporally-overlapping requests; a persistent prefix cache with its own
+  eviction policy is future work.
+* ``PagedPool`` — the serving-facing surface: per-slot **block tables**
+  ([num_slots, max_blocks] int32, physical block per logical block) that the
+  engine's paged steps consume, per-slot lengths, the pooled cache pytree
+  (``engine.init_paged_cache``), and the admission/write/retirement
+  bookkeeping the scheduler drives.  Physical block 0 is a reserved sentinel:
+  dead table entries point at it, and idle batch rows' garbage decode writes
+  land in it, so no allocation is ever aliased by accident.
+
+This is the ONLY module that constructs block tables or touches the
+allocator (grep-enforced by ``tests/test_compat.py``); kernels, dispatch,
+and the engine consume tables they are handed.
+
+Why the paper matters here: the online ``(m, d)`` normalizer update is
+order- and layout-agnostic (§3.1 — any ⊕ reduction tree is exact), so a
+flash kernel can walk an arbitrary page list in ONE pass with no extra
+memory traffic.  A two-pass softmax would have to re-gather every page.
+
+Determinism: ``slot_len`` must be a multiple of ``block_size``, so the
+gathered page list has exactly the contiguous slot's sequence extent; the
+masked online update is exact for invalid columns, making paged decode
+bit-identical per request to the PR-2 slot-pool decode (pinned by
+``tests/test_serving_paged.py``).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving import engine
+
+
+class DoubleFreeError(RuntimeError):
+    """A block was dereferenced more times than it was referenced."""
+
+
+class BlockAllocator:
+    """Fixed pool of physical KV blocks: free list + per-block refcounts.
+
+    ``alloc`` hands out a block with refcount 1; ``incref`` records another
+    holder (prefix sharing); ``decref`` drops one and returns the block to
+    the free list only when the count hits zero.  Invariants (pinned by the
+    property suite): every free-listed block has refcount 0, refcounts are
+    never negative, and free + live always partitions the pool.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError(f"need at least one block (got {num_blocks})")
+        self.num_blocks = int(num_blocks)
+        self._ref = np.zeros(self.num_blocks, np.int32)
+        self._free: deque[int] = deque(range(self.num_blocks))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_blocks(self) -> int:
+        return int((self._ref > 0).sum())
+
+    def refcount(self, bid: int) -> int:
+        return int(self._ref[bid])
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        bid = self._free.popleft()
+        self._ref[bid] = 1
+        return bid
+
+    def incref(self, bid: int) -> None:
+        if self._ref[bid] <= 0:
+            raise ValueError(f"incref of unallocated block {bid}")
+        self._ref[bid] += 1
+
+    def decref(self, bid: int) -> bool:
+        """Drop one reference; True iff the block was returned to the free
+        list (the caller must then invalidate anything indexing it)."""
+        if self._ref[bid] <= 0:
+            raise DoubleFreeError(f"block {bid} freed more times than "
+                                  "referenced")
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            self._free.append(bid)
+            return True
+        return False
+
+    def check_invariants(self) -> None:
+        free = list(self._free)
+        assert len(free) == len(set(free)), "free list holds duplicates"
+        assert all(self._ref[b] == 0 for b in free), \
+            "free-listed block with a live refcount"
+        assert (self._ref >= 0).all(), "negative refcount"
+        assert len(free) + self.live_blocks == self.num_blocks, \
+            "free + live does not partition the pool"
+
+
+class PrefixIndex:
+    """Hash-of-token-prefix → physical block, at block granularity.
+
+    Chain keys are nested tuples ``key_i = (key_{i-1}, tokens_of_block_i)``
+    (exact match — no hash collisions to reason about).  Full blocks map one
+    key to one block; partial tails are kept per chain key as (tokens, block)
+    candidates so a new request can adopt the longest common prefix of a
+    divergence block.  ``drop_block`` is called by the pool the moment a
+    block's refcount hits zero — an index entry therefore always points at
+    live, immutable-prefix content.
+    """
+
+    def __init__(self):
+        self._full: dict[tuple, int] = {}
+        self._partial: dict[tuple, dict[tuple, int]] = {}
+        self._by_block: dict[int, list] = {}
+
+    def lookup(self, key: tuple) -> Optional[int]:
+        return self._full.get(key)
+
+    def lookup_partial(self, key: tuple, rem_tokens, cap: int):
+        """Best divergence-block candidate under chain ``key``: the
+        registered partial whose content shares the longest common prefix
+        (≤ ``cap``) with ``rem_tokens``.  Returns (block, shared_len) or
+        (None, 0)."""
+        best, best_len = None, 0
+        for toks, bid in self._partial.get(key, {}).items():
+            n = 0
+            for a, b in zip(toks, rem_tokens):
+                if a != b or n >= cap:
+                    break
+                n += 1
+            if n > best_len:
+                best, best_len = bid, n
+        return best, best_len
+
+    def register(self, key: tuple, bid: int) -> None:
+        if key in self._full:
+            return                        # first writer wins; same content
+        self._full[key] = bid
+        self._by_block.setdefault(bid, []).append(("full", key))
+
+    def register_partial(self, key: tuple, tokens: tuple, bid: int) -> None:
+        bucket = self._partial.setdefault(key, {})
+        if tokens in bucket:
+            return
+        bucket[tokens] = bid
+        self._by_block.setdefault(bid, []).append(("partial", key, tokens))
+
+    def drop_block(self, bid: int) -> None:
+        for entry in self._by_block.pop(bid, ()):
+            if entry[0] == "full":
+                self._full.pop(entry[1], None)
+            else:
+                bucket = self._partial.get(entry[1])
+                if bucket is not None:
+                    bucket.pop(entry[2], None)
+                    if not bucket:
+                        self._partial.pop(entry[1], None)
+
+    def __len__(self) -> int:
+        return len(self._full) + sum(len(b) for b in self._partial.values())
+
+
+@dataclass
+class PagedSeq:
+    """One admitted sequence's paged-cache state."""
+    slot: int                       # batch row / block-table row
+    prompt: np.ndarray
+    blocks: list = field(default_factory=list)   # physical ids, logical order
+    matched: int = 0                # prompt tokens adopted from the index
+
+
+# The copy-on-write primitive, jitted once per pool shape (shapes recur, so
+# jax.jit's signature cache is the right granularity).
+_copy_block = jax.jit(engine.copy_paged_block, donate_argnums=(0,))
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PagedPool:
+    """Block-pooled KV cache with per-slot block tables — the paged
+    counterpart of ``scheduler.SlotPool``.
+
+    ``num_slots`` bounds the decode batch; ``slot_len`` (a multiple of
+    ``block_size`` — the determinism contract above) bounds one sequence;
+    ``num_blocks`` (default: enough for every slot at full length) is the
+    real capacity lever — admission is gated on free *blocks*, so many short
+    sequences can outnumber the worst-case-length bound that sized PR 2's
+    pool.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, slot_len: int,
+                 block_size: int, num_blocks: Optional[int] = None):
+        if slot_len % block_size:
+            raise ValueError(
+                f"slot_len {slot_len} must be a multiple of block_size "
+                f"{block_size} (bit-identity with the contiguous slot pool "
+                "needs the gathered page list to match the slot extent)")
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.slot_len = slot_len
+        self.block_size = block_size
+        self.max_blocks = slot_len // block_size
+        usable = (num_blocks if num_blocks is not None
+                  else num_slots * self.max_blocks)
+        if usable < 1:
+            raise ValueError(f"need at least one usable block (got {usable})")
+        # +1: physical block 0 is the reserved sentinel (dead table entries,
+        # idle-row garbage writes); the allocator never hands it out again
+        self.alloc = BlockAllocator(usable + 1)
+        self._sentinel = self.alloc.alloc()
+        assert self._sentinel == 0
+        self.index = PrefixIndex()
+        self.caches = engine.init_paged_cache(cfg, usable + 1, block_size)
+        self.lens = jnp.zeros((num_slots,), jnp.int32)
+        self.tables = np.zeros((num_slots, self.max_blocks), np.int32)
+        self._free_rows: deque[int] = deque(range(num_slots))
+        self.seqs: dict[int, PagedSeq] = {}
+        # stats for the smoke run / benchmarks
+        self.blocks_shared = 0          # full blocks adopted via the index
+        self.tokens_reused = 0          # prompt tokens whose prefill was skipped
+        self.cow_copies = 0
+        self.min_free_blocks = self.alloc.free_blocks
+
+    # -- slot-pool-compatible surface ---------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_rows)
+
+    def fits(self, prompt_len: int) -> bool:
+        """Whether a prompt of this length can EVER be admitted: its worst
+        case block need (no sharing, prompt + first decode write) must fit
+        the usable pool, or the FIFO head would wait forever."""
+        return _ceil_div(prompt_len + 1, self.block_size) \
+            <= self.alloc.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return self.alloc.free_blocks
+
+    def device_tables(self, active_slots=None) -> jax.Array:
+        """Block tables for a batched decode step.
+
+        A batched decode writes position ``lens[slot]`` through EVERY row's
+        table — including rows that are idle or mid-prefill, whose lens is 0.
+        Those rows' real tables (installed at admission) must therefore be
+        masked to the sentinel row here, or the garbage write lands at
+        position 0 of a live block — the prefilling request's first block,
+        possibly shared with another sequence.  Pass the decoding slots in
+        ``active_slots``; None returns the raw tables (single-row prefill
+        steps use ``device_row``)."""
+        if active_slots is None:
+            return jnp.asarray(self.tables)
+        t = np.full_like(self.tables, self._sentinel)
+        for s in active_slots:
+            t[s] = self.tables[s]
+        return jnp.asarray(t)
+
+    def device_row(self, slot: int) -> jax.Array:
+        return jnp.asarray(self.tables[slot:slot + 1])
+
+    # -- admission ----------------------------------------------------------
+    def admit(self, prompt: np.ndarray) -> Optional[PagedSeq]:
+        """Match the prompt against the prefix index, then atomically claim a
+        batch row plus the fresh blocks the unmatched part needs (prompt + the
+        first decode write).  None when either is unavailable — the request
+        stays queued.  At most ``len(prompt) - 1`` tokens are adopted: the
+        final prompt position always prefills locally so there is a hidden
+        state to sample the first token from."""
+        if not self._free_rows:
+            return None
+        toks = [int(t) for t in prompt]
+        n = len(toks)
+        bs = self.block_size
+        cap = n - 1
+        shared: list[int] = []
+        key: tuple = ()
+        matched = 0
+        while matched + bs <= cap:
+            k2 = (key, tuple(toks[matched:matched + bs]))
+            bid = self.index.lookup(k2)
+            if bid is None:
+                break
+            shared.append(bid)
+            key = k2
+            matched += bs
+        tail_src, tail_len = (None, 0)
+        if matched < cap:
+            tail_src, tail_len = self.index.lookup_partial(
+                key, toks[matched:], cap - matched)
+        total = _ceil_div(n + 1, bs)
+        fresh_needed = total - len(shared)
+        if self.alloc.free_blocks < fresh_needed:
+            return None
+        slot = self._free_rows.popleft()
+        for bid in shared:
+            self.alloc.incref(bid)
+        blocks = list(shared)
+        for _ in range(fresh_needed):
+            bid = self.alloc.alloc()
+            assert bid is not None          # gated above
+            blocks.append(bid)
+        if tail_src is not None:
+            # copy-on-write at the divergence block: adopt the shared
+            # content, then prefill only from where the prompts part ways
+            self.caches = _copy_block(self.caches, tail_src,
+                                      blocks[len(shared)])
+            self.cow_copies += 1
+            matched += tail_len
+        self.blocks_shared += len(shared)
+        self.tokens_reused += matched
+        self.tables[slot, :len(blocks)] = blocks
+        seq = PagedSeq(slot=slot, prompt=np.asarray(toks, np.int64),
+                       blocks=blocks, matched=matched)
+        self.seqs[slot] = seq
+        self.min_free_blocks = min(self.min_free_blocks,
+                                   self.alloc.free_blocks)
+        return seq
+
+    def finalize_prefill(self, seq: PagedSeq) -> None:
+        """Register the finished prompt's block chain so later arrivals with
+        the same prefix share it.  Full blocks key the exact-match chain;
+        a partial tail registers as a divergence-block candidate."""
+        toks = [int(t) for t in seq.prompt]
+        bs = self.block_size
+        key: tuple = ()
+        n_full = len(toks) // bs
+        for i in range(n_full):
+            tup = tuple(toks[i * bs:(i + 1) * bs])
+            key_i = (key, tup)
+            self.index.register(key_i, seq.blocks[i])
+            if i == n_full - 1 and len(toks) == n_full * bs:
+                # block-aligned prompt: the cap rule (≥ 1 token must prefill
+                # locally) stops an identical prompt one token short of this
+                # block, so register it as a divergence candidate too — the
+                # adopter CoW-copies it and prefills only the final token
+                self.index.register_partial(key, tup, seq.blocks[i])
+            key = key_i
+        rem = tuple(toks[n_full * bs:])
+        if rem:
+            self.index.register_partial(key, rem, seq.blocks[n_full])
+
+    # -- decode-time block upkeep -------------------------------------------
+    def prepare_write(self, slot: int, pos: int) -> bool:
+        """Make position ``pos`` of ``slot`` writable before the decode step:
+        allocate the next block when the write crosses a boundary, and
+        copy-on-write a block some other sequence still references.  False
+        means the pool is out of blocks — the scheduler evicts the sequence,
+        returning its non-shared blocks in the same tick."""
+        seq = self.seqs[slot]
+        bi = pos // self.block_size
+        assert bi <= len(seq.blocks), (bi, len(seq.blocks))
+        if bi < len(seq.blocks):
+            bid = seq.blocks[bi]
+            if self.alloc.refcount(bid) > 1:
+                fresh = self.alloc.alloc()
+                if fresh is None:
+                    return False
+                self.caches = _copy_block(self.caches, bid, fresh)
+                self.alloc.decref(bid)      # refcount ≥ 2: never frees here
+                seq.blocks[bi] = fresh
+                self.tables[slot, bi] = fresh
+                self.cow_copies += 1
+                self.min_free_blocks = min(self.min_free_blocks,
+                                           self.alloc.free_blocks)
+            return True
+        fresh = self.alloc.alloc()
+        if fresh is None:
+            return False
+        seq.blocks.append(fresh)
+        self.tables[slot, len(seq.blocks) - 1] = fresh
+        self.min_free_blocks = min(self.min_free_blocks,
+                                   self.alloc.free_blocks)
+        return True
+
+    # -- retirement ---------------------------------------------------------
+    def release(self, slot: int) -> None:
+        """Retire ``slot``: decref every block it holds (freeing the
+        non-shared ones — a block another live sequence references survives)
+        and return the batch row.  Runs host-side, so freed blocks are
+        admissible in the same scheduler tick."""
+        seq = self.seqs.pop(slot, None)
+        if seq is None:
+            return
+        for bid in seq.blocks:
+            if self.alloc.decref(bid):
+                self.index.drop_block(bid)
+        self.tables[slot, :] = self._sentinel
+        self.lens = self.lens.at[slot].set(0)
+        self._free_rows.append(slot)
+
+    def stats(self) -> dict:
+        return {
+            "block_size": self.block_size,
+            "num_blocks": self.alloc.num_blocks - 1,      # minus sentinel
+            "free_blocks": self.alloc.free_blocks,
+            "min_free_blocks": self.min_free_blocks,
+            "blocks_shared": self.blocks_shared,
+            "tokens_reused": self.tokens_reused,
+            "cow_copies": self.cow_copies,
+        }

@@ -28,12 +28,22 @@ member finishes, leaving slots idle.  This scheduler keeps the batch full:
   Retirement frees the slot in the same tick, so the next queued request is
   admitted without interrupting anyone else.
 
+* **Paged mode** (``paged=True``) — KV memory is a pool of fixed-size blocks
+  with per-slot block tables (``repro.serving.paged``).  Admission is gated
+  on free *blocks* after prefix matching (a request sharing another's prompt
+  prefix adopts its physical blocks and prefills only from the divergence
+  point), prefill chunks and decode tokens write straight into the pool
+  through the table, and retirement — including the new out-of-blocks
+  eviction backstop, which fires *before* a decode step the pool cannot
+  back — returns every non-shared block to the free list in the same tick.
+
 Determinism: a request's sample stream is keyed by (base_rng, request id,
 token index) and sampling is per-slot (``engine.sample_per_slot``), so the
 tokens a request produces are identical to running it alone through the
 single-sequence decode path — regardless of arrival order, batch neighbours,
-or how its prefill was chunked.  ``tests/test_serving_continuous.py`` pins
-this equivalence.
+how its prefill was chunked, or whether its cache was contiguous or paged.
+``tests/test_serving_continuous.py`` and ``tests/test_serving_paged.py`` pin
+these equivalences.
 """
 from __future__ import annotations
 
@@ -94,6 +104,7 @@ class ServeReport:
     prefill_chunks: int
     occupancy: float                    # mean active-slot fraction per decode step
     wall_time: float
+    paged: Optional[dict] = None        # PagedPool.stats() when serving paged
 
     @property
     def total_tokens(self) -> int:
@@ -167,6 +178,23 @@ def _jitted_steps(cfg: ModelConfig, top_k: int, temperature: float):
                                       temperature=temperature)))
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_paged_steps(cfg: ModelConfig, top_k: int, temperature: float):
+    """Paged-mode step functions: decode over (pools, block tables) and the
+    block-table prefill chunk.  Same per-slot PRNG fold as the slot-pool
+    decode, so a request's stream is independent of the cache layout."""
+    def decode(params, pools, tables, lens, tokens, rids, produced, base_rng):
+        keys = jax.vmap(lambda r, p: jax.random.fold_in(
+            jax.random.fold_in(base_rng, r), p))(rids, produced)
+        return engine.decode_step_paged(params, pools, tables, lens, tokens,
+                                        cfg, rngs=keys, top_k=top_k,
+                                        temperature=temperature)
+
+    return (jax.jit(decode, donate_argnums=(1,)),
+            jax.jit(functools.partial(engine.prefill_chunk_paged, cfg=cfg),
+                    donate_argnums=(1,)))
+
+
 # ---------------------------------------------------------------------------
 # Slot pool.
 # ---------------------------------------------------------------------------
@@ -223,10 +251,17 @@ class ContinuousScheduler:
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
                  slot_len: int, prefill_chunk: int = 32, top_k: int = 5,
                  temperature: float = 1.0, base_rng: Optional[Array] = None,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, paged: bool = False,
+                 block_size: int = 8, num_blocks: Optional[int] = None):
         self.params = params
         self.cfg = cfg
-        self.pool = SlotPool(cfg, num_slots, slot_len)
+        self.paged = paged
+        if paged:
+            from repro.serving import paged as paged_mod
+            self.pool = paged_mod.PagedPool(cfg, num_slots, slot_len,
+                                            block_size, num_blocks)
+        else:
+            self.pool = SlotPool(cfg, num_slots, slot_len)
         self.prefill_chunk = max(1, prefill_chunk)
         # int8 caches prefill on the exact fp tensors of the CURRENT chunk
         # only (layers.attention_apply), so their prompts must go in whole
@@ -250,6 +285,9 @@ class ContinuousScheduler:
         self.tokens = jnp.zeros((num_slots,), jnp.int32)
         (self._decode, self._prefill_step, self._logits,
          self._sample) = _jitted_steps(cfg, top_k, float(temperature))
+        if paged:
+            (self._decode_paged, self._prefill_paged) = _jitted_paged_steps(
+                cfg, top_k, float(temperature))
 
     # -- rng ----------------------------------------------------------------
     def _key(self, rid: int, token_index: int) -> Array:
@@ -267,6 +305,10 @@ class ContinuousScheduler:
             raise ValueError(
                 f"request {req.rid}: prompt of {len(req.prompt)} cannot fit a "
                 f"slot of {self.pool.slot_len} with room to decode")
+        if self.paged and not self.pool.fits(len(req.prompt)):
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} can never "
+                "be admitted — its block need exceeds the whole pool")
         if req.rid in self._seen_rids:
             raise ValueError(f"duplicate request id {req.rid}: rids key the "
                              "sample streams and result bookkeeping")
@@ -298,7 +340,8 @@ class ContinuousScheduler:
         return ServeReport(results=self.finished,
                            decode_steps=self.decode_steps,
                            prefill_chunks=self.prefill_chunks,
-                           occupancy=occ, wall_time=wall)
+                           occupancy=occ, wall_time=wall,
+                           paged=self.pool.stats() if self.paged else None)
 
     # -- admission ----------------------------------------------------------
     def _admit(self) -> None:
@@ -312,6 +355,29 @@ class ContinuousScheduler:
         if not arrived:
             return
         req = min(arrived, key=lambda r: r.arrival_tick)
+        if self.paged:
+            # admission gates on free BLOCKS (after prefix matching), not a
+            # whole worst-case-length slot; the FIFO head waits, not skips
+            seq = self.pool.admit(req.prompt)
+            if seq is None:
+                return
+            self.queue.remove(req)
+            result = RequestResult(
+                rid=req.rid, prompt_len=len(req.prompt),
+                arrival_time=self._arrival_times[req.rid])
+            self._prefill = {
+                "flight": _InFlight(req=req, result=result, slot=seq.slot,
+                                    remaining=req.max_new_tokens),
+                "seq": seq,
+                "length": jnp.asarray(seq.matched, jnp.int32),
+                "pos": seq.matched,
+                # prefill resumes at the first unmatched token — shared
+                # prefix blocks already hold bit-identical cache content
+                "sizes": deque(engine.prefill_schedule(
+                    len(req.prompt) - seq.matched, self.prefill_chunk)),
+                "last": None,
+            }
+            return
         self.queue.remove(req)
         result = RequestResult(
             rid=req.rid, prompt_len=len(req.prompt),
@@ -344,8 +410,19 @@ class ContinuousScheduler:
         while budget > 0 and pf["sizes"]:
             width = pf["sizes"].popleft()
             chunk = np.asarray(prompt[pf["pos"]:pf["pos"] + width])[None, :]
-            pf["last"], pf["caches"], pf["length"] = self._prefill_step(
-                self.params, pf["caches"], pf["length"], jnp.asarray(chunk))
+            if self.paged:
+                # chunks write straight into the shared pool through this
+                # sequence's block-table row — no batch-1 scratch cache, no
+                # insert copy at the end
+                pf["last"], self.pool.caches, pf["length"] = \
+                    self._prefill_paged(
+                        self.params, self.pool.caches,
+                        self.pool.device_row(pf["flight"].slot),
+                        pf["length"], jnp.asarray(chunk))
+            else:
+                pf["last"], pf["caches"], pf["length"] = self._prefill_step(
+                    self.params, pf["caches"], pf["length"],
+                    jnp.asarray(chunk))
             pf["pos"] += width
             self.prefill_chunks += 1
             budget -= 1
@@ -364,17 +441,35 @@ class ContinuousScheduler:
         if flight.remaining <= 0 or self._hit_eos(flight):
             self._finish(flight)
             return
-        slot = self.pool.acquire()
-        assert slot is not None          # _admit gated on a free slot
-        self.pool.insert(slot, pf["caches"], int(pf["length"]))
+        if self.paged:
+            slot = flight.slot               # row claimed at admission
+            self.pool.finalize_prefill(pf["seq"])
+            self.pool.lens = self.pool.lens.at[slot].set(int(pf["length"]))
+        else:
+            slot = self.pool.acquire()
+            assert slot is not None          # _admit gated on a free slot
+            self.pool.insert(slot, pf["caches"], int(pf["length"]))
+            flight.slot = slot
         self.tokens = self.tokens.at[slot].set(int(tok[0]))
-        flight.slot = slot
         self.active[slot] = flight
 
     # -- decode -------------------------------------------------------------
     def _decode_tick(self) -> None:
         if not self.active:
             return
+        if self.paged:
+            # make every active row's next write position backed by an
+            # exclusively-owned block (allocate across boundaries, CoW shared
+            # blocks); a row the pool cannot back is evicted HERE, returning
+            # its non-shared blocks to the free list in this same tick
+            lens_pre = np.asarray(self.pool.lens)
+            for slot in list(self.active):
+                flight = self.active[slot]
+                if not self.pool.prepare_write(slot, int(lens_pre[slot])):
+                    flight.result.evicted = True
+                    self._finish(flight)
+            if not self.active:
+                return
         rids = np.full((self.pool.num_slots,), -1, np.int32)   # -1: idle slot
         produced = np.zeros((self.pool.num_slots,), np.int32)  # (sample dropped)
         active_mask = np.zeros((self.pool.num_slots,), bool)
@@ -382,10 +477,20 @@ class ContinuousScheduler:
             rids[s] = flight.req.rid
             produced[s] = flight.produced
             active_mask[s] = True
-        tok, self.pool.caches, new_lens = self._decode(
-            self.params, self.pool.caches, self.pool.lens,
-            self.tokens[:, None], jnp.asarray(rids), jnp.asarray(produced),
-            self.base_rng)
+        if self.paged:
+            # non-active rows (idle OR mid-prefill) are masked to the
+            # sentinel table row: their lens-0 garbage write must land in
+            # block 0, never in a live block a prefill already filled
+            tok, self.pool.caches, new_lens = self._decode_paged(
+                self.params, self.pool.caches,
+                self.pool.device_tables(self.active.keys()),
+                self.pool.lens, self.tokens[:, None], jnp.asarray(rids),
+                jnp.asarray(produced), self.base_rng)
+        else:
+            tok, self.pool.caches, new_lens = self._decode(
+                self.params, self.pool.caches, self.pool.lens,
+                self.tokens[:, None], jnp.asarray(rids),
+                jnp.asarray(produced), self.base_rng)
         # idle slots don't age: their garbage write lands at 0 and is fully
         # overwritten by the next insert
         self.pool.lens = jnp.where(jnp.asarray(active_mask), new_lens, 0)
@@ -418,7 +523,9 @@ class ContinuousScheduler:
         flight.result.finish_time = time.monotonic()
         self.finished.append(flight.result)
         if flight.slot >= 0:
-            del self.active[flight.slot]
+            # paged flights own their row (and blocks) from admission, so a
+            # request retired straight out of prefill is not in `active` yet
+            self.active.pop(flight.slot, None)
             self.pool.release(flight.slot)
 
 
@@ -427,18 +534,25 @@ class ContinuousScheduler:
 # ---------------------------------------------------------------------------
 def poisson_workload(n_requests: int, *, rate_per_tick: float,
                      prompt_lens=(8, 32), decode_lens=(4, 32),
-                     vocab: int = 1000, seed: int = 0) -> list:
+                     vocab: int = 1000, seed: int = 0,
+                     shared_prefix: int = 0) -> list:
     """Staggered synthetic requests: Poisson arrivals (exponential
-    inter-arrival gaps in scheduler ticks), uniform prompt/decode lengths."""
+    inter-arrival gaps in scheduler ticks), uniform prompt/decode lengths.
+
+    ``shared_prefix > 0`` prepends the same random prefix to every prompt —
+    the system-prompt pattern paged serving's prefix index deduplicates."""
     rng = np.random.default_rng(seed)
+    prefix = (rng.integers(0, vocab, shared_prefix) if shared_prefix
+              else None)
     t = 0.0
     out = []
     for rid in range(n_requests):
         t += rng.exponential(1.0 / max(rate_per_tick, 1e-9))
+        body = rng.integers(0, vocab, rng.integers(prompt_lens[0],
+                                                   prompt_lens[1] + 1))
         out.append(Request(
             rid=rid,
-            prompt=rng.integers(0, vocab, rng.integers(prompt_lens[0],
-                                                       prompt_lens[1] + 1)),
+            prompt=body if prefix is None else np.concatenate([prefix, body]),
             max_new_tokens=int(rng.integers(decode_lens[0],
                                             decode_lens[1] + 1)),
             arrival_tick=int(t)))

@@ -123,6 +123,39 @@ def test_version_sensitive_surfaces_centralized():
     assert not offenders, "\n".join(offenders)
 
 
+# Block-table CONSTRUCTION is the exclusive business of serving/paged.py:
+# the allocator, the prefix index, and table row assembly must have exactly
+# one home, or refcount bookkeeping and the sharing invariants fragment.
+# Kernels, dispatch, and the engine only CONSUME tables they are handed.
+_PAGED_ONLY = (
+    ("BlockAllocator(", "allocate blocks via serving.paged.PagedPool"),
+    ("PrefixIndex(", "prefix sharing lives in serving.paged"),
+    ("PagedSeq(", "sequence block bookkeeping lives in serving.paged"),
+)
+
+
+def test_block_table_construction_centralized():
+    offenders = []
+    paged_home = os.path.join(SRC, "serving", "paged.py")
+    for root, _, files in os.walk(SRC):
+        for name in files:
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(root, name)
+            if os.path.abspath(path) == paged_home:
+                continue
+            with open(path) as f:
+                for lineno, line in enumerate(f, 1):
+                    if "``" in line or line.lstrip().startswith("#"):
+                        continue
+                    for pat, why in _PAGED_ONLY:
+                        if pat in line:
+                            offenders.append(
+                                f"{os.path.relpath(path, REPO)}:{lineno} "
+                                f"[{pat!r} → {why}]")
+    assert not offenders, "\n".join(offenders)
+
+
 # ---------------------------------------------------------------------------
 # Dispatch registry: path selection on this backend.
 # ---------------------------------------------------------------------------

@@ -1,0 +1,479 @@
+"""Paged KV-cache serving: allocator invariants, prefix sharing, eviction
+block accounting, and the bit-identity guarantee.
+
+The load-bearing claims (ISSUE 4 acceptance):
+
+* ``BlockAllocator`` never double-frees, refcounts always match the live
+  references, and churn can never oversubscribe the pool (property tests —
+  real hypothesis where installed, the fixed-seed fallback elsewhere).
+* Paged decode/prefill is **bit-identical** per request to the PR-2
+  slot-pool decode (same per-slot PRNG scheme) across arrival orders — the
+  block pool is a layout change, not a numerics change.
+* Two requests sharing a prompt prefix demonstrably share physical blocks
+  (free-block accounting) and diverge correctly after copy-on-write.
+* An ``evicted``-flagged sequence returns its non-shared blocks to the free
+  list in the same tick, and never frees a block whose refcount > 1.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                                    # offline fallback
+    from _hypothesis_compat import given, settings, st
+
+import repro.configs as configs
+from repro.models import layers as L, transformer
+from repro.serving import engine, paged, scheduler
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SLOT_LEN = 48
+BLOCK = 8
+CHUNK = 8
+TOP_K = 5
+BASE_RNG = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("smollm_360m")
+    params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
+    return params, cfg
+
+
+def _key(rid, step):
+    return jax.random.fold_in(jax.random.fold_in(BASE_RNG, rid), step)
+
+
+def _single_sequence_decode(params, cfg, req):
+    """The request alone: slot-pool chunked prefill + batch-1 decode — the
+    PR-2 reference the paged pool must reproduce token-for-token."""
+    last, caches, ln = engine.chunked_prefill(
+        params, jnp.asarray(req.prompt)[None], cfg, max_len=SLOT_LEN,
+        chunk=CHUNK)
+    logits = engine.logits_from_hidden(params, last, cfg)
+    tok = engine.sample_per_slot(_key(req.rid, 0)[None], logits, TOP_K)
+    tokens = [int(tok[0])]
+    lens = jnp.asarray([int(ln)], jnp.int32)
+    for step in range(1, req.max_new_tokens):
+        tok, caches, lens = engine.decode_step_slots(
+            params, caches, lens, tok[:, None], cfg,
+            rngs=_key(req.rid, step)[None], top_k=TOP_K)
+        tokens.append(int(tok[0]))
+    return tokens
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator invariants (property tests).
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=15)
+@given(st.integers(min_value=1, max_value=12),
+       st.lists(st.integers(min_value=0, max_value=2 ** 31 - 1),
+                min_size=0, max_size=120))
+def test_allocator_invariants_under_churn(num_blocks, actions):
+    """Random alloc/incref/decref churn: refcounts track the references we
+    hold, free+live partitions the pool, and allocation past capacity fails
+    cleanly instead of aliasing."""
+    alloc = paged.BlockAllocator(num_blocks)
+    held: dict[int, int] = {}
+    for a in actions:
+        op = a % 3
+        if op == 0:
+            bid = alloc.alloc()
+            if bid is None:
+                assert alloc.free_blocks == 0
+            else:
+                assert bid not in held          # fresh: no aliasing
+                held[bid] = 1
+        elif op == 1 and held:
+            bid = sorted(held)[a % len(held)]
+            alloc.incref(bid)
+            held[bid] += 1
+        elif op == 2 and held:
+            bid = sorted(held)[(a // 3) % len(held)]
+            freed = alloc.decref(bid)
+            held[bid] -= 1
+            if held[bid] == 0:
+                del held[bid]
+                assert freed                    # last ref frees...
+            else:
+                assert not freed                # ...earlier refs never do
+        alloc.check_invariants()
+        for bid, n in held.items():
+            assert alloc.refcount(bid) == n
+        assert alloc.live_blocks == len(held) <= num_blocks
+
+
+def test_allocator_double_free_raises():
+    alloc = paged.BlockAllocator(2)
+    bid = alloc.alloc()
+    assert alloc.decref(bid)
+    with pytest.raises(paged.DoubleFreeError):
+        alloc.decref(bid)
+    with pytest.raises(ValueError):
+        alloc.incref(bid)                       # dead blocks can't be shared
+
+
+def test_allocator_alloc_after_churn_never_exceeds_pool():
+    alloc = paged.BlockAllocator(3)
+    for _ in range(5):
+        got = [alloc.alloc() for _ in range(4)]
+        assert got[3] is None and None not in got[:3]
+        assert sorted(got[:3]) == sorted(set(got[:3]))
+        for bid in got[:3]:
+            alloc.decref(bid)
+        alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: paged serving == single-sequence slot-pool decode.
+# ---------------------------------------------------------------------------
+def _workload(pattern):
+    rng = np.random.default_rng(11)
+    prompt_lens = [4, 6, 9, 13, 16, 18]
+    decode_lens = [5, 3, 6, 4, 5, 3]
+    arrivals = {
+        "burst": [0] * 6,
+        "staggered": [0, 0, 1, 3, 5, 7],
+        "reversed": [0, 6, 5, 4, 3, 2],
+    }[pattern]
+    return [scheduler.Request(
+        rid=i, prompt=rng.integers(0, 512, p), max_new_tokens=d,
+        arrival_tick=a)
+        for i, (p, d, a) in enumerate(zip(prompt_lens, decode_lens,
+                                          arrivals))]
+
+
+@pytest.fixture(scope="module")
+def solo_streams(model):
+    params, cfg = model
+    return {req.rid: _single_sequence_decode(params, cfg, req)
+            for req in _workload("burst")}      # prompts identical per rid
+
+
+@pytest.mark.parametrize("pattern", ["burst", "staggered", "reversed"])
+def test_paged_matches_single_sequence(model, solo_streams, pattern):
+    params, cfg = model
+    requests = _workload(pattern)
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=3, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG, paged=True, block_size=BLOCK)
+    report = sched.run(requests)
+    assert len(report.results) == len(requests)
+    by_rid = {r.rid: r for r in report.results}
+    for req in requests:
+        got = by_rid[req.rid]
+        assert got.tokens == solo_streams[req.rid], (
+            f"request {req.rid} diverged under paged {pattern} arrivals")
+        assert len(got.tokens) == req.max_new_tokens
+        assert not got.evicted
+    # everything was released: the pool drains back to full
+    assert report.paged["free_blocks"] == report.paged["num_blocks"]
+
+
+def test_paged_requires_block_aligned_slots(model):
+    params, cfg = model
+    with pytest.raises(ValueError, match="multiple of block_size"):
+        scheduler.ContinuousScheduler(
+            params, cfg, num_slots=2, slot_len=42, prefill_chunk=CHUNK,
+            top_k=TOP_K, base_rng=BASE_RNG, paged=True, block_size=8)
+
+
+def test_paged_submit_rejects_never_admissible_prompt(model):
+    """A prompt whose worst-case block need exceeds the whole pool must be
+    rejected at submit, not spin in the queue forever."""
+    params, cfg = model
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=2, slot_len=32, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG, paged=True, block_size=8,
+        num_blocks=2)
+    with pytest.raises(ValueError, match="block need exceeds"):
+        sched.submit(scheduler.Request(rid=0, prompt=np.zeros(20, np.int64),
+                                       max_new_tokens=2))
+
+
+def test_paged_rejects_unsupported_archs():
+    cfg = configs.get_smoke("zamba2_1p2b")      # mamba caches can't page
+    with pytest.raises(ValueError, match="paged KV cache unsupported"):
+        engine.init_paged_cache(cfg, num_blocks=4, block_size=8)
+    cfg8 = configs.get_smoke("smollm_360m").replace(kv_cache_dtype="int8")
+    with pytest.raises(ValueError, match="paged KV cache unsupported"):
+        engine.init_paged_cache(cfg8, num_blocks=4, block_size=8)
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing + copy-on-write.
+# ---------------------------------------------------------------------------
+def _shared_prefix_requests(vocab=512, seed=3):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, 2 * BLOCK + 2)   # 2 full blocks + 2 tail
+    return prefix, [
+        scheduler.Request(rid=0,
+                          prompt=np.concatenate([prefix,
+                                                 rng.integers(0, vocab, 5)]),
+                          max_new_tokens=6, arrival_tick=0),
+        scheduler.Request(rid=1,
+                          prompt=np.concatenate([prefix,
+                                                 rng.integers(0, vocab, 3)]),
+                          max_new_tokens=6, arrival_tick=1),
+        scheduler.Request(rid=2, prompt=prefix.copy(),   # identical prompt
+                          max_new_tokens=6, arrival_tick=2),
+    ]
+
+
+def test_prefix_sharing_shares_blocks_and_diverges_after_cow(model):
+    """The acceptance scenario: overlapping requests with a common prompt
+    prefix share physical blocks (measured in block accounting), the
+    divergence block is copy-on-write'd, and every stream still equals the
+    request running alone."""
+    params, cfg = model
+    _, requests = _shared_prefix_requests()
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=3, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG, paged=True, block_size=BLOCK)
+    report = sched.run(requests)
+    stats = report.paged
+    assert stats["blocks_shared"] >= 4          # 2 full blocks × 2 adopters
+    assert stats["cow_copies"] >= 2             # each adopter CoWs the tail
+    assert stats["tokens_reused"] >= 4 * BLOCK
+    by_rid = {r.rid: r for r in report.results}
+    for req in requests:
+        want = _single_sequence_decode(params, cfg, req)
+        assert by_rid[req.rid].tokens == want, (
+            f"request {req.rid} diverged under prefix sharing")
+    assert stats["free_blocks"] == stats["num_blocks"]
+
+
+def test_shared_blocks_reduce_pool_pressure(model):
+    """Free-block measurement: serving the same prompt twice concurrently
+    must consume fewer blocks than two disjoint prompts."""
+    params, cfg = model
+    rng = np.random.default_rng(9)
+    common = rng.integers(0, 512, 2 * BLOCK + 1)
+
+    def min_free(prompts):
+        sched = scheduler.ContinuousScheduler(
+            params, cfg, num_slots=2, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+            top_k=TOP_K, base_rng=BASE_RNG, paged=True, block_size=BLOCK)
+        reqs = [scheduler.Request(rid=i, prompt=p, max_new_tokens=8,
+                                  arrival_tick=i)
+                for i, p in enumerate(prompts)]
+        return sched.run(reqs).paged["min_free_blocks"]
+
+    shared = min_free([common, common.copy()])
+    disjoint = min_free([common, rng.integers(0, 512, 2 * BLOCK + 1)])
+    assert shared > disjoint        # the adopted full blocks were not re-alloc'd
+
+
+def test_decode_tick_does_not_corrupt_inflight_prefill_blocks(model):
+    """Regression (cache-content, not token-stream, sensitivity): a batched
+    decode step writes position ``lens``=0 through every non-active row.  A
+    mid-prefill row already has a REAL block table installed, so its rows
+    must be masked to the sentinel for the decode — otherwise the garbage
+    write lands at position 0 of the request's first (possibly shared)
+    block.  Token streams can mask this through top-k sampling; the pool's
+    block contents cannot."""
+    params, cfg = model
+    pool = paged.PagedPool(cfg, num_slots=2, slot_len=24, block_size=8)
+    rng = np.random.default_rng(17)
+    pa, pb = rng.integers(0, 512, 9), rng.integers(0, 512, 12)
+    # A: fully prefilled and decoding
+    sa = pool.admit(pa)
+    last, pool.caches, ln_a = engine.prefill_chunk_paged(
+        params, pool.caches, pool.device_row(sa.slot),
+        jnp.asarray(0, jnp.int32), jnp.asarray(pa)[None], cfg)
+    pool.finalize_prefill(sa)
+    pool.lens = pool.lens.at[sa.slot].set(int(ln_a))
+    # B: first chunk written, prefill still in flight (lens stays 0)
+    sb = pool.admit(pb)
+    _, pool.caches, ln_b = engine.prefill_chunk_paged(
+        params, pool.caches, pool.device_row(sb.slot),
+        jnp.asarray(0, jnp.int32), jnp.asarray(pb[:7])[None], cfg)
+    snapshot = [np.asarray(leaf[:, bid])
+                for bid in sb.blocks
+                for leaf in jax.tree.leaves(pool.caches[0])]
+    # one interleaved decode tick over the pool: only A is active
+    assert pool.prepare_write(sa.slot, int(ln_a))
+    tok, pool.caches, new_lens = engine.decode_step_paged(
+        params, pool.caches, pool.device_tables(active_slots=[sa.slot]),
+        pool.lens, jnp.asarray([[3], [0]], jnp.int32), cfg,
+        rngs=jnp.stack([_key(0, 1), _key(1, 0)]), top_k=TOP_K)
+    after = [np.asarray(leaf[:, bid])
+             for bid in sb.blocks
+             for leaf in jax.tree.leaves(pool.caches[0])]
+    for want, got in zip(snapshot, after):
+        np.testing.assert_array_equal(want, got)
+    # and B's finished cache equals the solo chunked prefill, bit for bit
+    _, pool.caches, ln_b = engine.prefill_chunk_paged(
+        params, pool.caches, pool.device_row(sb.slot), ln_b,
+        jnp.asarray(pb[7:])[None], cfg)
+    _, solo_caches, _ = engine.chunked_prefill(
+        params, jnp.asarray(pb)[None], cfg, max_len=24, chunk=7)
+    kb = np.asarray(jax.tree.leaves(pool.caches[0])[0])      # [L, P, H, BS, D]
+    ks = np.asarray(jax.tree.leaves(solo_caches[0])[0])      # [L, 1, S, H, D]
+    for j, bid in enumerate(sb.blocks):
+        for pos in range(8):
+            abs_pos = j * 8 + pos
+            if abs_pos >= len(pb):
+                break
+            np.testing.assert_array_equal(
+                kb[:, bid, :, pos], ks[:, 0, abs_pos],
+                err_msg=f"K mismatch at position {abs_pos}")
+
+
+def test_block_aligned_prompt_shares_final_block(model):
+    """An identical block-aligned prompt must adopt every block: k-1 full
+    blocks read-only plus the last one copy-on-write (the cap rule keeps one
+    token to prefill locally) — no re-prefill of a whole block."""
+    params, cfg = model
+    pool = paged.PagedPool(cfg, num_slots=2, slot_len=32, block_size=8)
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, 512, 16)            # exactly 2 blocks
+    sa = pool.admit(prompt)
+    pool.finalize_prefill(sa)
+    sb = pool.admit(prompt.copy())
+    assert sb.blocks[0] == sa.blocks[0]          # full block shared
+    assert sb.blocks[1] != sa.blocks[1]          # last block CoW'd, not shared
+    assert sb.matched == 15                      # only the final token prefills
+    assert pool.cow_copies == 1
+    assert pool.alloc.refcount(sa.blocks[0]) == 2
+    assert pool.alloc.refcount(sa.blocks[1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Eviction block accounting (the satellite regression).
+# ---------------------------------------------------------------------------
+def test_eviction_returns_nonshared_blocks_same_tick(model):
+    """Pool-level regression with a full pool and a shared prefix: releasing
+    an evicted sequence frees exactly its non-shared blocks immediately and
+    never frees a block whose refcount > 1."""
+    params, cfg = model
+    pool = paged.PagedPool(cfg, num_slots=2, slot_len=16, block_size=4,
+                           num_blocks=5)
+    rng = np.random.default_rng(1)
+    prefix = rng.integers(0, 512, 8)            # 2 full blocks at bs=4
+    pa = np.concatenate([prefix, rng.integers(0, 512, 2)])   # 3 blocks total
+    sa = pool.admit(pa)
+    assert sa is not None and len(sa.blocks) == 3
+    pool.finalize_prefill(sa)
+    sb = pool.admit(np.concatenate([prefix, rng.integers(0, 512, 1)]))
+    assert sb is not None
+    assert sb.blocks[:2] == sa.blocks[:2]       # full prefix blocks shared
+    assert sb.matched >= 8
+    assert pool.alloc.refcount(sa.blocks[0]) == 2
+    assert pool.free_blocks == 1
+    # A grows into the last free block; B's next boundary crossing starves
+    assert pool.prepare_write(sa.slot, 12)      # A: new block → free = 0
+    assert pool.free_blocks == 0
+    assert not pool.prepare_write(sb.slot, 12)  # B: out of blocks → evict
+    before = pool.free_blocks
+    pool.release(sb.slot)                       # same-tick release
+    # B held 2 shared (survive: refcount was 2) + 1 private (freed)
+    assert pool.free_blocks == before + 1
+    assert pool.alloc.refcount(sa.blocks[0]) == 1
+    assert pool.alloc.refcount(sa.blocks[1]) == 1
+    pool.alloc.check_invariants()
+    # A is untouched and can now take the freed block
+    assert pool.prepare_write(sa.slot, 16 - 1)
+    pool.release(sa.slot)
+    pool.alloc.check_invariants()
+    assert pool.free_blocks == 5                # everything back, no leak
+
+
+def test_scheduler_evicts_on_block_exhaustion_and_recovers(model):
+    """End-to-end: a pool too small for the workload evicts (flagged) but
+    serves every request, and the free list drains back to full — blocks
+    freed by eviction are re-admitted in the same tick."""
+    params, cfg = model
+    rng = np.random.default_rng(5)
+    requests = [scheduler.Request(rid=i, prompt=rng.integers(0, 512, 9),
+                                  max_new_tokens=20, arrival_tick=0)
+                for i in range(4)]
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=2, slot_len=32, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG, paged=True, block_size=8,
+        num_blocks=5)                           # 2 seqs need 3 each + growth
+    report = sched.run(requests)
+    assert len(report.results) == 4
+    assert any(r.evicted for r in report.results)
+    for r in report.results:                    # evicted still produced tokens
+        assert len(r.tokens) >= 1
+    assert report.paged["free_blocks"] == report.paged["num_blocks"]
+    assert report.paged["min_free_blocks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Pallas preference (interpret on CI) through the paged engine steps.
+# ---------------------------------------------------------------------------
+def test_paged_prefill_correct_under_pallas_preference(model):
+    """One paged prefill chunk at a nonzero offset under use_pallas must
+    match the XLA gather fallback — the kernel-routing twin of the PR-3
+    offset-prefill test."""
+    params, cfg = model
+    pool = paged.PagedPool(cfg, num_slots=1, slot_len=24, block_size=8)
+    prompt = jnp.asarray(np.arange(12)[None] % 512)
+    seq = pool.admit(np.asarray(prompt[0]))
+    table = pool.device_row(seq.slot)
+    ln = jnp.asarray(0, jnp.int32)
+    _, caches, ln = engine.prefill_chunk_paged(
+        params, pool.caches, table, ln, prompt[:, :7], cfg)
+    ref_last, _, _ = engine.prefill_chunk_paged(
+        params, caches, table, ln, prompt[:, 7:], cfg)
+    got_last, _, _ = engine.prefill_chunk_paged(
+        params, caches, table, ln, prompt[:, 7:],
+        cfg.replace(use_pallas=True))
+    np.testing.assert_allclose(np.asarray(got_last), np.asarray(ref_last),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# CI tooling: serve CLI + benchmark harness exercise the paged path.
+# ---------------------------------------------------------------------------
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    return env
+
+
+def test_serve_cli_paged_smoke():
+    """`python -m repro.launch.serve --smoke --continuous --paged` reports
+    tok/s, occupancy, and blocks saved by sharing."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--smoke",
+         "--continuous", "--paged", "--requests", "5", "--tokens", "8",
+         "--prompt-len", "10", "--slots", "2", "--rate", "3.0",
+         "--prefill-chunk", "8", "--block-size", "8", "--shared-prefix", "8"],
+        env=_env(), capture_output=True, text=True, timeout=600, cwd=REPO)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "tok/s" in out.stdout
+    assert "batch occupancy" in out.stdout
+    assert "blocks saved by sharing:" in out.stdout
+    saved = int(out.stdout.split("blocks saved by sharing:")[1].split()[0])
+    assert saved > 0, out.stdout               # the shared prefix deduplicated
+
+
+def test_benchmarks_serving_paged_records_json(tmp_path):
+    """`benchmarks/run.py serving --paged --json` lands the paged rows —
+    same names as the slot-pool run (so `report` diffs them) plus the
+    block-sharing accounting."""
+    import json
+    json_path = str(tmp_path / "paged.json")
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "--smoke", "serving", "--paged", "--json", json_path],
+        env=_env(), capture_output=True, text=True, timeout=600, cwd=REPO)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    with open(json_path) as f:
+        data = json.load(f)
+    rows = {r["name"]: r for r in data["rows"]}
+    assert {"serving/smoke/per_token", "serving/smoke/occupancy_pct",
+            "serving/smoke/blocks_shared"} <= set(rows)
+    assert rows["serving/smoke/blocks_shared"]["us_per_call"] > 0
+    assert "cow=" in rows["serving/smoke/blocks_shared"]["derived"]
