@@ -10,20 +10,29 @@ seconds-long workload so tier-1 keeps the harness honest.
 the prefix index engages, and extra rows for the block accounting.  The
 common row names are deliberately identical to the slot-pool run so
 ``run.py report slotpool.json paged.json`` diffs the two modes directly.
+
+``priorities=True`` makes the workload mixed-priority (two classes, the
+urgent one deadline-bearing) over a deliberately undersized block pool, and
+adds SLO-attainment / p95-by-class / preemption rows; ``preempt=False``
+serves the identical workload with preempt-and-swap disabled, so
+``run.py report preempt_off.json preempt_on.json`` isolates what preemption
+buys the urgent class.
 """
 from __future__ import annotations
 
 import jax
 
 
-def run(smoke: bool = False, paged: bool = False) -> list:
+def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
+        preempt: bool = True) -> list:
     import repro.configs as configs
     from repro.models import layers as L, transformer
     from repro.serving import scheduler
 
     cfg = configs.get_smoke("smollm_360m")
     block_size = 8
-    if smoke:
+    slo_ms = 60_000.0                  # generous CPU-CI deadline: the metric
+    if smoke:                          # should move, not saturate at 0
         n_req, slots, slot_len, chunk = 6, 2, 40, 8
         prompt_lens, decode_lens, rate = (4, 12), (2, 8), 2.0
         shared_prefix = 8              # one full block at block_size=8
@@ -32,12 +41,22 @@ def run(smoke: bool = False, paged: bool = False) -> list:
         prompt_lens, decode_lens, rate = (8, 48), (4, 40), 3.0
         shared_prefix = 16
     paged_kw = dict(paged=True, block_size=block_size) if paged else {}
+    if priorities and paged:
+        # undersize the pool so urgent arrivals actually contend with
+        # running low-priority decodes — the regime preemption exists for
+        paged_kw["num_blocks"] = (slots + 1) * (slot_len // block_size) // 2
+    paged_kw["preempt"] = preempt
 
     params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
+    # priorities seed: urgent (priority-0) arrivals land AFTER low-priority
+    # decodes occupy the pool — the contention preemption exists to resolve
     requests = scheduler.poisson_workload(
         n_req, rate_per_tick=rate, prompt_lens=prompt_lens,
-        decode_lens=decode_lens, vocab=cfg.vocab_size, seed=0,
-        shared_prefix=shared_prefix if paged else 0)
+        decode_lens=decode_lens, vocab=cfg.vocab_size,
+        seed=6 if priorities else 0,
+        shared_prefix=shared_prefix if paged else 0,
+        priority_classes=2 if priorities else 1,
+        slo_ms=slo_ms if priorities else None)
 
     # warmup: the compiled step functions are shared across scheduler
     # instances, and a prompt of 2*chunk-1 hits every prefill width the
@@ -47,8 +66,19 @@ def run(smoke: bool = False, paged: bool = False) -> list:
     warm = scheduler.ContinuousScheduler(
         params, cfg, num_slots=slots, slot_len=slot_len, prefill_chunk=chunk,
         top_k=5, base_rng=jax.random.PRNGKey(1), **paged_kw)
-    warm.run([scheduler.Request(rid=0, prompt=np.arange(2 * chunk - 1) % 100,
-                                max_new_tokens=2)])
+    warm_reqs = [scheduler.Request(rid=0, prompt=np.arange(2 * chunk - 1)
+                                   % 100, max_new_tokens=2)]
+    if priorities and preempt:
+        # also warm the preempt-and-swap path (swap-in's block restore jits
+        # once per pool shape): low-priority decodes filling every row, then
+        # an urgent arrival that must swap one out
+        warm_reqs = [
+            scheduler.Request(rid=i, prompt=np.arange(2 * chunk - 1) % 100,
+                              max_new_tokens=10, priority=1)
+            for i in range(slots)
+        ] + [scheduler.Request(rid=slots, prompt=np.arange(chunk) % 100,
+                               max_new_tokens=2, arrival_tick=3, priority=0)]
+    warm.run(warm_reqs)
 
     sched = scheduler.ContinuousScheduler(
         params, cfg, num_slots=slots, slot_len=slot_len, prefill_chunk=chunk,
@@ -74,4 +104,22 @@ def run(smoke: bool = False, paged: bool = False) -> list:
                      f"tokens_reused={p['tokens_reused']} "
                      f"cow={p['cow_copies']} "
                      f"min_free={p['min_free_blocks']}/{p['num_blocks']}"))
+    if priorities:
+        att = report.slo_attainment()
+        bearing = sum(1 for r in report.results if r.slo_ms is not None)
+        by_class = report.latency_percentiles_by_class((95,))
+        rows.append((f"serving/{tag}/slo_attained_pct",
+                     (att or 0.0) * 100.0,
+                     f"slo_ms={slo_ms:.0f} n={bearing} "
+                     f"preempt={'on' if preempt else 'off'}"))
+        rows.append((f"serving/{tag}/p95_latency_hipri",
+                     by_class.get(0, {}).get("p95", 0.0) * 1e6,
+                     "priority=0"))
+        if report.paged is not None:
+            p = report.paged
+            rows.append((f"serving/{tag}/preemptions",
+                         float(report.preemptions),
+                         f"swap_out={p['swapped_blocks_out']} "
+                         f"swap_in={p['swapped_blocks_in']} "
+                         f"reclaimed={p['reclaimed_blocks']}"))
     return rows

@@ -128,6 +128,14 @@ def main(argv=None) -> int:
                     help="serving bench uses the paged KV cache (block pool "
                          "+ prefix sharing); rows keep the slot-pool names "
                          "so `report` diffs the two modes directly")
+    ap.add_argument("--priorities", action="store_true",
+                    help="serving bench uses a mixed-priority workload and "
+                         "adds SLO-attainment / p95-by-class / preemption "
+                         "rows")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="serving bench disables preempt-and-swap (the "
+                         "baseline `report` diffs a --priorities run "
+                         "against)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + backend capabilities to PATH")
     args = ap.parse_args(argv)
@@ -137,7 +145,14 @@ def main(argv=None) -> int:
 
     rows = []
     for name in args.benches or list(mods):
-        kwargs = {"paged": True} if (args.paged and name == "serving") else {}
+        kwargs = {}
+        if name == "serving":
+            if args.paged:
+                kwargs["paged"] = True
+            if args.priorities:
+                kwargs["priorities"] = True
+            if args.no_preempt:
+                kwargs["preempt"] = False
         rows.extend(mods[name].run(smoke=args.smoke, **kwargs))
     emit(rows)
     if args.json:

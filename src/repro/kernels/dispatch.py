@@ -679,6 +679,42 @@ def sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale=None,
     ``ShardContext``) → int8-cache direct chunked decode → registry (pallas /
     pallas-interpret / xla-chunked / naive by config preference and backend
     capability).
+
+    Arguments
+    ---------
+    cfg:
+        Model config; ``cfg.use_pallas`` / ``cfg.use_online_attention``
+        state the path preference, ``cfg.attn_chunk`` sizes the chunked
+        XLA form.
+    q, k, v:
+        q [B, Tq, Hq, D].  Contiguous: k/v [B, S, Hkv, D] caches (or fresh
+        prompt K/V).  Paged: k/v are block *pools* [P, Hkv, BS, D] shared
+        by every sequence.
+    causal:
+        Causal masking in absolute coordinates (``k_pos ≤ q_offset + i``).
+    q_offset:
+        Absolute position of query row 0 — scalar, or [B] with one offset
+        per slot (continuous batching; a resumed preempted sequence simply
+        carries its pre-swap length here).
+    kv_valid_len:
+        Valid cache prefix per row (scalar or [B]); columns at or past it
+        are masked to −inf before the online ``(m, d)`` update, which is
+        exact — ragged slots, dead page entries, and pool padding cannot
+        perturb numerics.
+    scale:
+        Softmax scale; None = 1/√D.  A custom scale (MLA) pins the chunked
+        XLA form — the kernels bake the default in.
+    decode:
+        Single-token decode (Tq == 1 semantics): routes the streaming
+        decode kernels / decode registry ops instead of the prefill forms.
+    k_scale, v_scale:
+        Per-position int8-cache dequant scales ([B, S, Hkv]); their
+        presence selects the direct dequantizing chunked path
+        (inference-only).
+    block_tables:
+        [B, max_blocks] logical→physical block map (paged serving).  Built
+        ONLY by ``repro.serving.paged``; consumed here.  Selects the paged
+        registry ops with the gather + chunked-XLA fallback off-TPU.
     """
     if block_tables is not None:
         return _paged_sdpa(cfg, q, k, v, causal=causal, q_offset=q_offset,

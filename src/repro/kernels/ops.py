@@ -209,6 +209,13 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                     kv_valid_len: Array | None = None) -> Array:
     """Online-softmax attention (Pallas fwd on TPU).
 
+    q [B, Tq, Hq, D]; k, v [B, Tk, Hkv, D] (grouped-query: Hq a multiple
+    of Hkv) → out [B, Tq, Hq, D].
+
+    ``causal``: mask queries from keys after them (in absolute coordinates
+    when the serving operands below are set); False runs full
+    cross-attention over the valid prefix.
+
     ``bq``/``bk`` unset → the dispatch registry's resolved tiles (kernel
     tests pin explicit values; nothing here is hard-coded).
 
@@ -219,7 +226,11 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     masking runs in absolute coordinates and out-of-range KV columns are
     masked before the online update.  KV is padded up to a tile multiple
     (padded columns sit past ``kv_valid_len``, so the mask erases them) —
-    this form is inference-only (no VJP installed)."""
+    this form is inference-only (no VJP installed).  This is the operand
+    pair the serving stack threads per slot: the scheduler's chunked
+    prefill passes ``q_offset = cache_len`` (a [B] vector under continuous
+    batching, including a just-swapped-in sequence resuming at its
+    pre-preemption length) and ``kv_valid_len = cache_len + chunk``."""
     if bq is None or bk is None:
         from repro.kernels.dispatch import attention_tiles
         offset_form = q_offset is not None or kv_valid_len is not None

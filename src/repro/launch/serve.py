@@ -8,7 +8,13 @@ the KV cache to the block pool (``repro.serving.paged``): admission gates on
 free blocks, every prompt carries a shared synthetic prefix
 (``--shared-prefix``, the system-prompt pattern), and the report adds
 block-pool accounting — free-block low-water mark, blocks saved by prefix
-sharing, copy-on-write count.  Without ``--continuous`` the original
+sharing, copy-on-write count, persistent-prefix-cache residency/hits.
+``--priority-classes N`` makes the workload mixed-priority (admission
+orders by (priority, arrival); in paged mode a blocked urgent request
+preempts lower-priority decodes by swapping their blocks out — disable
+with ``--no-preempt``) and ``--slo-ms`` attaches a completion deadline to
+the urgent class; the report then adds p95-by-class, SLO attainment, and
+preemption/swap counts.  Without ``--continuous`` the original
 lockstep batch runs: one shared cache length, prefill-everything-then-decode
 — kept as the baseline the scheduler has to beat.  Either way the decode hot
 path is the paper's §4 scenario: project to the vocabulary, fused
@@ -84,13 +90,16 @@ def _continuous(args, cfg, params) -> int:
         args.requests, rate_per_tick=args.rate,
         prompt_lens=(max(2, args.prompt_len // 4), args.prompt_len),
         decode_lens=(max(2, args.tokens // 8), args.tokens),
-        vocab=vocab, seed=1, shared_prefix=shared_prefix)
+        vocab=vocab, seed=1, shared_prefix=shared_prefix,
+        priority_classes=args.priority_classes,
+        slo_ms=args.slo_ms or None)
     sched = sched_mod.ContinuousScheduler(
         params, cfg, num_slots=args.slots, slot_len=slot_len,
         prefill_chunk=args.prefill_chunk, top_k=args.top_k,
         base_rng=jax.random.PRNGKey(0), paged=args.paged,
         block_size=args.block_size,
-        num_blocks=args.blocks or None)
+        num_blocks=args.blocks or None,
+        preempt=not args.no_preempt)
     report = sched.run(requests)
 
     pct = report.latency_percentiles((50, 95))
@@ -115,6 +124,27 @@ def _continuous(args, cfg, params) -> int:
         print(f"blocks saved by sharing: {p['blocks_shared']} "
               f"(prefill tokens reused: {p['tokens_reused']}, "
               f"copy-on-write copies: {p['cow_copies']})")
+        print(f"prefix cache: {p['cached_blocks']} blocks resident, "
+              f"{p['prefix_cache_hits']} hits, "
+              f"{p['reclaimed_blocks']} reclaimed under pressure")
+    if args.priority_classes > 1:
+        for pr, pct_c in sorted(
+                report.latency_percentiles_by_class((50, 95)).items()):
+            n = sum(1 for r in report.results if r.priority == pr)
+            npre = sum(r.preempted for r in report.results
+                       if r.priority == pr)
+            print(f"class {pr}: n={n} p50={pct_c['p50']*1e3:.1f}ms "
+                  f"p95={pct_c['p95']*1e3:.1f}ms preemptions={npre}")
+        att = report.slo_attainment()
+        if att is not None:
+            bearing = sum(1 for r in report.results if r.slo_ms is not None)
+            print(f"SLO attainment: {att*100:.1f}% of {bearing} "
+                  f"deadline-bearing requests")
+        if report.paged is not None:
+            p = report.paged
+            print(f"preemptions: {report.preemptions} "
+                  f"(blocks swapped out: {p['swapped_blocks_out']}, "
+                  f"swapped back in: {p['swapped_blocks_in']})")
     evicted = [r.rid for r in report.results if r.evicted]
     if evicted:
         print(f"evicted at capacity: {evicted}")
@@ -154,6 +184,17 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=8,
                     help="shared synthetic prompt prefix length (paged "
                          "mode; demonstrates block sharing)")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="priority classes in the synthetic workload (>1 "
+                         "assigns each request a random class; smaller = "
+                         "more urgent; report adds p95-by-class)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="completion deadline attached to priority-0 "
+                         "requests; report adds SLO attainment (0 = off)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable preempt-and-swap of lower-priority "
+                         "decodes (paged mode; priorities stay "
+                         "ordering-only)")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke(args.arch) if args.smoke

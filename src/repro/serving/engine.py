@@ -319,6 +319,21 @@ def copy_paged_block(pools: list, src, dst) -> list:
         pools)
 
 
+def write_paged_block(pools: list, block: list, dst) -> list:
+    """Write one physical block's content into slot ``dst`` of every layer
+    pool — the swap-in restore primitive behind preempt-and-swap.
+
+    ``block`` is the pytree ``compat.tree_map(lambda x: x[:, bid], pools)``
+    produces (leaves [n_layers, Hkv, BS, D] — one pool entry, no block axis),
+    round-tripped through the host by ``serving.paged.PagedPool.swap_out``.
+    The write is a full-slot replacement in the same dtype, so a
+    swap-out/swap-in cycle is bit-exact."""
+    dst = jnp.asarray(dst, jnp.int32)
+    return compat.tree_map(
+        lambda x, b: jax.lax.dynamic_update_slice_in_dim(
+            x, jnp.asarray(b, x.dtype)[:, None], dst, axis=1), pools, block)
+
+
 def prefill_chunk_paged(params: PyTree, pools: list, block_tables: Array,
                         cache_len: Array, tokens: Array, cfg: ModelConfig):
     """Advance a paged prefill by one chunk: tokens [1, c] are scattered into

@@ -15,10 +15,24 @@ of fixed-size KV **blocks**:
   (refcount++) instead of recomputing and re-storing them.  Partial tail
   blocks are indexed too: a new request copies the shared content into a
   fresh block and prefills only from the point of divergence — block-granular
-  **copy-on-write**.  Entries live exactly as long as the block does (they
-  are dropped when the block is freed), so sharing happens between
-  temporally-overlapping requests; a persistent prefix cache with its own
-  eviction policy is future work.
+  **copy-on-write**.  The index is **persistent**: when the last sequence
+  holding an indexed block retires, the block's reference transfers to the
+  pool's LRU prefix cache instead of the free list, so a later request with
+  the same prompt prefix skips its prefill even though no live sequence
+  overlaps it.  Cold cached blocks are reclaimed (LRU-first) into the free
+  list whenever admission, decode growth, or swap-in runs short — always
+  BEFORE the scheduler resorts to preempting or evicting live work.
+* **Preempt-and-swap** — ``PagedPool.swap_out`` suspends a sequence to a
+  host-side block store keyed by request id: blocks it owns exclusively are
+  copied out and freed (that is the memory preemption reclaims); blocks
+  shared with another live sequence or with the prefix cache are *never*
+  copied or freed — the suspended sequence simply keeps its reference, so
+  the content stays resident at zero extra cost.  ``swap_in`` reverses it:
+  fresh blocks are allocated for the copied-out content (bit-exact host
+  round-trip), kept shared blocks are reused as-is, and the rebuilt block
+  table lets decode resume at the exact position it stopped — no re-prefill,
+  and (because sampling is keyed by (request id, token index)) a token
+  stream bit-identical to the never-preempted run.
 * ``PagedPool`` — the serving-facing surface: per-slot **block tables**
   ([num_slots, max_blocks] int32, physical block per logical block) that the
   engine's paged steps consume, per-slot lengths, the pooled cache pytree
@@ -52,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.serving import engine
 
@@ -130,8 +145,11 @@ class PrefixIndex:
     key to one block; partial tails are kept per chain key as (tokens, block)
     candidates so a new request can adopt the longest common prefix of a
     divergence block.  ``drop_block`` is called by the pool the moment a
-    block's refcount hits zero — an index entry therefore always points at
-    live, immutable-prefix content.
+    block leaves it (freed, reclaimed from the prefix cache, or swapped out
+    to the host) — an index entry therefore always points at live,
+    immutable-prefix content.  Entries are NOT dropped when the last
+    *sequence* holding a block retires: the pool parks such blocks in its
+    LRU prefix cache and the entries outlive the sequence.
     """
 
     def __init__(self):
@@ -171,6 +189,11 @@ class PrefixIndex:
         bucket[tokens] = bid
         self._by_block.setdefault(bid, []).append(("partial", key, tokens))
 
+    def has_block(self, bid: int) -> bool:
+        """Whether any full/partial entry points at ``bid`` — the pool's
+        release path asks this to decide cache-park vs free."""
+        return bid in self._by_block
+
     def drop_block(self, bid: int) -> None:
         for entry in self._by_block.pop(bid, ()):
             if entry[0] == "full":
@@ -195,9 +218,28 @@ class PagedSeq:
     matched: int = 0                # prompt tokens adopted from the index
 
 
-# The copy-on-write primitive, jitted once per pool shape (shapes recur, so
-# jax.jit's signature cache is the right granularity).
+@dataclass
+class SwappedSeq:
+    """A preempted sequence's host-side record (``PagedPool.swapped``).
+
+    ``entries`` mirrors the block list in logical order; each element is
+    ``("shared", bid)`` — the sequence kept its reference on a block another
+    holder (live sequence or the prefix cache) also references, content
+    still resident — or ``("host", content)`` — an exclusively-owned block
+    whose cache content was copied to the host and whose physical block was
+    freed.  ``length`` is the valid cache extent at suspension, the offset
+    decode resumes from after ``swap_in``."""
+    prompt: np.ndarray
+    matched: int
+    length: int
+    entries: list
+
+
+# The copy-on-write and swap-in-restore primitives, jitted once per pool
+# shape (shapes recur, so jax.jit's signature cache is the right
+# granularity).
 _copy_block = jax.jit(engine.copy_paged_block, donate_argnums=(0,))
+_write_block = jax.jit(engine.write_paged_block, donate_argnums=(0,))
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -208,16 +250,33 @@ class PagedPool:
     """Block-pooled KV cache with per-slot block tables — the paged
     counterpart of ``scheduler.SlotPool``.
 
-    ``num_slots`` bounds the decode batch; ``slot_len`` (a multiple of
-    ``block_size`` — the determinism contract above) bounds one sequence;
-    ``num_blocks`` (default: enough for every slot at full length) is the
-    real capacity lever — admission is gated on free *blocks*, so many short
-    sequences can outnumber the worst-case-length bound that sized PR 2's
-    pool.
+    Parameters
+    ----------
+    cfg:
+        Model config (must pass ``engine.paged_supported``).
+    num_slots:
+        Batch rows — the bound on concurrently *decoding* sequences.
+    slot_len:
+        Per-sequence cache bound, a multiple of ``block_size`` (the
+        determinism contract above).
+    block_size:
+        Tokens per physical KV block (= the paged kernels' KV tile).
+    num_blocks:
+        Usable physical blocks (default: enough for every slot at full
+        length).  The real capacity lever — admission is gated on free
+        *blocks*, so many short sequences can outnumber the
+        worst-case-length bound that sized PR 2's pool.
+    persistent_prefix:
+        Keep indexed prompt blocks resident after their last sequence
+        retires (the LRU prefix cache, default on).  Cached blocks are
+        reclaimed to the free list — coldest first — whenever the pool runs
+        short, so persistence never costs an admission; ``False`` restores
+        the PR-4 entries-die-with-the-block behaviour.
     """
 
     def __init__(self, cfg: ModelConfig, num_slots: int, slot_len: int,
-                 block_size: int, num_blocks: Optional[int] = None):
+                 block_size: int, num_blocks: Optional[int] = None,
+                 persistent_prefix: bool = True):
         if slot_len % block_size:
             raise ValueError(
                 f"slot_len {slot_len} must be a multiple of block_size "
@@ -243,10 +302,22 @@ class PagedPool:
         self.tables = np.zeros((num_slots, self.max_blocks), np.int32)
         self._free_rows: deque[int] = deque(range(num_slots))
         self.seqs: dict[int, PagedSeq] = {}
+        self.persistent_prefix = persistent_prefix
+        # LRU prefix cache: bid → None, insertion order = cold→hot.  Each
+        # member holds exactly one allocator reference (transferred from the
+        # last sequence that held the block), so free+live still partitions
+        # the pool and a cached block can never be handed out as fresh.
+        self._cached: dict[int, None] = {}
+        # host-side store of preempted sequences, keyed by request id
+        self.swapped: dict[int, SwappedSeq] = {}
         # stats for the smoke run / benchmarks
         self.blocks_shared = 0          # full blocks adopted via the index
         self.tokens_reused = 0          # prompt tokens whose prefill was skipped
         self.cow_copies = 0
+        self.prefix_cache_hits = 0      # cache-held blocks revived by admission
+        self.reclaimed_blocks = 0       # cold cached blocks fed to the free list
+        self.swapped_blocks_out = 0     # exclusive blocks copied to the host
+        self.swapped_blocks_in = 0      # host blocks restored by swap_in
         self.min_free_blocks = self.alloc.free_blocks
 
     # -- slot-pool-compatible surface ---------------------------------------
@@ -264,6 +335,44 @@ class PagedPool:
     @property
     def free_blocks(self) -> int:
         return self.alloc.free_blocks
+
+    @property
+    def cached_blocks(self) -> int:
+        """Blocks parked in the persistent prefix cache (reclaimable)."""
+        return len(self._cached)
+
+    # -- persistent prefix cache (LRU) --------------------------------------
+    def _touch(self, bid: int) -> None:
+        """Mark a cache-resident block most-recently-used."""
+        if bid in self._cached:
+            self._cached.pop(bid)
+            self._cached[bid] = None
+
+    def _reclaim_until(self, free_target: int, exclude=()) -> None:
+        """Feed cold cached blocks (LRU-first) to the free list until
+        ``free_target`` blocks are free or the cache is spent.  ``exclude``
+        protects blocks an in-progress admission is about to adopt.  This is
+        the pressure valve that runs BEFORE the scheduler preempts or evicts
+        live work."""
+        exclude = set(exclude)
+        for bid in list(self._cached):
+            if self.alloc.free_blocks >= free_target:
+                break
+            if bid in exclude:
+                continue
+            if self.alloc.refcount(bid) > 1:
+                # a live sequence also holds this block: releasing the
+                # cache's reference cannot yield a free block, and dropping
+                # the index entries would only forfeit its future sharing —
+                # skip it (it stays cached and matchable)
+                continue
+            del self._cached[bid]
+            # the content is leaving the pool's custody: matching against it
+            # would hand out a block whose bits may be recycled — drop the
+            # index entries before releasing the cache's reference
+            self.index.drop_block(bid)
+            if self.alloc.decref(bid):      # a live adopter may still hold it
+                self.reclaimed_blocks += 1
 
     def device_tables(self, active_slots=None) -> jax.Array:
         """Block tables for a batched decode step.
@@ -318,10 +427,22 @@ class PagedPool:
         total = _ceil_div(n + 1, bs)
         fresh_needed = total - len(shared)
         if self.alloc.free_blocks < fresh_needed:
-            return None
+            # short on blocks: reclaim cold cached prefixes first, protecting
+            # the blocks this very admission is about to adopt
+            protect = set(shared)
+            if tail_src is not None:
+                protect.add(tail_src)
+            self._reclaim_until(fresh_needed, exclude=protect)
+        if self.alloc.free_blocks < fresh_needed:
+            return None                 # caller may now preempt live work
         slot = self._free_rows.popleft()
         for bid in shared:
+            if self.alloc.refcount(bid) == 1 and bid in self._cached:
+                self.prefix_cache_hits += 1     # revived: no live seq held it
             self.alloc.incref(bid)
+            self._touch(bid)
+        if tail_src is not None:
+            self._touch(tail_src)
         blocks = list(shared)
         for _ in range(fresh_needed):
             bid = self.alloc.alloc()
@@ -368,30 +489,42 @@ class PagedPool:
             self.index.register_partial(key, rem, seq.blocks[n_full])
 
     # -- decode-time block upkeep -------------------------------------------
+    def _alloc_reclaiming(self, exclude=()) -> Optional[int]:
+        """``alloc`` with the cache pressure valve: an empty free list first
+        reclaims the coldest cached prefix blocks (``exclude`` protects the
+        calling sequence's own blocks), and only then reports exhaustion."""
+        bid = self.alloc.alloc()
+        if bid is None:
+            self._reclaim_until(1, exclude=exclude)
+            bid = self.alloc.alloc()
+        return bid
+
     def prepare_write(self, slot: int, pos: int) -> bool:
         """Make position ``pos`` of ``slot`` writable before the decode step:
         allocate the next block when the write crosses a boundary, and
         copy-on-write a block some other sequence still references.  False
-        means the pool is out of blocks — the scheduler evicts the sequence,
-        returning its non-shared blocks in the same tick."""
+        means the pool is out of blocks even after reclaiming the prefix
+        cache — the scheduler preempts a lower-priority sequence or evicts
+        this one, returning its non-shared blocks in the same tick."""
         seq = self.seqs[slot]
         bi = pos // self.block_size
         assert bi <= len(seq.blocks), (bi, len(seq.blocks))
         if bi < len(seq.blocks):
             bid = seq.blocks[bi]
             if self.alloc.refcount(bid) > 1:
-                fresh = self.alloc.alloc()
+                fresh = self._alloc_reclaiming(exclude=seq.blocks)
                 if fresh is None:
                     return False
                 self.caches = _copy_block(self.caches, bid, fresh)
-                self.alloc.decref(bid)      # refcount ≥ 2: never frees here
+                if self.alloc.decref(bid):  # refcount ≥ 2 here: frees only if
+                    self.index.drop_block(bid)   # a reclaim raced the holder
                 seq.blocks[bi] = fresh
                 self.tables[slot, bi] = fresh
                 self.cow_copies += 1
                 self.min_free_blocks = min(self.min_free_blocks,
                                            self.alloc.free_blocks)
             return True
-        fresh = self.alloc.alloc()
+        fresh = self._alloc_reclaiming(exclude=seq.blocks)
         if fresh is None:
             return False
         seq.blocks.append(fresh)
@@ -402,19 +535,100 @@ class PagedPool:
 
     # -- retirement ---------------------------------------------------------
     def release(self, slot: int) -> None:
-        """Retire ``slot``: decref every block it holds (freeing the
-        non-shared ones — a block another live sequence references survives)
-        and return the batch row.  Runs host-side, so freed blocks are
+        """Retire ``slot``: drop the sequence's reference on every block it
+        holds and return the batch row.  A block another live sequence
+        references survives untouched; a block whose LAST reference this was
+        either parks in the persistent prefix cache (if the index still maps
+        prompt content to it — the entry now outlives the sequence) or
+        returns to the free list.  Runs host-side, so freed blocks are
         admissible in the same scheduler tick."""
         seq = self.seqs.pop(slot, None)
         if seq is None:
             return
         for bid in seq.blocks:
+            if (self.persistent_prefix and self.alloc.refcount(bid) == 1
+                    and self.index.has_block(bid)):
+                # transfer the sequence's reference to the cache: the block
+                # stays live (and matchable) without any owner sequence
+                self._cached[bid] = None
+                continue
             if self.alloc.decref(bid):
                 self.index.drop_block(bid)
         self.tables[slot, :] = self._sentinel
         self.lens = self.lens.at[slot].set(0)
         self._free_rows.append(slot)
+
+    # -- preempt-and-swap ---------------------------------------------------
+    def swap_out(self, slot: int, rid: int) -> SwappedSeq:
+        """Suspend ``slot``'s sequence to the host-side store under ``rid``.
+
+        Refcount-aware: a block shared with another live sequence or with
+        the prefix cache keeps this sequence's reference — its content stays
+        resident in the pool and is NEVER copied out (shared prefixes cost a
+        preemption nothing).  An exclusively-held block is copied to the
+        host (bit-exact) and freed — that is the memory the preemption
+        reclaims.  The batch row, table row, and length are released like a
+        retirement; ``swap_in`` rebuilds them."""
+        seq = self.seqs.pop(slot)
+        entries: list = []
+        for bid in seq.blocks:
+            if self.alloc.refcount(bid) > 1:
+                entries.append(("shared", bid))
+                continue
+            content = compat.tree_map(lambda x: np.asarray(x[:, bid]),
+                                      self.caches)
+            if self.alloc.decref(bid):
+                self.index.drop_block(bid)
+            entries.append(("host", content))
+            self.swapped_blocks_out += 1
+        rec = SwappedSeq(prompt=seq.prompt, matched=seq.matched,
+                         length=int(np.asarray(self.lens)[slot]),
+                         entries=entries)
+        self.swapped[rid] = rec
+        self.tables[slot, :] = self._sentinel
+        self.lens = self.lens.at[slot].set(0)
+        self._free_rows.append(slot)
+        return rec
+
+    def swap_in(self, rid: int) -> Optional[PagedSeq]:
+        """Resume the sequence ``swap_out`` stored under ``rid``: claim a
+        batch row, restore every host-copied block into a freshly-allocated
+        physical block (reclaiming cold cached blocks if the free list runs
+        short), reattach the kept shared blocks, and rebuild the block table
+        with the pre-preemption length — decode continues at the exact
+        position it stopped, no re-prefill.  None when a row or the blocks
+        are unavailable; the record stays stored for a later attempt."""
+        rec = self.swapped[rid]
+        if not self._free_rows:
+            return None
+        kept = {e[1] for e in rec.entries if e[0] == "shared"}
+        need = sum(1 for e in rec.entries if e[0] == "host")
+        if self.alloc.free_blocks < need:
+            self._reclaim_until(need, exclude=kept)
+        if self.alloc.free_blocks < need:
+            return None
+        del self.swapped[rid]
+        slot = self._free_rows.popleft()
+        blocks: list = []
+        for kind, payload in rec.entries:
+            if kind == "shared":
+                blocks.append(payload)
+                self._touch(payload)
+                continue
+            bid = self.alloc.alloc()
+            assert bid is not None          # gated above
+            self.caches = _write_block(self.caches, payload, bid)
+            blocks.append(bid)
+            self.swapped_blocks_in += 1
+        self.tables[slot, :] = self._sentinel
+        self.tables[slot, :len(blocks)] = blocks
+        self.lens = self.lens.at[slot].set(rec.length)
+        seq = PagedSeq(slot=slot, prompt=rec.prompt, blocks=blocks,
+                       matched=rec.matched)
+        self.seqs[slot] = seq
+        self.min_free_blocks = min(self.min_free_blocks,
+                                   self.alloc.free_blocks)
+        return seq
 
     def stats(self) -> dict:
         return {
@@ -425,4 +639,9 @@ class PagedPool:
             "blocks_shared": self.blocks_shared,
             "tokens_reused": self.tokens_reused,
             "cow_copies": self.cow_copies,
+            "cached_blocks": len(self._cached),
+            "prefix_cache_hits": self.prefix_cache_hits,
+            "reclaimed_blocks": self.reclaimed_blocks,
+            "swapped_blocks_out": self.swapped_blocks_out,
+            "swapped_blocks_in": self.swapped_blocks_in,
         }

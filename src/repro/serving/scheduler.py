@@ -9,8 +9,10 @@ member finishes, leaving slots idle.  This scheduler keeps the batch full:
 * **SlotPool** — a fixed pool of KV-cache slots (one batch row each) with a
   per-slot length vector.  Finished slots are overwritten in place by the
   next request's prefilled cache; nothing ever waits for the batch to drain.
-* **Admission** — FIFO by arrival tick (ties broken by submission order).  A
-  request is admitted when (a) it has arrived, (b) a slot is free, and (c) no
+* **Admission** — by (priority, arrival tick), ties broken by submission
+  order; with every request at the default priority this degenerates to the
+  PR-2 FIFO.  A request is admitted when (a) it has arrived, (b) a slot is
+  free, and (c) no
   other prefill is in flight (one prefill at a time bounds the decode stall a
   new request can inflict — the latency-aware part).  Its prompt then prefills **chunked**,
   interleaved with decode: the per-tick chunk budget scales with the number
@@ -36,6 +38,22 @@ member finishes, leaving slots idle.  This scheduler keeps the batch full:
   through the table, and retirement — including the new out-of-blocks
   eviction backstop, which fires *before* a decode step the pool cannot
   back — returns every non-shared block to the free list in the same tick.
+  Retired prompt blocks the prefix index still maps park in the pool's
+  persistent LRU cache instead (entries outlive their last sequence);
+  admission/decode pressure reclaims them coldest-first.
+
+* **Priorities, SLOs, preemption** — requests carry a ``priority`` class
+  (smaller = more urgent; admission orders by (priority, arrival)) and an
+  optional ``slo_ms`` completion deadline that ``ServeReport`` scores
+  per class.  In paged mode with ``preempt=True``, a request that cannot be
+  placed — no free row, or out of blocks *after* the pool reclaimed its cold
+  prefix-cache blocks — swaps out the lowest-priority longest-remaining
+  active decode (``PagedPool.swap_out``: exclusive blocks to a host-side
+  store, shared prefix blocks kept resident by reference).  The victim
+  resumes later with no re-prefill and, because sample keys are
+  (request id, token index), a token stream bit-identical to the
+  never-preempted run.  The same swap runs before the out-of-blocks
+  eviction backstop: live low-priority work yields before anyone is killed.
 
 Determinism: a request's sample stream is keyed by (base_rng, request id,
 token index) and sampling is per-slot (``engine.sample_per_slot``), so the
@@ -68,12 +86,22 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 @dataclass(eq=False)                    # identity semantics: ndarray fields
 class Request:                          # make generated __eq__ a crash hazard
-    """One generation request.  ``arrival_tick``: the scheduler tick at which
-    the request becomes visible (0 = already waiting)."""
+    """One generation request.
+
+    ``arrival_tick``: the scheduler tick at which the request becomes
+    visible (0 = already waiting).  ``priority``: admission class, smaller
+    is more urgent (default 0); admission orders by (priority, arrival) and
+    — in paged mode with preemption on — a request that cannot be placed may
+    swap out a strictly-lower-priority running decode.  ``slo_ms``: optional
+    completion deadline in milliseconds measured from arrival; it does not
+    change scheduling directly, but ``ServeReport.slo_attainment`` scores it
+    and the serve CLI reports attainment per priority class."""
     rid: int
     prompt: np.ndarray                  # [T] token ids
     max_new_tokens: int
     arrival_tick: int = 0
+    priority: int = 0                   # smaller = more urgent
+    slo_ms: Optional[float] = None      # completion deadline from arrival
 
 
 @dataclass
@@ -85,6 +113,9 @@ class RequestResult:
     arrival_time: float = 0.0           # wall-clock when first seen arrived
     finish_time: float = 0.0
     evicted: bool = False               # retired by the slot-capacity backstop
+    priority: int = 0                   # copied from the request
+    slo_ms: Optional[float] = None      # copied from the request
+    preempted: int = 0                  # times this request was swapped out
 
     @property
     def latencies(self) -> list:
@@ -96,6 +127,13 @@ class RequestResult:
             prev = t
         return out
 
+    @property
+    def slo_met(self) -> Optional[bool]:
+        """Whether the request finished inside its deadline (None: no SLO)."""
+        if self.slo_ms is None:
+            return None
+        return (self.finish_time - self.arrival_time) * 1e3 <= self.slo_ms
+
 
 @dataclass
 class ServeReport:
@@ -105,6 +143,7 @@ class ServeReport:
     occupancy: float                    # mean active-slot fraction per decode step
     wall_time: float
     paged: Optional[dict] = None        # PagedPool.stats() when serving paged
+    preemptions: int = 0                # swap-outs performed by the scheduler
 
     @property
     def total_tokens(self) -> int:
@@ -119,6 +158,25 @@ class ServeReport:
         if not lats:
             return {f"p{q}": 0.0 for q in qs}
         return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+    def latency_percentiles_by_class(self, qs=(50, 95)) -> dict:
+        """Per-token latency percentiles keyed by priority class — the
+        p95-by-class view the SLO work is judged on."""
+        out = {}
+        for pr in sorted({r.priority for r in self.results}):
+            lats = [l for r in self.results if r.priority == pr
+                    for l in r.latencies]
+            out[pr] = {f"p{q}": (float(np.percentile(lats, q)) if lats
+                                 else 0.0) for q in qs}
+        return out
+
+    def slo_attainment(self) -> Optional[float]:
+        """Fraction of SLO-bearing requests that finished inside their
+        deadline (None when no request carried one)."""
+        bearing = [r for r in self.results if r.slo_ms is not None]
+        if not bearing:
+            return None
+        return sum(1 for r in bearing if r.slo_met) / len(bearing)
 
     def baseline_occupancy(self, num_slots: int) -> float:
         """Drain-and-refill bound on THIS workload, batched in the recorded
@@ -240,22 +298,63 @@ class _InFlight:
     remaining: int = 0
 
 
+@dataclass
+class _Suspended:
+    """A preempted in-flight request parked off-pool: the flight keeps its
+    produced/remaining counters (they key the PRNG stream) and ``token`` is
+    the last sampled token, re-fed to decode on resume."""
+    flight: _InFlight
+    token: int
+
+
 class ContinuousScheduler:
     """Drives the slot pool: admission → chunked prefill → pooled decode.
 
     One ``tick()`` = admit what fits, advance the in-flight prefill by one
     chunk, run one decode step over every slot.  ``run()`` loops until the
-    queue, the prefill, and the pool are all empty.
+    queue, the prefill, the pool, and the suspended store are all empty.
+
+    Keyword arguments
+    -----------------
+    num_slots:
+        KV slots / batch rows in the pool (the decode batch width).
+    slot_len:
+        Per-sequence cache capacity in tokens (paged mode: must be a
+        multiple of ``block_size``).
+    prefill_chunk:
+        Prompt tokens prefilled per scheduler tick while decodes are in
+        flight (the latency/occupancy knob; see ``_advance_prefill``).
+    top_k / temperature:
+        Sampling parameters for the fused softmax+top-k draw.
+    base_rng:
+        PRNG key the per-(request id, token index) sample keys fold out of.
+    eos_id:
+        Token id that retires a sequence early (None: length-only).
+    paged:
+        Use the block-pool KV cache (``repro.serving.paged``) instead of
+        contiguous slots; enables prefix sharing, the persistent prefix
+        cache, and preempt-and-swap.
+    block_size / num_blocks:
+        Paged-mode pool geometry (tokens per block / usable blocks;
+        ``num_blocks=None`` sizes the pool for every slot at full length).
+    preempt:
+        Paged mode only: allow a request that cannot be placed (no free
+        row, or out of blocks even after LRU cache reclamation) to swap out
+        a strictly-lower-priority running decode (``PagedPool.swap_out``).
+        The victim resumes later bit-identically; ``False`` makes priorities
+        ordering-only, the preemption-off baseline the benchmarks diff.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
                  slot_len: int, prefill_chunk: int = 32, top_k: int = 5,
                  temperature: float = 1.0, base_rng: Optional[Array] = None,
                  eos_id: Optional[int] = None, paged: bool = False,
-                 block_size: int = 8, num_blocks: Optional[int] = None):
+                 block_size: int = 8, num_blocks: Optional[int] = None,
+                 preempt: bool = True):
         self.params = params
         self.cfg = cfg
         self.paged = paged
+        self.preempt = preempt
         if paged:
             from repro.serving import paged as paged_mod
             self.pool = paged_mod.PagedPool(cfg, num_slots, slot_len,
@@ -274,6 +373,8 @@ class ContinuousScheduler:
 
         self.queue: deque[Request] = deque()
         self.active: dict[int, _InFlight] = {}         # slot → in-flight
+        self._suspended: dict[int, _Suspended] = {}    # rid → preempted
+        self.preemptions = 0
         self._prefill: Optional[dict] = None           # in-progress prefill
         self._arrival_times: dict[int, float] = {}     # rid → wall-clock seen
         self._seen_rids: set[int] = set()
@@ -330,7 +431,7 @@ class ContinuousScheduler:
         t0 = time.monotonic()
         for r in (requests or ()):
             self.submit(r)
-        while self.queue or self.active or self._prefill:
+        while self.queue or self.active or self._prefill or self._suspended:
             if self.tick_count >= max_ticks:
                 raise RuntimeError(f"scheduler wedged after {max_ticks} ticks")
             self.tick()
@@ -341,30 +442,69 @@ class ContinuousScheduler:
                            decode_steps=self.decode_steps,
                            prefill_chunks=self.prefill_chunks,
                            occupancy=occ, wall_time=wall,
-                           paged=self.pool.stats() if self.paged else None)
+                           paged=self.pool.stats() if self.paged else None,
+                           preemptions=self.preemptions)
 
     # -- admission ----------------------------------------------------------
     def _admit(self) -> None:
-        if self._prefill is not None or not self.queue:
+        """Place waiting work in (priority, arrival) order.
+
+        Suspended (preempted) requests compete with the queue under the same
+        key — preferred on ties, since their prefill is already paid.  Any
+        number of resumes can happen per tick (no prefill involved); at most
+        one NEW prefill starts, preserving the one-in-flight bound.  The
+        head never skips: when the best candidate cannot be placed — even
+        after the pool reclaimed cold prefix-cache blocks and, failing that,
+        preemption swapped out strictly-lower-priority decodes — admission
+        stops for this tick."""
+        while True:
+            cand = self._next_candidate()
+            if cand is None:
+                return
+            kind, obj = cand
+            if kind == "resume":
+                prio = self._suspended[obj].flight.req.priority
+                if self._try_resume(obj) or self._make_room(
+                        prio, lambda: self._try_resume(obj)):
+                    continue
+                return
+            if self._prefill is not None:
+                return                       # one prefill in flight at a time
+            if self._start_prefill(obj) or self._make_room(
+                    obj.priority, lambda: self._start_prefill(obj)):
+                return                       # one new prefill per tick
             return
-        if self.pool.free_slots == 0:
-            return
-        # FIFO by arrival (ties by submission order): a late-arriving request
-        # submitted early must not head-of-line-block one already waiting
-        arrived = [r for r in self.queue if r.arrival_tick <= self.tick_count]
-        if not arrived:
-            return
-        req = min(arrived, key=lambda r: r.arrival_tick)
+
+    def _next_candidate(self):
+        """Best waiting work item: ``("resume", rid)`` or ``("admit", req)``,
+        ordered by (priority, arrival tick, resume-before-admit, FIFO)."""
+        best = None
+        for i, (rid, rec) in enumerate(self._suspended.items()):
+            req = rec.flight.req
+            key = (req.priority, req.arrival_tick, 0, i)
+            if best is None or key < best[0]:
+                best = (key, ("resume", rid))
+        for i, r in enumerate(self.queue):
+            if r.arrival_tick > self.tick_count:
+                continue
+            key = (r.priority, r.arrival_tick, 1, i)
+            if best is None or key < best[0]:
+                best = (key, ("admit", r))
+        return best[1] if best else None
+
+    def _start_prefill(self, req: Request) -> bool:
+        """Claim capacity for ``req`` and set up its chunked prefill; False
+        when the pool cannot place it (it stays queued)."""
+        result = RequestResult(
+            rid=req.rid, prompt_len=len(req.prompt), priority=req.priority,
+            slo_ms=req.slo_ms, arrival_time=self._arrival_times[req.rid])
         if self.paged:
-            # admission gates on free BLOCKS (after prefix matching), not a
-            # whole worst-case-length slot; the FIFO head waits, not skips
+            # admission gates on free BLOCKS (after prefix matching and LRU
+            # cache reclamation), not a whole worst-case-length slot
             seq = self.pool.admit(req.prompt)
             if seq is None:
-                return
+                return False
             self.queue.remove(req)
-            result = RequestResult(
-                rid=req.rid, prompt_len=len(req.prompt),
-                arrival_time=self._arrival_times[req.rid])
             self._prefill = {
                 "flight": _InFlight(req=req, result=result, slot=seq.slot,
                                     remaining=req.max_new_tokens),
@@ -377,11 +517,10 @@ class ContinuousScheduler:
                     len(req.prompt) - seq.matched, self.prefill_chunk)),
                 "last": None,
             }
-            return
+            return True
+        if self.pool.free_slots == 0:
+            return False
         self.queue.remove(req)
-        result = RequestResult(
-            rid=req.rid, prompt_len=len(req.prompt),
-            arrival_time=self._arrival_times[req.rid])
         self._prefill = {
             "flight": _InFlight(req=req, result=result,
                                 remaining=req.max_new_tokens),
@@ -395,6 +534,72 @@ class ContinuousScheduler:
                                                         self.prefill_chunk)),
             "last": None,
         }
+        return True
+
+    # -- preemption ---------------------------------------------------------
+    def _make_room(self, priority: int, attempt) -> bool:
+        """Swap out lower-priority victims one at a time, retrying
+        ``attempt`` after each, until it succeeds, no victim remains, or a
+        victim's swap freed no blocks while a row already sat free (blocks
+        are then the binding constraint and further victims — whose pool
+        residue is all shared — would be suspended for nothing).  Cold
+        prefix-cache blocks were already reclaimed inside the pool —
+        preempting live work is strictly the last resort."""
+        if not (self.paged and self.preempt):
+            return False                # SlotPool has no preemption (or off)
+        while True:
+            blocks_before = self.pool.free_blocks
+            if not self._preempt_one(priority):
+                return False
+            if attempt():
+                return True
+            if (self.pool.free_slots > 0
+                    and self.pool.free_blocks <= blocks_before):
+                return False
+
+    def _preempt_one(self, priority: int) -> bool:
+        """Swap out ONE active decode strictly below ``priority``: the
+        lowest-priority class first, longest remaining decode within it (the
+        victim that frees capacity for the longest).  False when preemption
+        is off, unpaged, or no strictly-lower-priority decode is running —
+        equal-priority work is never preempted, so every class makes
+        progress."""
+        if not (self.paged and self.preempt) or not self.active:
+            return False
+        victims = [f for f in self.active.values()
+                   if f.req.priority > priority]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda f: (f.req.priority, f.remaining,
+                                             f.req.rid))
+        self._swap_out(victim)
+        return True
+
+    def _swap_out(self, flight: _InFlight) -> None:
+        slot = flight.slot
+        del self.active[slot]
+        self.pool.swap_out(slot, flight.req.rid)
+        self._suspended[flight.req.rid] = _Suspended(
+            flight=flight, token=flight.result.tokens[-1])
+        flight.slot = -1
+        flight.result.preempted += 1
+        self.preemptions += 1
+
+    def _try_resume(self, rid: int) -> bool:
+        """Reattach a suspended request: ``PagedPool.swap_in`` rebuilds its
+        blocks/table/length, the last sampled token is re-fed, and decode
+        continues — the (rid, token index) sample keys make the remaining
+        stream bit-identical to the never-preempted run."""
+        rec = self._suspended[rid]
+        seq = self.pool.swap_in(rid)
+        if seq is None:
+            return False
+        flight = rec.flight
+        flight.slot = seq.slot
+        self.tokens = self.tokens.at[seq.slot].set(rec.token)
+        self.active[seq.slot] = flight
+        del self._suspended[rid]
+        return True
 
     # -- prefill ------------------------------------------------------------
     def _advance_prefill(self) -> None:
@@ -460,12 +665,25 @@ class ContinuousScheduler:
         if self.paged:
             # make every active row's next write position backed by an
             # exclusively-owned block (allocate across boundaries, CoW shared
-            # blocks); a row the pool cannot back is evicted HERE, returning
-            # its non-shared blocks to the free list in this same tick
+            # blocks).  A row the pool cannot back — even after reclaiming
+            # cold prefix-cache blocks inside prepare_write — first swaps out
+            # strictly-lower-priority decodes (they resume bit-identically);
+            # only with no such victim left is it evicted, returning its
+            # non-shared blocks to the free list in this same tick
             lens_pre = np.asarray(self.pool.lens)
             for slot in list(self.active):
-                flight = self.active[slot]
-                if not self.pool.prepare_write(slot, int(lens_pre[slot])):
+                flight = self.active.get(slot)
+                if flight is None:          # swapped out as a victim above
+                    continue
+                ok = self.pool.prepare_write(slot, int(lens_pre[slot]))
+                while not ok:
+                    blocks_before = self.pool.free_blocks
+                    if not self._preempt_one(flight.req.priority):
+                        break
+                    ok = self.pool.prepare_write(slot, int(lens_pre[slot]))
+                    if not ok and self.pool.free_blocks <= blocks_before:
+                        break               # victim freed nothing usable
+                if not ok:
                     flight.result.evicted = True
                     self._finish(flight)
             if not self.active:
@@ -535,12 +753,17 @@ class ContinuousScheduler:
 def poisson_workload(n_requests: int, *, rate_per_tick: float,
                      prompt_lens=(8, 32), decode_lens=(4, 32),
                      vocab: int = 1000, seed: int = 0,
-                     shared_prefix: int = 0) -> list:
+                     shared_prefix: int = 0, priority_classes: int = 1,
+                     slo_ms: Optional[float] = None) -> list:
     """Staggered synthetic requests: Poisson arrivals (exponential
     inter-arrival gaps in scheduler ticks), uniform prompt/decode lengths.
 
     ``shared_prefix > 0`` prepends the same random prefix to every prompt —
-    the system-prompt pattern paged serving's prefix index deduplicates."""
+    the system-prompt pattern paged serving's prefix index deduplicates.
+    ``priority_classes > 1`` assigns each request a uniform-random priority
+    in [0, classes) — the mixed-priority workload the SLO scheduling is
+    benchmarked on — and ``slo_ms`` attaches a completion deadline to the
+    urgent class (priority 0), whose attainment the serve report scores."""
     rng = np.random.default_rng(seed)
     prefix = (rng.integers(0, vocab, shared_prefix) if shared_prefix
               else None)
@@ -550,10 +773,13 @@ def poisson_workload(n_requests: int, *, rate_per_tick: float,
         t += rng.exponential(1.0 / max(rate_per_tick, 1e-9))
         body = rng.integers(0, vocab, rng.integers(prompt_lens[0],
                                                    prompt_lens[1] + 1))
+        priority = (int(rng.integers(0, priority_classes))
+                    if priority_classes > 1 else 0)
         out.append(Request(
             rid=rid,
             prompt=body if prefix is None else np.concatenate([prefix, body]),
             max_new_tokens=int(rng.integers(decode_lens[0],
                                             decode_lens[1] + 1)),
-            arrival_tick=int(t)))
+            arrival_tick=int(t), priority=priority,
+            slo_ms=slo_ms if (slo_ms and priority == 0) else None))
     return out

@@ -1,0 +1,444 @@
+"""SLO-aware scheduling: priority admission, paged preempt-and-swap, and
+the persistent prefix cache (ISSUE 5).
+
+The load-bearing claims:
+
+* Admission orders by (priority, arrival); with one priority class the
+  scheduler degenerates to the PR-2 FIFO (pinned by the untouched
+  continuous/paged equivalence suites).
+* **Preempt-and-resume is bit-identical**: a request swapped out mid-decode
+  (``PagedPool.swap_out`` → host store → ``swap_in``) produces exactly the
+  token stream of the never-preempted run — across arrival orders and
+  pool-pressure levels.
+* Shared prefix blocks survive preemption **without copy-out**: the
+  suspended sequence keeps its reference; only exclusively-owned blocks
+  round-trip through the host.
+* The prefix index is persistent: entries outlive their last sequence (a
+  later identical prompt adopts cached blocks with no live overlap), and
+  LRU reclamation feeds the free list under pressure — BEFORE live work is
+  preempted or evicted.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import layers as L, transformer
+from repro.serving import engine, paged, scheduler
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SLOT_LEN = 48
+BLOCK = 8
+CHUNK = 8
+TOP_K = 5
+BASE_RNG = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("smollm_360m")
+    params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
+    return params, cfg
+
+
+def _key(rid, step):
+    return jax.random.fold_in(jax.random.fold_in(BASE_RNG, rid), step)
+
+
+def _single_sequence_decode(params, cfg, req):
+    """The request alone — what every stream must reproduce bit-for-bit."""
+    last, caches, ln = engine.chunked_prefill(
+        params, jnp.asarray(req.prompt)[None], cfg, max_len=SLOT_LEN,
+        chunk=CHUNK)
+    logits = engine.logits_from_hidden(params, last, cfg)
+    tok = engine.sample_per_slot(_key(req.rid, 0)[None], logits, TOP_K)
+    tokens = [int(tok[0])]
+    lens = jnp.asarray([int(ln)], jnp.int32)
+    for step in range(1, req.max_new_tokens):
+        tok, caches, lens = engine.decode_step_slots(
+            params, caches, lens, tok[:, None], cfg,
+            rngs=_key(req.rid, step)[None], top_k=TOP_K)
+        tokens.append(int(tok[0]))
+    return tokens
+
+
+def _sched(params, cfg, **kw):
+    base = dict(num_slots=2, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+                top_k=TOP_K, base_rng=BASE_RNG, paged=True,
+                block_size=BLOCK)
+    base.update(kw)
+    return scheduler.ContinuousScheduler(params, cfg, **base)
+
+
+# ---------------------------------------------------------------------------
+# Priority admission ordering.
+# ---------------------------------------------------------------------------
+def test_priority_orders_admission(model):
+    """Two requests waiting at the same tick with one slot: the urgent one
+    (smaller priority value) is admitted — and therefore finishes — first,
+    even though the background one was submitted earlier."""
+    params, cfg = model
+    rng = np.random.default_rng(0)
+    reqs = [
+        scheduler.Request(rid=0, prompt=rng.integers(0, 512, 6),
+                          max_new_tokens=3, priority=5),
+        scheduler.Request(rid=1, prompt=rng.integers(0, 512, 6),
+                          max_new_tokens=3, priority=0),
+    ]
+    sched = _sched(params, cfg, num_slots=1)
+    report = sched.run(reqs)
+    assert [r.rid for r in report.results] == [1, 0]
+    assert report.preemptions == 0          # ordering, not preemption
+
+
+def test_single_class_degenerates_to_fifo(model):
+    """All-default priorities reproduce the PR-2 FIFO completion order."""
+    params, cfg = model
+    rng = np.random.default_rng(1)
+    reqs = [scheduler.Request(rid=i, prompt=rng.integers(0, 512, 5),
+                              max_new_tokens=2) for i in range(3)]
+    report = _sched(params, cfg, num_slots=1).run(reqs)
+    assert [r.rid for r in report.results] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Preempt-and-resume bit-identity (the acceptance pin).
+# ---------------------------------------------------------------------------
+def _priority_workload(pattern):
+    """Low-priority long decodes first, urgent work landing mid-flight."""
+    rng = np.random.default_rng(11)
+    lo = [scheduler.Request(rid=i, prompt=rng.integers(0, 512, 9 + 2 * i),
+                            max_new_tokens=12, arrival_tick=0, priority=1)
+          for i in range(2)]
+    hi_arrivals = {"early": 3, "mid": 5, "late": 8}[pattern]
+    hi = [scheduler.Request(rid=2, prompt=rng.integers(0, 512, 8),
+                            max_new_tokens=4, arrival_tick=hi_arrivals,
+                            priority=0)]
+    return lo + hi
+
+
+@pytest.mark.parametrize("pattern", ["early", "mid", "late"])
+@pytest.mark.parametrize("num_blocks", [None, 8])
+def test_preempt_and_resume_bit_identical(model, pattern, num_blocks):
+    """A low-priority decode swapped out for an urgent arrival — under row
+    pressure (full pool default) AND block pressure (undersized pool) —
+    resumes with exactly the token stream of the never-preempted run."""
+    params, cfg = model
+    requests = _priority_workload(pattern)
+    sched = _sched(params, cfg, num_blocks=num_blocks)
+    report = sched.run(requests)
+    assert len(report.results) == len(requests)
+    assert report.preemptions >= 1, "workload must actually preempt"
+    assert any(r.preempted for r in report.results)
+    by_rid = {r.rid: r for r in report.results}
+    for req in requests:
+        got = by_rid[req.rid]
+        assert got.tokens == _single_sequence_decode(params, cfg, req), (
+            f"request {req.rid} diverged (pattern={pattern}, "
+            f"num_blocks={num_blocks}, preempted={got.preempted})")
+        assert len(got.tokens) == req.max_new_tokens
+        assert not got.evicted              # preemption is not eviction
+    stats = report.paged
+    assert stats["swapped_blocks_out"] >= 1
+    assert stats["swapped_blocks_in"] == stats["swapped_blocks_out"]
+    assert (stats["free_blocks"] + stats["cached_blocks"]
+            == stats["num_blocks"])
+
+
+def test_preempt_disabled_never_swaps(model):
+    """``preempt=False``: the same contended workload serves strictly by
+    priority ordering — zero preemptions, everyone still completes."""
+    params, cfg = model
+    requests = _priority_workload("mid")
+    report = _sched(params, cfg, preempt=False).run(requests)
+    assert report.preemptions == 0
+    assert report.paged["swapped_blocks_out"] == 0
+    assert len(report.results) == len(requests)
+    by_rid = {r.rid: r for r in report.results}
+    for req in requests:
+        assert by_rid[req.rid].tokens == _single_sequence_decode(
+            params, cfg, req)
+
+
+def test_equal_priority_never_preempts(model):
+    """Preemption requires a STRICTLY lower-priority victim: a same-class
+    backlog runs exactly like the PR-4 scheduler."""
+    params, cfg = model
+    rng = np.random.default_rng(4)
+    reqs = [scheduler.Request(rid=i, prompt=rng.integers(0, 512, 8),
+                              max_new_tokens=6, arrival_tick=i, priority=3)
+            for i in range(4)]
+    report = _sched(params, cfg).run(reqs)
+    assert report.preemptions == 0
+
+
+# ---------------------------------------------------------------------------
+# Swap mechanics: shared blocks survive in place, exclusive blocks
+# round-trip bit-exactly.
+# ---------------------------------------------------------------------------
+def test_swap_preserves_shared_blocks_without_copyout(model):
+    """Two sequences share a 2-block prompt prefix; swapping one out must
+    keep the shared blocks resident by reference (no host copy, no free)
+    and copy out only the exclusive tail."""
+    params, cfg = model
+    pool = paged.PagedPool(cfg, num_slots=2, slot_len=SLOT_LEN,
+                           block_size=BLOCK)
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(0, 512, 2 * BLOCK)
+    pa = np.concatenate([prefix, rng.integers(0, 512, 3)])
+    pb = np.concatenate([prefix, rng.integers(0, 512, 5)])
+    sa = pool.admit(pa)
+    _, pool.caches, ln_a = engine.prefill_chunk_paged(
+        params, pool.caches, pool.device_row(sa.slot),
+        jnp.asarray(0, jnp.int32), jnp.asarray(pa)[None], cfg)
+    pool.finalize_prefill(sa)
+    pool.lens = pool.lens.at[sa.slot].set(int(ln_a))
+    sb = pool.admit(pb)
+    assert sb.blocks[:2] == sa.blocks[:2]       # prefix adopted
+    shared_ids = list(sb.blocks[:2])
+    free_before = pool.free_blocks
+    rec = pool.swap_out(sb.slot, rid=77)
+    kinds = [e[0] for e in rec.entries]
+    assert kinds[:2] == ["shared", "shared"]    # never copied out
+    assert "host" in kinds[2:]                  # the exclusive tail was
+    assert [e[1] for e in rec.entries[:2]] == shared_ids
+    for bid in shared_ids:                      # still live, still shared
+        assert pool.alloc.refcount(bid) == 2
+    assert pool.swapped_blocks_out == kinds.count("host")
+    # exactly the exclusive blocks were freed
+    assert pool.free_blocks == free_before + kinds.count("host")
+    pool.alloc.check_invariants()
+    # resume restores the table against the SAME shared physical blocks
+    sb2 = pool.swap_in(77)
+    assert sb2 is not None
+    assert sb2.blocks[:2] == shared_ids
+    assert 77 not in pool.swapped
+
+
+def test_swap_roundtrip_restores_cache_content_bitexact(model):
+    """Pool-level: swap_out → swap_in reproduces the exact cache bytes of
+    an exclusively-owned block (the host round-trip is lossless)."""
+    params, cfg = model
+    pool = paged.PagedPool(cfg, num_slots=2, slot_len=24, block_size=8)
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, 512, 11)
+    seq = pool.admit(prompt)
+    _, pool.caches, ln = engine.prefill_chunk_paged(
+        params, pool.caches, pool.device_row(seq.slot),
+        jnp.asarray(0, jnp.int32), jnp.asarray(prompt)[None], cfg)
+    pool.finalize_prefill(seq)
+    pool.lens = pool.lens.at[seq.slot].set(int(ln))
+    want = [np.asarray(leaf[:, bid]) for bid in seq.blocks
+            for leaf in jax.tree.leaves(pool.caches[0])]
+    old_blocks = list(seq.blocks)
+    pool.swap_out(seq.slot, rid=5)
+    assert int(np.asarray(pool.lens)[seq.slot]) == 0
+    s2 = pool.swap_in(5)
+    assert s2 is not None
+    assert int(np.asarray(pool.lens)[s2.slot]) == int(ln)
+    got = [np.asarray(leaf[:, bid]) for bid in s2.blocks
+           for leaf in jax.tree.leaves(pool.caches[0])]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    del old_blocks
+    pool.alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Persistent prefix cache: entries outlive their sequence; LRU reclaim.
+# ---------------------------------------------------------------------------
+def test_prefix_entries_outlive_their_sequence(model):
+    """A second, identical prompt with NO temporal overlap adopts the
+    retired sequence's cached blocks (prefill skipped) and still produces
+    the cold-run token stream."""
+    params, cfg = model
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, 512, 2 * BLOCK + 2)
+    sched = _sched(params, cfg)
+    r1 = sched.run([scheduler.Request(rid=0, prompt=prompt,
+                                      max_new_tokens=4)])
+    assert r1.paged["cached_blocks"] >= 2       # prompt blocks parked
+    assert r1.paged["prefix_cache_hits"] == 0
+    r2 = sched.run([scheduler.Request(rid=1, prompt=prompt.copy(),
+                                      max_new_tokens=4)])
+    assert r2.paged["prefix_cache_hits"] >= 2   # revived with no live holder
+    assert r2.paged["tokens_reused"] >= 2 * BLOCK
+    want = _single_sequence_decode(
+        params, cfg, scheduler.Request(rid=1, prompt=prompt,
+                                       max_new_tokens=4))
+    assert [r for r in r2.results if r.rid == 1][0].tokens == want
+
+
+def test_lru_reclaim_feeds_free_list_under_pressure(model):
+    """Cold cached blocks are reclaimed (LRU-first) when admission runs
+    short — persistence never costs an admission."""
+    params, cfg = model
+    pool = paged.PagedPool(cfg, num_slots=2, slot_len=16, block_size=4,
+                           num_blocks=5)
+    rng = np.random.default_rng(21)
+    sa = pool.admit(rng.integers(0, 512, 8))    # 3 blocks (prompt+decode)
+    pool.finalize_prefill(sa)
+    pool.release(sa.slot)
+    # the two full prompt blocks park; the decode-only block frees outright
+    assert pool.cached_blocks == 2 and pool.free_blocks == 3
+    # a disjoint prompt needing 4 blocks: must reclaim a cached block
+    sb = pool.admit(rng.integers(0, 512, 15))
+    assert sb is not None
+    assert pool.reclaimed_blocks >= 1
+    assert pool.cached_blocks <= 1
+    pool.alloc.check_invariants()
+
+
+def test_reclaim_skips_cache_blocks_held_by_live_sequences(model):
+    """Reclaiming a cached block a live sequence still references frees
+    nothing — it must be skipped (keeping its index entries and cache
+    residency) rather than sacrificed for zero capacity."""
+    params, cfg = model
+    pool = paged.PagedPool(cfg, num_slots=3, slot_len=16, block_size=4,
+                           num_blocks=6)
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, 512, 9)            # 2 full blocks + 1 tail
+    sa = pool.admit(prompt)
+    pool.finalize_prefill(sa)
+    pool.release(sa.slot)
+    assert pool.cached_blocks == 3              # all three blocks indexed
+    sb = pool.admit(prompt.copy())              # revives the two full blocks
+    b0, b1 = sb.blocks[0], sb.blocks[1]
+    assert pool.alloc.refcount(b0) == pool.alloc.refcount(b1) == 2
+    # an admission that would need every cached block: the two live-held
+    # blocks cannot yield a free block and must survive the reclaim sweep
+    assert pool.admit(rng.integers(0, 512, 15)) is None
+    assert pool.index.has_block(b0) and pool.index.has_block(b1)
+    assert b0 in pool._cached and b1 in pool._cached
+    assert pool.alloc.refcount(b0) == 2
+    pool.alloc.check_invariants()
+
+
+def test_persistent_prefix_off_restores_pr4_lifecycle(model):
+    """``persistent_prefix=False``: release frees everything; the index
+    entry dies with the block."""
+    params, cfg = model
+    pool = paged.PagedPool(cfg, num_slots=1, slot_len=16, block_size=4,
+                           persistent_prefix=False)
+    seq = pool.admit(np.arange(9) % 512)
+    pool.finalize_prefill(seq)
+    pool.release(seq.slot)
+    assert pool.cached_blocks == 0
+    assert pool.free_blocks == pool.alloc.num_blocks - 1
+    assert len(pool.index) == 0
+
+
+def test_reclaim_runs_before_preemption(model):
+    """Swap/evict ordering (ISSUE 5): when cold cached blocks can satisfy
+    an urgent admission, live lower-priority work is NOT preempted."""
+    params, cfg = model
+    rng = np.random.default_rng(6)
+    sched = _sched(params, cfg, num_slots=2, num_blocks=5)
+    # phase 1: a background request retires, leaving 2 cached prompt blocks
+    # (its decode-growth block frees outright) → free=3, cached=2
+    sched.run([scheduler.Request(rid=0, prompt=rng.integers(0, 512, 16),
+                                 max_new_tokens=2, priority=1)])
+    assert sched.pool.cached_blocks >= 2
+    # phase 2: one background decode holds 2 blocks (free=1); the urgent
+    # arrival needs 2 — short on the free list, covered by free+cached.
+    # Neither request outgrows its blocks, so admission is the only
+    # pressure event.
+    reqs = [
+        scheduler.Request(rid=1, prompt=rng.integers(0, 512, 9),
+                          max_new_tokens=4, priority=1),
+        scheduler.Request(rid=2, prompt=rng.integers(0, 512, 14),
+                          max_new_tokens=2, arrival_tick=4, priority=0),
+    ]
+    report = sched.run(reqs)
+    assert report.preemptions == 0, \
+        "cache reclamation must satisfy the urgent admission first"
+    assert sched.pool.reclaimed_blocks >= 1
+    by_rid = {r.rid: r for r in report.results}
+    assert len(by_rid[2].tokens) == 2
+
+
+# ---------------------------------------------------------------------------
+# SLO metrics.
+# ---------------------------------------------------------------------------
+def test_slo_attainment_and_by_class_percentiles(model):
+    params, cfg = model
+    rng = np.random.default_rng(8)
+    reqs = [
+        scheduler.Request(rid=0, prompt=rng.integers(0, 512, 6),
+                          max_new_tokens=3, priority=0, slo_ms=1e7),
+        scheduler.Request(rid=1, prompt=rng.integers(0, 512, 6),
+                          max_new_tokens=3, priority=1),
+        scheduler.Request(rid=2, prompt=rng.integers(0, 512, 6),
+                          max_new_tokens=3, priority=0, slo_ms=1e-6),
+    ]
+    report = _sched(params, cfg).run(reqs)
+    # one generous deadline met, one impossible deadline missed
+    assert report.slo_attainment() == pytest.approx(0.5)
+    by_rid = {r.rid: r for r in report.results}
+    assert by_rid[0].slo_met is True
+    assert by_rid[2].slo_met is False
+    assert by_rid[1].slo_met is None            # no deadline attached
+    by_class = report.latency_percentiles_by_class((50, 95))
+    assert set(by_class) == {0, 1}
+    for pct in by_class.values():
+        assert 0 < pct["p50"] <= pct["p95"]
+
+
+def test_workload_generator_assigns_classes_and_deadlines():
+    reqs = scheduler.poisson_workload(
+        32, rate_per_tick=2.0, priority_classes=3, slo_ms=250.0, seed=2)
+    prios = {r.priority for r in reqs}
+    assert prios <= {0, 1, 2} and len(prios) > 1
+    for r in reqs:
+        if r.priority == 0:
+            assert r.slo_ms == 250.0
+        else:
+            assert r.slo_ms is None
+
+
+# ---------------------------------------------------------------------------
+# CI tooling: serve CLI and benchmark harness exercise the SLO path.
+# ---------------------------------------------------------------------------
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    return env
+
+
+def test_serve_cli_reports_priority_classes():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--smoke",
+         "--continuous", "--paged", "--requests", "5", "--tokens", "8",
+         "--prompt-len", "10", "--slots", "2", "--rate", "3.0",
+         "--prefill-chunk", "8", "--block-size", "8", "--shared-prefix", "8",
+         "--priority-classes", "2", "--slo-ms", "60000"],
+        env=_env(), capture_output=True, text=True, timeout=600, cwd=REPO)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "class 0:" in out.stdout and "class 1:" in out.stdout
+    assert "SLO attainment:" in out.stdout
+    assert "prefix cache:" in out.stdout
+    assert "preemptions:" in out.stdout
+
+
+def test_benchmarks_serving_priorities_records_slo_rows(tmp_path):
+    import json
+    json_path = str(tmp_path / "prio.json")
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "--smoke", "serving", "--paged", "--priorities",
+         "--json", json_path],
+        env=_env(), capture_output=True, text=True, timeout=600, cwd=REPO)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    with open(json_path) as f:
+        rows = {r["name"]: r for r in json.load(f)["rows"]}
+    assert {"serving/smoke/slo_attained_pct",
+            "serving/smoke/p95_latency_hipri",
+            "serving/smoke/preemptions"} <= set(rows)
+    assert rows["serving/smoke/preemptions"]["us_per_call"] >= 1, \
+        "the mixed-priority smoke workload must actually preempt"
+    assert "preempt=on" in rows["serving/smoke/slo_attained_pct"]["derived"]
