@@ -17,17 +17,34 @@ adds SLO-attainment / p95-by-class / preemption rows; ``preempt=False``
 serves the identical workload with preempt-and-swap disabled, so
 ``run.py report preempt_off.json preempt_on.json`` isolates what preemption
 buys the urgent class.
+
+``replicas=N`` serves a prefix-heavy workload (four prefix groups, every
+request deadline-bearing) through ``repro.serving.router.ReplicaRouter``
+over N paged engine replicas and adds ``tok_s_total`` /
+``slo_attained_pct`` / ``prefix_hit_rate`` / ``backpressure_rejects`` rows.
+The workload is IDENTICAL for every N (and for ``affinity=False``), so
+``run.py report replicas1.json replicas4.json`` is the scaling diff and an
+affinity-off run isolates what prefix routing buys.
+
+All modes drive the engine layer (``Engine`` / ``ReplicaRouter``) — the
+grep-policy test pins that nothing here touches ``ContinuousScheduler``
+directly.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 
 
 def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
-        preempt: bool = True) -> list:
+        preempt: bool = True, replicas: int = 0,
+        affinity: bool = True) -> list:
     import repro.configs as configs
     from repro.models import layers as L, transformer
     from repro.serving import scheduler
+    from repro.serving.engine_api import Engine
+    from repro.serving.router import ReplicaRouter
 
     cfg = configs.get_smoke("smollm_360m")
     block_size = 8
@@ -40,35 +57,54 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
         n_req, slots, slot_len, chunk = 32, 8, 96, 16
         prompt_lens, decode_lens, rate = (8, 48), (4, 40), 3.0
         shared_prefix = 16
+    if replicas:
+        paged = True                   # affinity is a paged-cache economy
     paged_kw = dict(paged=True, block_size=block_size) if paged else {}
-    if priorities and paged:
+    if priorities and paged and not replicas:
         # undersize the pool so urgent arrivals actually contend with
         # running low-priority decodes — the regime preemption exists for
         paged_kw["num_blocks"] = (slots + 1) * (slot_len // block_size) // 2
     paged_kw["preempt"] = preempt
 
     params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
-    # priorities seed: urgent (priority-0) arrivals land AFTER low-priority
-    # decodes occupy the pool — the contention preemption exists to resolve
-    requests = scheduler.poisson_workload(
-        n_req, rate_per_tick=rate, prompt_lens=prompt_lens,
-        decode_lens=decode_lens, vocab=cfg.vocab_size,
-        seed=6 if priorities else 0,
-        shared_prefix=shared_prefix if paged else 0,
-        priority_classes=2 if priorities else 1,
-        slo_ms=slo_ms if priorities else None)
+    if replicas:
+        # prefix-heavy: four groups, each sharing its own system prompt —
+        # the SAME workload for every replica count / routing policy, so
+        # cross-run diffs measure the router, not the traffic
+        per_group = 3 if smoke else 8
+        requests = []
+        for g in range(4):
+            for r in scheduler.poisson_workload(
+                    per_group, rate_per_tick=rate / 2,
+                    prompt_lens=prompt_lens, decode_lens=decode_lens,
+                    vocab=cfg.vocab_size, seed=10 + g,
+                    shared_prefix=shared_prefix, slo_ms=slo_ms):
+                requests.append(dataclasses.replace(
+                    r, rid=g * per_group + r.rid))
+        requests.sort(key=lambda r: (r.arrival_tick, r.rid))
+    else:
+        # priorities seed: urgent (priority-0) arrivals land AFTER
+        # low-priority decodes occupy the pool — the contention preemption
+        # exists to resolve
+        requests = scheduler.poisson_workload(
+            n_req, rate_per_tick=rate, prompt_lens=prompt_lens,
+            decode_lens=decode_lens, vocab=cfg.vocab_size,
+            seed=6 if priorities else 0,
+            shared_prefix=shared_prefix if paged else 0,
+            priority_classes=2 if priorities else 1,
+            slo_ms=slo_ms if priorities else None)
 
     # warmup: the compiled step functions are shared across scheduler
-    # instances, and a prompt of 2*chunk-1 hits every prefill width the
-    # binary chunk schedule can produce — so the timed run below measures
-    # serving, not jit compilation
+    # instances (and all router replicas), and a prompt of 2*chunk-1 hits
+    # every prefill width the binary chunk schedule can produce — so the
+    # timed run below measures serving, not jit compilation
     import numpy as np
-    warm = scheduler.ContinuousScheduler(
+    warm = Engine(
         params, cfg, num_slots=slots, slot_len=slot_len, prefill_chunk=chunk,
         top_k=5, base_rng=jax.random.PRNGKey(1), **paged_kw)
     warm_reqs = [scheduler.Request(rid=0, prompt=np.arange(2 * chunk - 1)
                                    % 100, max_new_tokens=2)]
-    if priorities and preempt:
+    if priorities and preempt and not replicas:
         # also warm the preempt-and-swap path (swap-in's block restore jits
         # once per pool shape): low-priority decodes filling every row, then
         # an urgent arrival that must swap one out
@@ -78,15 +114,23 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
             for i in range(slots)
         ] + [scheduler.Request(rid=slots, prompt=np.arange(chunk) % 100,
                                max_new_tokens=2, arrival_tick=3, priority=0)]
-    warm.run(warm_reqs)
+    warm.serve(warm_reqs)
 
-    sched = scheduler.ContinuousScheduler(
-        params, cfg, num_slots=slots, slot_len=slot_len, prefill_chunk=chunk,
-        top_k=5, base_rng=jax.random.PRNGKey(0), **paged_kw)
-    report = sched.run(requests)
+    if replicas:
+        router = ReplicaRouter(
+            params, cfg, replicas=replicas, affinity=affinity,
+            num_slots=slots, slot_len=slot_len, prefill_chunk=chunk,
+            top_k=5, base_rng=jax.random.PRNGKey(0), **paged_kw)
+        report = router.serve(requests)
+    else:
+        eng = Engine(
+            params, cfg, num_slots=slots, slot_len=slot_len,
+            prefill_chunk=chunk, top_k=5, base_rng=jax.random.PRNGKey(0),
+            **paged_kw)
+        report = eng.serve(requests)
 
     pct = report.latency_percentiles((50, 95))
-    baseline = report.baseline_occupancy(slots)
+    baseline = report.baseline_occupancy(slots * max(replicas, 1))
     tag = "smoke" if smoke else "full"
     rows = [
         (f"serving/{tag}/per_token", 1e6 / max(report.tokens_per_s, 1e-9),
@@ -104,7 +148,26 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
                      f"tokens_reused={p['tokens_reused']} "
                      f"cow={p['cow_copies']} "
                      f"min_free={p['min_free_blocks']}/{p['num_blocks']}"))
-    if priorities:
+    if replicas:
+        p = report.paged
+        r = report.router
+        prompt_tokens = sum(res.prompt_len for res in report.results)
+        att = report.slo_attainment()
+        bearing = sum(1 for res in report.results if res.slo_ms is not None)
+        routing = "affinity" if r["affinity"] else "round_robin"
+        rows.append((f"serving/{tag}/tok_s_total", report.tokens_per_s,
+                     f"replicas={replicas} routing={routing}"))
+        rows.append((f"serving/{tag}/slo_attained_pct",
+                     (att or 0.0) * 100.0,
+                     f"slo_ms={slo_ms:.0f} n={bearing}"))
+        rows.append((f"serving/{tag}/prefix_hit_rate",
+                     100.0 * p["tokens_reused"] / max(prompt_tokens, 1),
+                     f"tokens_reused={p['tokens_reused']}"
+                     f"/{prompt_tokens} routing={routing}"))
+        rows.append((f"serving/{tag}/backpressure_rejects",
+                     float(r["backpressure_rejects"]),
+                     f"of {len(requests)} submitted"))
+    if priorities and not replicas:
         att = report.slo_attainment()
         bearing = sum(1 for r in report.results if r.slo_ms is not None)
         by_class = report.latency_percentiles_by_class((95,))

@@ -9,7 +9,8 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_serving        → beyond-paper (continuous batching: tok/s, p50/p95
                          per-token latency, occupancy vs drain-and-refill;
                          ``--paged`` serves through the paged KV cache and
-                         adds block-sharing accounting)
+                         adds block-sharing accounting; ``--replicas N``
+                         routes over N engines with prefix affinity)
 
 ``--smoke`` shrinks every sweep to a seconds-long sanity pass (tiny V/batch,
 one case per module) — the tier-1 suite runs it so the harness itself can't
@@ -136,6 +137,16 @@ def main(argv=None) -> int:
                     help="serving bench disables preempt-and-swap (the "
                          "baseline `report` diffs a --priorities run "
                          "against)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serving bench routes a prefix-heavy workload over "
+                         "N paged engine replicas (ReplicaRouter) and adds "
+                         "tok_s_total / slo_attained_pct / prefix_hit_rate "
+                         "/ backpressure_rejects rows; the workload is the "
+                         "same for every N so `report` diffs replica counts")
+    ap.add_argument("--no-affinity", action="store_true",
+                    help="serving bench routes round-robin instead of by "
+                         "prefix affinity (the baseline a --replicas run "
+                         "diffs against)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + backend capabilities to PATH")
     args = ap.parse_args(argv)
@@ -153,6 +164,9 @@ def main(argv=None) -> int:
                 kwargs["priorities"] = True
             if args.no_preempt:
                 kwargs["preempt"] = False
+            if args.replicas:
+                kwargs["replicas"] = args.replicas
+                kwargs["affinity"] = not args.no_affinity
         rows.extend(mods[name].run(smoke=args.smoke, **kwargs))
     emit(rows)
     if args.json:

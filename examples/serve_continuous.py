@@ -13,6 +13,7 @@ import jax
 import repro.configs as configs
 from repro.models import layers as L, transformer
 from repro.serving import scheduler
+from repro.serving.engine_api import Engine
 
 cfg = configs.get_smoke("smollm_360m")
 params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
@@ -25,10 +26,10 @@ print(f"{len(requests)} requests, prompts "
       f"{[len(r.prompt) for r in requests]}, "
       f"decode budgets {[r.max_new_tokens for r in requests]}")
 
-sched = scheduler.ContinuousScheduler(
+engine = Engine(
     params, cfg, num_slots=SLOTS, slot_len=SLOT_LEN, prefill_chunk=12,
     top_k=5, base_rng=jax.random.PRNGKey(42))
-report = sched.run(requests)
+report = engine.serve(requests)
 
 pct = report.latency_percentiles((50, 95))
 baseline = report.baseline_occupancy(SLOTS)

@@ -14,6 +14,7 @@ import jax
 import repro.configs as configs
 from repro.models import layers as L, transformer
 from repro.serving import scheduler
+from repro.serving.engine_api import Engine
 
 cfg = configs.get_smoke("smollm_360m")
 params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
@@ -25,10 +26,10 @@ requests = scheduler.poisson_workload(
 print(f"{len(requests)} requests, all sharing a 16-token prompt prefix "
       f"(= {16 // BLOCK} full blocks at block_size={BLOCK})")
 
-sched = scheduler.ContinuousScheduler(
+engine = Engine(
     params, cfg, num_slots=SLOTS, slot_len=SLOT_LEN, prefill_chunk=12,
     top_k=5, base_rng=jax.random.PRNGKey(42), paged=True, block_size=BLOCK)
-report = sched.run(requests)
+report = engine.serve(requests)
 
 pct = report.latency_percentiles((50, 95))
 print(f"served {report.total_tokens} tokens in {report.wall_time:.2f}s "

@@ -14,7 +14,10 @@ orders by (priority, arrival); in paged mode a blocked urgent request
 preempts lower-priority decodes by swapping their blocks out — disable
 with ``--no-preempt``) and ``--slo-ms`` attaches a completion deadline to
 the urgent class; the report then adds p95-by-class, SLO attainment, and
-preemption/swap counts.  Without ``--continuous`` the original
+preemption/swap counts.  ``--replicas N`` serves the same workload through
+``repro.serving.router.ReplicaRouter`` over N engine replicas —
+prefix-affinity routed (``--no-affinity`` for round-robin), with admission
+backpressure and a globally merged report.  Without ``--continuous`` the original
 lockstep batch runs: one shared cache length, prefill-everything-then-decode
 — kept as the baseline the scheduler has to beat.  Either way the decode hot
 path is the paper's §4 scenario: project to the vocabulary, fused
@@ -78,8 +81,15 @@ def _lockstep(args, cfg, params) -> int:
 
 
 def _continuous(args, cfg, params) -> int:
-    """Continuous batching over staggered (Poisson) synthetic arrivals."""
+    """Continuous batching over staggered (Poisson) synthetic arrivals.
+
+    Always drives a ``ReplicaRouter`` — with ``--replicas 1`` (the default)
+    it owns a single ``Engine`` and the report lines are byte-identical to
+    the pre-router CLI (pinned by tests/test_serving_router.py); with more,
+    traffic spreads across replicas by prefix affinity (``--no-affinity``
+    for the round-robin baseline) and the report merges globally."""
     from repro.serving import scheduler as sched_mod
+    from repro.serving.router import ReplicaRouter
 
     vocab = cfg.real_vocab_size or cfg.vocab_size
     slot_len = args.max_len or (args.prompt_len + args.tokens + 8)
@@ -93,20 +103,24 @@ def _continuous(args, cfg, params) -> int:
         vocab=vocab, seed=1, shared_prefix=shared_prefix,
         priority_classes=args.priority_classes,
         slo_ms=args.slo_ms or None)
-    sched = sched_mod.ContinuousScheduler(
-        params, cfg, num_slots=args.slots, slot_len=slot_len,
+    router = ReplicaRouter(
+        params, cfg, replicas=args.replicas,
+        affinity=not args.no_affinity,
+        num_slots=args.slots, slot_len=slot_len,
         prefill_chunk=args.prefill_chunk, top_k=args.top_k,
         base_rng=jax.random.PRNGKey(0), paged=args.paged,
         block_size=args.block_size,
         num_blocks=args.blocks or None,
         preempt=not args.no_preempt)
-    report = sched.run(requests)
+    report = router.serve(requests)
 
     pct = report.latency_percentiles((50, 95))
-    baseline = report.baseline_occupancy(args.slots)
+    baseline = report.baseline_occupancy(args.slots * args.replicas)
     mode = "paged continuous batching" if args.paged else "continuous batching"
+    where = (f"{args.slots} slots" if args.replicas == 1
+             else f"{args.replicas} replicas × {args.slots} slots")
     print(f"{mode}: {len(report.results)} requests over "
-          f"{args.slots} slots (slot_len={slot_len}, "
+          f"{where} (slot_len={slot_len}, "
           f"prefill_chunk={args.prefill_chunk})")
     print(f"tokens: {report.total_tokens} in {report.wall_time:.2f}s "
           f"→ {report.tokens_per_s:.1f} tok/s")
@@ -127,6 +141,14 @@ def _continuous(args, cfg, params) -> int:
         print(f"prefix cache: {p['cached_blocks']} blocks resident, "
               f"{p['prefix_cache_hits']} hits, "
               f"{p['reclaimed_blocks']} reclaimed under pressure")
+    if args.replicas > 1:
+        r = report.router
+        routing = "prefix-affinity" if r["affinity"] else "round-robin"
+        print(f"router: {routing}, per-replica requests "
+              f"{r['per_replica']}, affinity routes {r['affinity_routes']}")
+        if r["backpressure_rejects"]:
+            print(f"backpressure: {r['backpressure_rejects']} rejected "
+                  f"{r['rejected']}")
     if args.priority_classes > 1:
         for pr, pct_c in sorted(
                 report.latency_percentiles_by_class((50, 95)).items()):
@@ -191,6 +213,13 @@ def main(argv=None):
     ap.add_argument("--slo-ms", type=float, default=0.0,
                     help="completion deadline attached to priority-0 "
                          "requests; report adds SLO attainment (0 = off)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the router (continuous "
+                         "mode; 1 = the single-engine CLI, byte-identical "
+                         "report)")
+    ap.add_argument("--no-affinity", action="store_true",
+                    help="route round-robin instead of by prefix affinity "
+                         "(multi-replica baseline)")
     ap.add_argument("--no-preempt", action="store_true",
                     help="disable preempt-and-swap of lower-priority "
                          "decodes (paged mode; priorities stay "

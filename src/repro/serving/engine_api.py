@@ -1,0 +1,177 @@
+"""Engine layer: the narrow serving surface over ``ContinuousScheduler``.
+
+``Engine`` owns one scheduler instance — and through it the KV pool and the
+``lru_cache``-shared jitted steps — and exposes the five operations every
+front-end needs and nothing more:
+
+* ``submit(req)``   — enqueue a request (validation lives in the scheduler).
+* ``step()``        — advance exactly one scheduler tick; returns whether
+                      work remains.  The router interleaves replicas by
+                      calling this round-robin.
+* ``drain()``       — step until idle, then report.
+* ``stats()``       — live counters (queue depth, active, pool state) for
+                      routing and monitoring.
+* ``cache_probe(p)``— how many tokens of prompt ``p`` the persistent prefix
+                      cache would serve for free (paged mode; 0 otherwise).
+                      The router's affinity signal.
+
+``serve(requests)`` is the batch convenience (begin + submit all + drain)
+that ``ContinuousScheduler.run`` now delegates to, so the CLI, benchmarks,
+examples, the router, and the legacy ``run`` all drive the exact same loop.
+Everything the scheduler already guarantees — per-(rid, token index) sample
+keys, deadline-aware admission, preempt-and-swap — passes through untouched:
+the engine adds no policy, only a boundary.
+
+The grep-policy test ``tests/test_compat.py::test_engine_loop_centralized``
+pins this boundary: outside ``src/repro/serving/`` nobody constructs a
+``ContinuousScheduler`` or calls its ``tick`` — they hold an ``Engine`` (or
+a ``repro.serving.router.ReplicaRouter`` over several).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Iterable, Optional
+
+from repro.serving.scheduler import (ContinuousScheduler, Request,
+                                     RequestResult, ServeReport)
+
+
+class Engine:
+    """One serving replica: scheduler + KV pool + jitted steps behind a
+    ``submit / step / drain / stats / cache_probe`` surface.
+
+    Construction takes the same signature as ``ContinuousScheduler`` —
+    ``Engine(params, cfg, num_slots=..., slot_len=..., paged=True, ...)`` —
+    because the engine owns the scheduler it builds.  ``Engine.wrap``
+    adopts an existing scheduler instead (the compatibility path
+    ``ContinuousScheduler.run`` uses)."""
+
+    def __init__(self, params, cfg, **scheduler_kwargs):
+        self._sched = ContinuousScheduler(params, cfg, **scheduler_kwargs)
+        self._t0: Optional[float] = None
+
+    @classmethod
+    def wrap(cls, sched: ContinuousScheduler) -> "Engine":
+        """Adopt an already-built scheduler (no new pools or jit)."""
+        eng = cls.__new__(cls)
+        eng._sched = sched
+        eng._t0 = None
+        return eng
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def scheduler(self) -> ContinuousScheduler:
+        return self._sched
+
+    @property
+    def paged(self) -> bool:
+        return self._sched.paged
+
+    @property
+    def num_slots(self) -> int:
+        return self._sched.pool.num_slots
+
+    @property
+    def busy(self) -> bool:
+        return self._sched.busy
+
+    @property
+    def load(self) -> int:
+        """Requests this engine is responsible for but has not finished:
+        queued + active + suspended + the in-flight prefill.  The router's
+        least-loaded signal."""
+        s = self._sched
+        return (len(s.queue) + len(s.active) + len(s._suspended)
+                + (1 if s._prefill is not None else 0))
+
+    # -- the narrow surface -------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._sched.submit(req)
+
+    def begin(self) -> None:
+        """(Re)start the wall clock.  ``step``/``drain`` call it lazily on
+        first use; ``serve`` calls it unconditionally so a reused engine
+        times each batch from its own start, exactly like the pre-engine
+        ``ContinuousScheduler.run`` did."""
+        self._t0 = time.monotonic()
+
+    def step(self) -> bool:
+        """Advance one scheduler tick.  Returns True while work remains."""
+        if self._t0 is None:
+            self.begin()
+        self._sched.tick()
+        return self._sched.busy
+
+    def drain(self, *, max_ticks: int = 100_000) -> ServeReport:
+        """Step until idle, then report.  ``max_ticks`` guards the same
+        wedge conditions (and message) the old scheduler loop did."""
+        if self._t0 is None:
+            self.begin()
+        s = self._sched
+        while s.busy:
+            if s.tick_count >= max_ticks:
+                raise RuntimeError(f"scheduler wedged after {max_ticks} ticks")
+            s.tick()
+        return self.report()
+
+    def serve(self, requests: Optional[Iterable[Request]] = None, *,
+              max_ticks: int = 100_000) -> ServeReport:
+        """Batch mode: submit everything, drain, report."""
+        self.begin()
+        for r in (requests or ()):
+            self.submit(r)
+        return self.drain(max_ticks=max_ticks)
+
+    def report(self) -> ServeReport:
+        """Snapshot the scheduler's cumulative results as a ``ServeReport``
+        (identical construction to the pre-engine ``run`` return)."""
+        s = self._sched
+        wall = time.monotonic() - self._t0 if self._t0 is not None else 0.0
+        occ = (s._occupancy_sum / s.decode_steps if s.decode_steps else 0.0)
+        return ServeReport(results=s.finished,
+                           decode_steps=s.decode_steps,
+                           prefill_chunks=s.prefill_chunks,
+                           occupancy=occ, wall_time=wall,
+                           paged=s.pool.stats() if s.paged else None,
+                           preemptions=s.preemptions)
+
+    def stats(self) -> dict:
+        """Live counters for routing/monitoring (pool stats merged in when
+        paged)."""
+        s = self._sched
+        out = {"tick_count": s.tick_count,
+               "decode_steps": s.decode_steps,
+               "prefill_chunks": s.prefill_chunks,
+               "queue_depth": len(s.queue),
+               "active": len(s.active),
+               "suspended": len(s._suspended),
+               "finished": len(s.finished),
+               "free_slots": s.pool.free_slots,
+               "preemptions": s.preemptions}
+        if s.paged:
+            out.update(s.pool.stats())
+        return out
+
+    def cache_probe(self, prompt) -> int:
+        """Tokens of ``prompt`` the persistent prefix cache / live blocks
+        would serve without prefilling (0 when unpaged).  Read-only."""
+        if not self._sched.paged:
+            return 0
+        return self._sched.pool.probe(prompt)
+
+    def starved(self, prompt_len: int) -> bool:
+        """Admission-backpressure signal: the queue is at least a full
+        pool deep AND the pool cannot place ``prompt_len`` even by
+        reclaiming every cold prefix-cache block.  Queued work here waits
+        on capacity, not on the tick cadence."""
+        s = self._sched
+        if len(s.queue) < s.pool.num_slots:
+            return False
+        if not s.paged:
+            return s.pool.free_slots == 0
+        need = math.ceil((prompt_len + 1) / s.pool.block_size)
+        return s.pool.free_blocks + s.pool.cached_blocks < need
+
+
+__all__ = ["Engine", "Request", "RequestResult", "ServeReport"]

@@ -157,6 +157,22 @@ class PrefixIndex:
         self._partial: dict[tuple, dict[tuple, int]] = {}
         self._by_block: dict[int, list] = {}
 
+    @staticmethod
+    def chain_keys(tokens, block_size: int) -> list:
+        """The nested chain keys of every full block of ``tokens`` —
+        ``key_i = (key_{i-1}, tokens_of_block_i)``, the exact values
+        admission matches under.  Exposed so the replica router can hash a
+        prompt's block chain with the SAME function the index uses: a
+        router affinity entry keyed on ``chain_keys(prompt)[-1]`` refers to
+        precisely the blocks a later ``admit`` of that prompt would adopt."""
+        toks = tuple(int(t) for t in tokens)
+        keys: list = []
+        key: tuple = ()
+        for i in range(len(toks) // block_size):
+            key = (key, toks[i * block_size:(i + 1) * block_size])
+            keys.append(key)
+        return keys
+
     def lookup(self, key: tuple) -> Optional[int]:
         return self._full.get(key)
 
@@ -228,11 +244,16 @@ class SwappedSeq:
     still resident — or ``("host", content)`` — an exclusively-owned block
     whose cache content was copied to the host and whose physical block was
     freed.  ``length`` is the valid cache extent at suspension, the offset
-    decode resumes from after ``swap_in``."""
+    decode resumes from after ``swap_in``.  ``staged`` holds device copies
+    of host entries prepared ahead of time by ``prefetch_swap_in`` (entry
+    index → device pytree): the scheduler stages them while a decode step
+    is still in flight, and ``swap_in`` consumes them instead of paying the
+    host→device transfer on the resume's critical path."""
     prompt: np.ndarray
     matched: int
     length: int
     entries: list
+    staged: dict = field(default_factory=dict)
 
 
 # The copy-on-write and swap-in-restore primitives, jitted once per pool
@@ -318,6 +339,7 @@ class PagedPool:
         self.reclaimed_blocks = 0       # cold cached blocks fed to the free list
         self.swapped_blocks_out = 0     # exclusive blocks copied to the host
         self.swapped_blocks_in = 0      # host blocks restored by swap_in
+        self.swap_prefetched_blocks = 0  # host blocks staged ahead of swap_in
         self.min_free_blocks = self.alloc.free_blocks
 
     # -- slot-pool-compatible surface ---------------------------------------
@@ -412,8 +434,9 @@ class PagedPool:
         shared: list[int] = []
         key: tuple = ()
         matched = 0
-        while matched + bs <= cap:
-            k2 = (key, tuple(toks[matched:matched + bs]))
+        for k2 in PrefixIndex.chain_keys(toks, bs):
+            if matched + bs > cap:
+                break
             bid = self.index.lookup(k2)
             if bid is None:
                 break
@@ -487,6 +510,29 @@ class PagedPool:
         rem = tuple(toks[n_full * bs:])
         if rem:
             self.index.register_partial(key, rem, seq.blocks[n_full])
+
+    def probe(self, prompt) -> int:
+        """Read-only prefix probe: how many prompt tokens an ``admit`` of
+        ``prompt`` would adopt from the index RIGHT NOW (full-block chain
+        matches plus the best partial-tail candidate), with no refcount,
+        cache-LRU, or stats side effects.  The replica router ranks engines
+        on this to route a request where its prefix already lives;
+        ``admit`` stays the only path that claims blocks."""
+        toks = [int(t) for t in prompt]
+        cap = len(toks) - 1
+        bs = self.block_size
+        matched = 0
+        key: tuple = ()
+        for k2 in PrefixIndex.chain_keys(toks, bs):
+            if matched + bs > cap or self.index.lookup(k2) is None:
+                break
+            key = k2
+            matched += bs
+        if matched < cap:
+            _, tail_len = self.index.lookup_partial(key, toks[matched:],
+                                                    cap - matched)
+            matched += tail_len
+        return matched
 
     # -- decode-time block upkeep -------------------------------------------
     def _alloc_reclaiming(self, exclude=()) -> Optional[int]:
@@ -610,14 +656,18 @@ class PagedPool:
         del self.swapped[rid]
         slot = self._free_rows.popleft()
         blocks: list = []
-        for kind, payload in rec.entries:
+        for i, (kind, payload) in enumerate(rec.entries):
             if kind == "shared":
                 blocks.append(payload)
                 self._touch(payload)
                 continue
             bid = self.alloc.alloc()
             assert bid is not None          # gated above
-            self.caches = _write_block(self.caches, payload, bid)
+            # a prefetch-staged device copy (bit-identical content, already
+            # transferred while an earlier decode step ran) beats paying the
+            # host→device move here on the resume's critical path
+            self.caches = _write_block(self.caches,
+                                       rec.staged.get(i, payload), bid)
             blocks.append(bid)
             self.swapped_blocks_in += 1
         self.tables[slot, :] = self._sentinel
@@ -629,6 +679,26 @@ class PagedPool:
         self.min_free_blocks = min(self.min_free_blocks,
                                    self.alloc.free_blocks)
         return seq
+
+    def prefetch_swap_in(self, rid: int) -> int:
+        """Stage the suspended sequence's host-side blocks onto the device
+        ahead of its eventual ``swap_in``.  ``jnp.asarray`` dispatches the
+        host→device transfers asynchronously, so calling this right after a
+        decode step is issued overlaps the copies with that step's compute;
+        the staged arrays are bit-identical to the host content and
+        ``swap_in`` consumes them instead of re-transferring.  Idempotent —
+        already-staged entries are skipped.  Returns blocks newly staged."""
+        rec = self.swapped.get(rid)
+        if rec is None:
+            return 0
+        staged = 0
+        for i, (kind, payload) in enumerate(rec.entries):
+            if kind != "host" or i in rec.staged:
+                continue
+            rec.staged[i] = compat.tree_map(jnp.asarray, payload)
+            staged += 1
+        self.swap_prefetched_blocks += staged
+        return staged
 
     def stats(self) -> dict:
         return {
@@ -644,4 +714,5 @@ class PagedPool:
             "reclaimed_blocks": self.reclaimed_blocks,
             "swapped_blocks_out": self.swapped_blocks_out,
             "swapped_blocks_in": self.swapped_blocks_in,
+            "swap_prefetched_blocks": self.swap_prefetched_blocks,
         }

@@ -1,0 +1,175 @@
+"""Router layer: spread Poisson traffic over N ``Engine`` replicas.
+
+One engine replica serves one KV pool; "millions of users" (ROADMAP) means
+several.  ``ReplicaRouter`` owns N independent ``Engine``s and decides, per
+request, which replica's pool the prompt lands in:
+
+* **Prefix affinity** (paged replicas, default on) — a prompt's identity for
+  routing is its block chain hashed exactly the way ``PrefixIndex`` keys
+  physical blocks: ``key_i = (key_{i-1}, tokens of block i)``.  The router
+  first *probes* every replica (``Engine.cache_probe`` — read-only) and
+  sends the request to the replica whose resident cache already covers the
+  most prompt tokens; failing a live hit, it falls back to the replica its
+  own routing history assigned the deepest chain key to (the blocks may
+  still be cached there, or arrive shortly — requests routed earlier to
+  that replica will mint them); failing both, least-loaded.  Same-prefix
+  requests therefore converge on one replica, where PR 5's persistent LRU
+  prefix cache turns their shared blocks into real reuse instead of N cold
+  copies.
+* **Least-loaded fallback / ``affinity=False``** — no-prefix traffic (and
+  the hash-free baseline the benchmarks diff) spreads by ``Engine.load``
+  (affinity off: pure round-robin), which keeps pools evenly busy.
+* **Backpressure** — when EVERY replica is starved for the request
+  (``Engine.starved``: queue a full pool deep and not enough free+cached
+  blocks to ever place the prompt now), ``submit`` REJECTS the request
+  instead of queueing it into a pool that cannot serve it; the caller sees
+  ``None`` and the reject is counted in the report.  One live replica is
+  enough to accept.
+* **Global accounting** — per-replica ``ServeReport``s combine through
+  ``ServeReport.merge``: raw latency lists concatenate (percentiles are
+  computed over the union, never averaged), counters sum, occupancy is
+  decode-step-weighted, and the merged report carries a ``router`` dict
+  (assignments, affinity routes, backpressure rejects).
+
+Determinism: every replica shares the same ``base_rng``, and sample streams
+are keyed (base_rng, request id, token index) — so WHERE a request lands
+never changes WHAT it generates.  ``tests/test_serving_router.py`` pins
+bit-identity to solo decode for replica counts {1, 2, 4}.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, Optional
+
+from repro.serving.engine_api import Engine
+from repro.serving.paged import PrefixIndex
+from repro.serving.scheduler import Request, ServeReport
+
+
+class ReplicaRouter:
+    """N-replica front-end with prefix-affinity routing and admission
+    backpressure.
+
+    ``ReplicaRouter(params, cfg, replicas=4, num_slots=..., ...)`` builds
+    N identical engines from the shared ``**engine_kwargs`` (all replicas
+    see the same ``base_rng``, keeping streams solo-identical).  Affinity
+    requires paged engines; it degrades to round-robin otherwise.
+    ``backpressure`` defaults to on for multi-replica routers and off for
+    N=1, where rejecting would change single-engine CLI behaviour."""
+
+    def __init__(self, params, cfg, *, replicas: int = 1,
+                 affinity: bool = True, backpressure: Optional[bool] = None,
+                 **engine_kwargs):
+        if replicas < 1:
+            raise ValueError(f"replicas must be ≥ 1 (got {replicas})")
+        self.engines = [Engine(params, cfg, **engine_kwargs)
+                        for _ in range(replicas)]
+        self.block_size = int(engine_kwargs.get("block_size", 8))
+        self.affinity = bool(affinity) and self.engines[0].paged
+        self.backpressure = (replicas > 1 if backpressure is None
+                             else bool(backpressure))
+        self._affinity_map: dict = {}      # chain key → replica index
+        self._rr = 0                       # round-robin cursor
+        self.assignments: dict[int, int] = {}   # rid → replica index
+        self.rejected: list[int] = []      # rids refused by backpressure
+        self.backpressure_rejects = 0
+        self.affinity_routes = 0           # routed by probe/history hit
+        self.tick_count = 0
+
+    @property
+    def replicas(self) -> int:
+        return len(self.engines)
+
+    # -- routing ------------------------------------------------------------
+    def route(self, req: Request) -> int:
+        """Pick a replica for ``req`` (no submission).  Affinity order:
+        deepest live cache probe → deepest remembered chain key →
+        least-loaded.  Affinity off: round-robin."""
+        n = len(self.engines)
+        if not self.affinity:
+            choice = self._rr % n
+            self._rr += 1
+            return choice
+        keys = PrefixIndex.chain_keys(req.prompt, self.block_size)
+        probes = [e.cache_probe(req.prompt) for e in self.engines]
+        loads = [e.load for e in self.engines]
+        best = max(range(n), key=lambda i: (probes[i], -loads[i], -i))
+        if probes[best] > 0:
+            choice = best
+            self.affinity_routes += 1
+        else:
+            choice = None
+            for key in reversed(keys):     # deepest remembered prefix wins
+                if key in self._affinity_map:
+                    choice = self._affinity_map[key]
+                    self.affinity_routes += 1
+                    break
+            if choice is None:
+                choice = min(range(n), key=lambda i: (loads[i], i))
+        for key in keys:                   # future same-prefix → same place
+            self._affinity_map[key] = choice
+        return choice
+
+    # -- the narrow surface -------------------------------------------------
+    def submit(self, req: Request) -> Optional[int]:
+        """Route and enqueue ``req``.  Returns the replica index, or None
+        when backpressure rejects it (every replica starved)."""
+        if (self.backpressure
+                and all(e.starved(len(req.prompt)) for e in self.engines)):
+            self.rejected.append(req.rid)
+            self.backpressure_rejects += 1
+            return None
+        choice = self.route(req)
+        self.engines[choice].submit(req)
+        self.assignments[req.rid] = choice
+        return choice
+
+    def step(self) -> bool:
+        """Advance every replica one tick.  Returns True while any is
+        busy."""
+        self.tick_count += 1
+        busy = False
+        for e in self.engines:
+            busy = e.step() or busy
+        return busy
+
+    def serve(self, requests: Optional[Iterable[Request]] = None, *,
+              max_ticks: int = 100_000) -> ServeReport:
+        """Drive the full workload: requests are submitted as their
+        ``arrival_tick`` comes due — routing sees the cache/load state of
+        that moment, exactly as live traffic would — and every replica
+        ticks in lockstep until all are idle."""
+        for e in self.engines:
+            e.begin()
+        pending = deque(sorted(list(requests or ()),
+                               key=lambda r: r.arrival_tick))
+        while pending or any(e.busy for e in self.engines):
+            if self.tick_count >= max_ticks:
+                raise RuntimeError(f"router wedged after {max_ticks} ticks")
+            next_tick = self.tick_count + 1
+            while pending and pending[0].arrival_tick <= next_tick:
+                self.submit(pending.popleft())
+            self.step()
+        return self.report()
+
+    def report(self) -> ServeReport:
+        """Merged global report (raw latencies concatenated, counters
+        summed) carrying the router's own accounting."""
+        per_replica = [0] * len(self.engines)
+        for rep in self.assignments.values():
+            per_replica[rep] += 1
+        return ServeReport.merge(
+            [e.report() for e in self.engines],
+            router={"replicas": len(self.engines),
+                    "affinity": self.affinity,
+                    "assignments": dict(self.assignments),
+                    "per_replica": per_replica,
+                    "affinity_routes": self.affinity_routes,
+                    "backpressure_rejects": self.backpressure_rejects,
+                    "rejected": list(self.rejected)})
+
+    def stats(self) -> list[dict]:
+        return [e.stats() for e in self.engines]
+
+
+__all__ = ["ReplicaRouter"]

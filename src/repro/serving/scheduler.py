@@ -43,17 +43,32 @@ member finishes, leaving slots idle.  This scheduler keeps the batch full:
   admission/decode pressure reclaims them coldest-first.
 
 * **Priorities, SLOs, preemption** — requests carry a ``priority`` class
-  (smaller = more urgent; admission orders by (priority, arrival)) and an
-  optional ``slo_ms`` completion deadline that ``ServeReport`` scores
-  per class.  In paged mode with ``preempt=True``, a request that cannot be
+  (smaller = more urgent) and an optional ``slo_ms`` completion deadline
+  that ``ServeReport`` scores per class.  Admission is deadline-aware
+  within a class: candidates order by (priority, deadline slack, arrival),
+  where slack = ``slo_ms`` minus time already waited — tighter deadlines
+  place first, deadline-bearing requests outrank deadline-free peers, and
+  uniform-SLO workloads keep their arrival order.  In paged mode with
+  ``preempt=True``, a request that cannot be
   placed — no free row, or out of blocks *after* the pool reclaimed its cold
-  prefix-cache blocks — swaps out the lowest-priority longest-remaining
-  active decode (``PagedPool.swap_out``: exclusive blocks to a host-side
+  prefix-cache blocks — swaps out the lowest-priority active decode,
+  preferring deadline-free then loosest-slack then longest-remaining
+  victims (``PagedPool.swap_out``: exclusive blocks to a host-side
   store, shared prefix blocks kept resident by reference).  The victim
   resumes later with no re-prefill and, because sample keys are
   (request id, token index), a token stream bit-identical to the
   never-preempted run.  The same swap runs before the out-of-blocks
   eviction backstop: live low-priority work yields before anyone is killed.
+  While suspended work waits, each decode tick prefetches the next
+  resume's host blocks back onto the device (``PagedPool.
+  prefetch_swap_in``) concurrently with the step already in flight.
+
+* **Engine layer** — the driving loop lives in ``repro.serving.engine_api``:
+  ``Engine`` owns a scheduler instance and exposes the narrow
+  ``submit / step / drain / stats / cache_probe`` surface that
+  ``launch/serve.py``, the benchmarks, and ``repro.serving.router``'s
+  multi-replica ``ReplicaRouter`` drive.  ``ContinuousScheduler.run``
+  survives as a thin compatibility wrapper over ``Engine.serve``.
 
 Determinism: a request's sample stream is keyed by (base_rng, request id,
 token index) and sampling is per-slot (``engine.sample_per_slot``), so the
@@ -144,6 +159,7 @@ class ServeReport:
     wall_time: float
     paged: Optional[dict] = None        # PagedPool.stats() when serving paged
     preemptions: int = 0                # swap-outs performed by the scheduler
+    router: Optional[dict] = None       # ReplicaRouter stats (merged reports)
 
     @property
     def total_tokens(self) -> int:
@@ -177,6 +193,54 @@ class ServeReport:
         if not bearing:
             return None
         return sum(1 for r in bearing if r.slo_met) / len(bearing)
+
+    def slo_counts_by_class(self) -> dict:
+        """{priority: (met, bearing)} over deadline-carrying requests.
+        Counts — unlike percentiles — combine across replicas by plain
+        summation, so this is the per-class SLO view ``merge`` preserves
+        exactly."""
+        out: dict = {}
+        for r in self.results:
+            if r.slo_ms is None:
+                continue
+            met, bearing = out.get(r.priority, (0, 0))
+            out[r.priority] = (met + (1 if r.slo_met else 0), bearing + 1)
+        return out
+
+    @classmethod
+    def merge(cls, reports, *, router: Optional[dict] = None) -> "ServeReport":
+        """Combine per-replica reports into one global report.
+
+        Percentile inputs stay RAW: the per-request results (each carrying
+        its token-time list) concatenate, so ``latency_percentiles`` and
+        the by-class/SLO views run over the union of raw latencies — never
+        an average of per-replica p95s, which would understate the tail.
+        Counters (decode steps, prefill chunks, preemptions, the paged
+        accounting incl. per-replica free/min-free capacities) sum;
+        occupancy weights each replica by its decode steps; wall_time is
+        the max, since replicas serve concurrently."""
+        reports = list(reports)
+        if not reports:
+            raise ValueError("merge needs at least one report")
+        steps = sum(r.decode_steps for r in reports)
+        occ = (reports[0].occupancy if len(reports) == 1
+               else (sum(r.occupancy * r.decode_steps for r in reports)
+                     / steps if steps else 0.0))
+        paged_dicts = [r.paged for r in reports if r.paged is not None]
+        paged = None
+        if paged_dicts:
+            paged = {k: (paged_dicts[0][k] if k == "block_size"
+                         else sum(d[k] for d in paged_dicts))
+                     for k in paged_dicts[0]}
+        return cls(
+            results=[res for r in reports for res in r.results],
+            decode_steps=steps,
+            prefill_chunks=sum(r.prefill_chunks for r in reports),
+            occupancy=occ,
+            wall_time=max(r.wall_time for r in reports),
+            paged=paged,
+            preemptions=sum(r.preemptions for r in reports),
+            router=router)
 
     def baseline_occupancy(self, num_slots: int) -> float:
         """Drain-and-refill bound on THIS workload, batched in the recorded
@@ -427,23 +491,21 @@ class ContinuousScheduler:
         self._advance_prefill()
         self._decode_tick()
 
+    @property
+    def busy(self) -> bool:
+        """Work remains: queued (incl. future arrivals), prefilling,
+        decoding, or suspended."""
+        return bool(self.queue or self.active or self._prefill
+                    or self._suspended)
+
     def run(self, requests=None, *, max_ticks: int = 100_000) -> ServeReport:
-        t0 = time.monotonic()
-        for r in (requests or ()):
-            self.submit(r)
-        while self.queue or self.active or self._prefill or self._suspended:
-            if self.tick_count >= max_ticks:
-                raise RuntimeError(f"scheduler wedged after {max_ticks} ticks")
-            self.tick()
-        wall = time.monotonic() - t0
-        occ = (self._occupancy_sum / self.decode_steps
-               if self.decode_steps else 0.0)
-        return ServeReport(results=self.finished,
-                           decode_steps=self.decode_steps,
-                           prefill_chunks=self.prefill_chunks,
-                           occupancy=occ, wall_time=wall,
-                           paged=self.pool.stats() if self.paged else None,
-                           preemptions=self.preemptions)
+        """Serve ``requests`` to completion and report.  Thin wrapper: the
+        loop itself lives in the engine layer — this wraps the scheduler in
+        an ``Engine`` view and drives ``Engine.step`` until idle, so every
+        consumer (CLI, router, benchmarks, this method) runs the exact same
+        loop."""
+        from repro.serving.engine_api import Engine   # avoids import cycle
+        return Engine.wrap(self).serve(requests, max_ticks=max_ticks)
 
     # -- admission ----------------------------------------------------------
     def _admit(self) -> None:
@@ -475,19 +537,34 @@ class ContinuousScheduler:
                 return                       # one new prefill per tick
             return
 
+    def _slack(self, req: Request, now: float) -> float:
+        """Deadline headroom in ms: ``slo_ms`` minus the time already
+        waited since arrival (+inf for deadline-free requests)."""
+        if req.slo_ms is None:
+            return float("inf")
+        arrived = self._arrival_times.get(req.rid, now)
+        return req.slo_ms - (now - arrived) * 1e3
+
     def _next_candidate(self):
         """Best waiting work item: ``("resume", rid)`` or ``("admit", req)``,
-        ordered by (priority, arrival tick, resume-before-admit, FIFO)."""
+        ordered by (priority, deadline slack, arrival tick,
+        resume-before-admit, FIFO).  Slack makes admission deadline-aware
+        WITHIN a priority class: tighter deadlines place first, and a
+        deadline-bearing request outranks deadline-free peers (slack +inf).
+        With uniform ``slo_ms`` per class — every workload the generator
+        produces — slack order equals arrival order, so the FIFO
+        equivalence pins are untouched."""
+        now = time.monotonic()
         best = None
         for i, (rid, rec) in enumerate(self._suspended.items()):
             req = rec.flight.req
-            key = (req.priority, req.arrival_tick, 0, i)
+            key = (req.priority, self._slack(req, now), req.arrival_tick, 0, i)
             if best is None or key < best[0]:
                 best = (key, ("resume", rid))
         for i, r in enumerate(self.queue):
             if r.arrival_tick > self.tick_count:
                 continue
-            key = (r.priority, r.arrival_tick, 1, i)
+            key = (r.priority, self._slack(r, now), r.arrival_tick, 1, i)
             if best is None or key < best[0]:
                 best = (key, ("admit", r))
         return best[1] if best else None
@@ -559,18 +636,25 @@ class ContinuousScheduler:
 
     def _preempt_one(self, priority: int) -> bool:
         """Swap out ONE active decode strictly below ``priority``: the
-        lowest-priority class first, longest remaining decode within it (the
-        victim that frees capacity for the longest).  False when preemption
-        is off, unpaged, or no strictly-lower-priority decode is running —
-        equal-priority work is never preempted, so every class makes
-        progress."""
+        lowest-priority class first; within a class, prefer deadline-free
+        victims, then the loosest deadline, then the longest remaining
+        decode (the victim that frees capacity for the longest).  False
+        when preemption is off, unpaged, or no strictly-lower-priority
+        decode is running — equal-priority work is never preempted, so
+        every class makes progress.  When no victim bears a deadline the
+        key degenerates to the pre-deadline (priority, remaining, rid)
+        order, so deadline-free workloads preempt exactly as before."""
         if not (self.paged and self.preempt) or not self.active:
             return False
         victims = [f for f in self.active.values()
                    if f.req.priority > priority]
         if not victims:
             return False
-        victim = max(victims, key=lambda f: (f.req.priority, f.remaining,
+        now = time.monotonic()
+        victim = max(victims, key=lambda f: (f.req.priority,
+                                             f.req.slo_ms is None,
+                                             self._slack(f.req, now),
+                                             f.remaining,
                                              f.req.rid))
         self._swap_out(victim)
         return True
@@ -584,6 +668,20 @@ class ContinuousScheduler:
         flight.slot = -1
         flight.result.preempted += 1
         self.preemptions += 1
+
+    def _prefetch_swap_in(self) -> None:
+        """Stage the host-resident blocks of the suspended request most
+        likely to resume next (same key order as ``_next_candidate``) onto
+        the device while the current decode step is still in flight."""
+        now = time.monotonic()
+        best = None
+        for i, (rid, rec) in enumerate(self._suspended.items()):
+            req = rec.flight.req
+            key = (req.priority, self._slack(req, now), req.arrival_tick, i)
+            if best is None or key < best[0]:
+                best = (key, rid)
+        if best is not None:
+            self.pool.prefetch_swap_in(best[1])
 
     def _try_resume(self, rid: int) -> bool:
         """Reattach a suspended request: ``PagedPool.swap_in`` rebuilds its
@@ -715,6 +813,12 @@ class ContinuousScheduler:
         self.tokens = tok
         self.decode_steps += 1
         self._occupancy_sum += len(self.active) / self.pool.num_slots
+        if self.paged and self._suspended:
+            # Overlap host→device swap-in staging with the decode step just
+            # dispatched above: JAX queues the transfers asynchronously, so
+            # they run while we block on np.asarray(tok) below.  Bit-exact —
+            # swap_in consumes the staged device copies of the same payloads.
+            self._prefetch_swap_in()
         tok_host = np.asarray(tok)
         lens_host = np.asarray(self.pool.lens)     # one sync, not per slot
         for slot in list(self.active):

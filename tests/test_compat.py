@@ -156,6 +156,45 @@ def test_block_table_construction_centralized():
     assert not offenders, "\n".join(offenders)
 
 
+# The serving loop is owned by the engine layer: outside src/repro/serving/
+# nobody constructs a ContinuousScheduler or drives its ticks — the CLI,
+# benchmarks, and examples all hold an Engine (or a ReplicaRouter over
+# several), so the loop, its wedge guard, and its report construction exist
+# exactly once.
+_ENGINE_ONLY = (
+    ("ContinuousScheduler(",
+     "engines are built by serving.engine_api.Engine / serving.router"),
+    (".tick(", "the step loop lives in serving.engine_api.Engine"),
+    ("sched.run(", "batch serving is Engine.serve / ReplicaRouter.serve"),
+)
+
+
+def test_engine_loop_centralized():
+    offenders = []
+    serving_home = os.path.join(SRC, "serving")
+    roots = [SRC, os.path.join(REPO, "benchmarks"),
+             os.path.join(REPO, "examples")]
+    for top in roots:
+        for root, _, files in os.walk(top):
+            if os.path.abspath(root).startswith(
+                    os.path.abspath(serving_home)):
+                continue
+            for name in files:
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(root, name)
+                with open(path) as f:
+                    for lineno, line in enumerate(f, 1):
+                        if "``" in line or line.lstrip().startswith("#"):
+                            continue
+                        for pat, why in _ENGINE_ONLY:
+                            if pat in line:
+                                offenders.append(
+                                    f"{os.path.relpath(path, REPO)}:{lineno}"
+                                    f" [{pat!r} → {why}]")
+    assert not offenders, "\n".join(offenders)
+
+
 # ---------------------------------------------------------------------------
 # Dispatch registry: path selection on this backend.
 # ---------------------------------------------------------------------------

@@ -363,6 +363,101 @@ def test_reclaim_runs_before_preemption(model):
 
 
 # ---------------------------------------------------------------------------
+# Deadline-aware admission and victim selection (slo_ms drives scheduling,
+# not just scoring).
+# ---------------------------------------------------------------------------
+def test_deadline_orders_admission_within_class(model):
+    """Same priority class, one slot, all waiting at the same tick: the
+    tightest deadline places first, deadline-bearing work outranks
+    deadline-free peers, and the deadline-free request goes last."""
+    params, cfg = model
+    rng = np.random.default_rng(21)
+    reqs = [
+        scheduler.Request(rid=0, prompt=rng.integers(0, 512, 6),
+                          max_new_tokens=2),                    # no deadline
+        scheduler.Request(rid=1, prompt=rng.integers(0, 512, 6),
+                          max_new_tokens=2, slo_ms=60_000.0),   # loose
+        scheduler.Request(rid=2, prompt=rng.integers(0, 512, 6),
+                          max_new_tokens=2, slo_ms=500.0),      # tight
+    ]
+    report = _sched(params, cfg, num_slots=1).run(reqs)
+    assert [r.rid for r in report.results] == [2, 1, 0]
+
+
+def test_preemption_prefers_deadline_free_victim(model):
+    """Among equal-priority victims the swap-out falls on the deadline-free
+    decode — even when the deadline-bearing one has more decode remaining
+    (which the pre-deadline longest-remaining rule would have chosen)."""
+    params, cfg = model
+    rng = np.random.default_rng(11)
+    reqs = [
+        scheduler.Request(rid=0, prompt=rng.integers(0, 512, 9),
+                          max_new_tokens=14, arrival_tick=0, priority=1,
+                          slo_ms=60_000.0),     # longest remaining, deadline
+        scheduler.Request(rid=1, prompt=rng.integers(0, 512, 11),
+                          max_new_tokens=10, arrival_tick=0, priority=1),
+        scheduler.Request(rid=2, prompt=rng.integers(0, 512, 8),
+                          max_new_tokens=4, arrival_tick=5, priority=0),
+    ]
+    report = _sched(params, cfg).run(reqs)
+    assert report.preemptions >= 1, "urgent arrival must preempt"
+    by_rid = {r.rid: r for r in report.results}
+    assert by_rid[1].preempted >= 1             # the deadline-free victim
+    assert by_rid[0].preempted == 0             # deadline work kept running
+    for req in reqs:                            # and nobody's stream moved
+        assert by_rid[req.rid].tokens == _single_sequence_decode(
+            params, cfg, req)
+
+
+# ---------------------------------------------------------------------------
+# Async swap-in prefetch: staging overlaps the decode tick, bit-exactly.
+# ---------------------------------------------------------------------------
+def test_prefetch_swap_in_stages_bitexact_pool_level(model):
+    """Pool-level: prefetch stages every host entry exactly once (device
+    copies, counted), and the subsequent swap_in restores the same cache
+    bytes as the unprefetched round-trip."""
+    params, cfg = model
+    pool = paged.PagedPool(cfg, num_slots=2, slot_len=24, block_size=8)
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, 512, 11)
+    seq = pool.admit(prompt)
+    _, pool.caches, ln = engine.prefill_chunk_paged(
+        params, pool.caches, pool.device_row(seq.slot),
+        jnp.asarray(0, jnp.int32), jnp.asarray(prompt)[None], cfg)
+    pool.finalize_prefill(seq)
+    pool.lens = pool.lens.at[seq.slot].set(int(ln))
+    want = [np.asarray(leaf[:, bid]) for bid in seq.blocks
+            for leaf in jax.tree.leaves(pool.caches[0])]
+    pool.swap_out(seq.slot, rid=5)
+    hosts = sum(1 for kind, _ in pool.swapped[5].entries if kind == "host")
+    assert hosts >= 1
+    assert pool.prefetch_swap_in(5) == hosts
+    assert pool.prefetch_swap_in(5) == 0        # idempotent: already staged
+    assert pool.prefetch_swap_in(404) == 0      # unknown rid: no-op
+    assert pool.swap_prefetched_blocks == hosts
+    s2 = pool.swap_in(5)
+    assert s2 is not None
+    got = [np.asarray(leaf[:, bid]) for bid in s2.blocks
+           for leaf in jax.tree.leaves(pool.caches[0])]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    pool.alloc.check_invariants()
+
+
+def test_scheduler_prefetches_next_resume(model):
+    """Scheduler-level: while a preempted request waits, decode ticks stage
+    its host blocks ahead of the resume (the counter proves the overlap
+    path ran; the bit-identity suites prove it changed nothing)."""
+    params, cfg = model
+    requests = _priority_workload("mid")
+    report = _sched(params, cfg).run(requests)
+    assert report.preemptions >= 1
+    assert report.paged["swap_prefetched_blocks"] >= 1
+    assert report.paged["swapped_blocks_in"] == \
+        report.paged["swapped_blocks_out"]
+
+
+# ---------------------------------------------------------------------------
 # SLO metrics.
 # ---------------------------------------------------------------------------
 def test_slo_attainment_and_by_class_percentiles(model):
