@@ -39,7 +39,7 @@ import jax
 
 def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
         preempt: bool = True, replicas: int = 0,
-        affinity: bool = True) -> list:
+        affinity: bool = True, obs: bool = False) -> list:
     import repro.configs as configs
     from repro.models import layers as L, transformer
     from repro.serving import scheduler
@@ -129,6 +129,66 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
             **paged_kw)
         report = eng.serve(requests)
 
+    obs_row = None
+    if obs and not replicas:
+        # overhead measurement: the IDENTICAL workload on a fresh engine
+        # (jits shared via lru_cache) with tracing + metrics armed, so the
+        # per_token vs per_token_obs diff is the full observability cost
+        import os
+        import tempfile
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import trace as obs_trace
+        def _serve_once(tracer):
+            eng2 = Engine(
+                params, cfg, num_slots=slots, slot_len=slot_len,
+                prefill_chunk=chunk, top_k=5,
+                base_rng=jax.random.PRNGKey(0), tracer=tracer, **paged_kw)
+            return eng2.serve(requests)
+
+        # interleaved fastest-half comparison: this shared-CPU box adds
+        # ±5-8% of contention noise per serve, but the noise is strictly
+        # additive (neighbours only ever slow a serve down), so the fastest
+        # serves of each mode approach the uncontended cost.  The mean of
+        # the fastest HALF (rather than the single min) keeps six samples
+        # in the estimate, which a lone unlucky burst can't swing; strict
+        # on/off interleaving with alternating order means both modes
+        # sample the same calm windows.  A median of paired ratios — the
+        # obvious alternative — inherits the full per-pair scatter and
+        # needs ~10x the samples to say anything under 5%.
+        def _serve_on():
+            obs_metrics.enable()
+            fd, trace_path = tempfile.mkstemp(suffix=".json")
+            os.close(fd)
+            tracer = obs_trace.Tracer(trace_path)
+            rate = _serve_once(tracer).tokens_per_s
+            tracer.close()
+            n_events = len(tracer.events)
+            os.unlink(trace_path)
+            obs_metrics.disable()
+            return rate, n_events
+
+        was_enabled = obs_metrics.enabled()
+        obs_metrics.disable()
+        on_rates, off_rates, events = [], [], 0
+        for i in range(16):
+            if i % 2 == 0:                 # alternate order within the
+                rate_on, events = _serve_on()   # interleave as well
+                off_rates.append(_serve_once(None).tokens_per_s)
+            else:
+                off_rates.append(_serve_once(None).tokens_per_s)
+                rate_on, events = _serve_on()
+            on_rates.append(rate_on)
+        if was_enabled:
+            obs_metrics.enable()
+        def _fast_half(rates):
+            top = sorted(rates, reverse=True)[:max(len(rates) // 2, 1)]
+            return sum(top) / len(top)
+
+        fast_on, fast_off = _fast_half(on_rates), _fast_half(off_rates)
+        overhead = (fast_off / max(fast_on, 1e-9) - 1.0) * 100.0
+        obs_row = (1e6 / max(fast_on, 1e-9),
+                   f"overhead={overhead:+.1f}% events={events}")
+
     pct = report.latency_percentiles((50, 95))
     baseline = report.baseline_occupancy(slots * max(replicas, 1))
     tag = "smoke" if smoke else "full"
@@ -142,6 +202,8 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
         (f"serving/{tag}/occupancy_pct", report.occupancy * 100.0,
          f"drain_refill={baseline * 100.0:.1f}"),
     ]
+    if obs_row is not None:
+        rows.insert(1, (f"serving/{tag}/per_token_obs", *obs_row))
     if report.paged is not None:
         p = report.paged
         rows.append((f"serving/{tag}/blocks_shared", float(p["blocks_shared"]),

@@ -147,6 +147,11 @@ def main(argv=None) -> int:
                     help="serving bench routes round-robin instead of by "
                          "prefix affinity (the baseline a --replicas run "
                          "diffs against)")
+    ap.add_argument("--obs", action="store_true",
+                    help="serving bench re-runs the identical workload with "
+                         "tracing + metrics armed and adds a per_token_obs "
+                         "row (overhead=%% vs the off run); with --json the "
+                         "payload also records the metrics snapshot")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + backend capabilities to PATH")
     args = ap.parse_args(argv)
@@ -167,6 +172,8 @@ def main(argv=None) -> int:
             if args.replicas:
                 kwargs["replicas"] = args.replicas
                 kwargs["affinity"] = not args.no_affinity
+            if args.obs:
+                kwargs["obs"] = True
         rows.extend(mods[name].run(smoke=args.smoke, **kwargs))
     emit(rows)
     if args.json:
@@ -181,6 +188,9 @@ def main(argv=None) -> int:
             "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
                      for n, us, d in rows],
         }
+        if args.obs:
+            from repro.obs import metrics as obs_metrics
+            payload["metrics"] = obs_metrics.snapshot()
         os.makedirs(os.path.dirname(os.path.abspath(args.json)),
                     exist_ok=True)
         with open(args.json, "w") as f:

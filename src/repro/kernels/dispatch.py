@@ -42,7 +42,6 @@ from __future__ import annotations
 import functools
 import json
 import os
-import time
 from dataclasses import asdict, dataclass
 from typing import Callable
 
@@ -51,6 +50,8 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro import core
+from repro.obs import clock as obs_clock
+from repro.obs import kernels as obs_kernels
 
 Array = jax.Array
 
@@ -97,6 +98,9 @@ def select_path(op: str, prefer_pallas: bool = False) -> str:
 
 def lookup(op: str, prefer_pallas: bool = False) -> tuple[str, Callable]:
     path = select_path(op, prefer_pallas)
+    # dict bookkeeping only (lookup runs at trace time, not per token):
+    # repro.obs surfaces which path each op actually resolved to
+    obs_kernels.record_path(op, path, prefer_pallas=prefer_pallas)
     return path, _REGISTRY[op][path]
 
 
@@ -296,9 +300,9 @@ def _time_blocked(x: Array, block: int) -> float:
     jax.block_until_ready(fn(x))                       # compile + warm
     best = float("inf")
     for _ in range(_TUNE_REPS):
-        t0 = time.perf_counter()
+        t0 = obs_clock.perf_counter()
         jax.block_until_ready(fn(x))
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, obs_clock.perf_counter() - t0)
     return best * 1e6
 
 
@@ -308,6 +312,7 @@ def block_decision(vocab: int, dtype=jnp.float32) -> BlockDecision:
     key = (compat.backend(), vocab, jnp.dtype(dtype).name)
     hit = _BLOCK_CACHE.get(key)
     if hit is not None:
+        obs_kernels.record_autotune("block", key, hit.to_dict())
         return hit
     global _SWEEPS
     _SWEEPS += 1
@@ -325,6 +330,7 @@ def block_decision(vocab: int, dtype=jnp.float32) -> BlockDecision:
     decision = BlockDecision(backend=key[0], vocab=vocab, dtype=key[2],
                              block=winner, timings_us=timings)
     _BLOCK_CACHE[key] = decision
+    obs_kernels.record_autotune("block", key, decision.to_dict())
     save_persisted_decisions()
     return decision
 
@@ -342,9 +348,9 @@ def _time_decode_bk(kv_len: int, head_dim: int, dtype, bk: int) -> float:
     jax.block_until_ready(fn(q, kc, kc, vlen))
     best = float("inf")
     for _ in range(_TUNE_REPS):
-        t0 = time.perf_counter()
+        t0 = obs_clock.perf_counter()
         jax.block_until_ready(fn(q, kc, kc, vlen))
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, obs_clock.perf_counter() - t0)
     return best * 1e6
 
 
@@ -388,9 +394,9 @@ def _time_prefill_tiles(op: str, kv_len: int, head_dim: int, dtype,
     jax.block_until_ready(fn(*args))
     best = float("inf")
     for _ in range(_TUNE_REPS):
-        t0 = time.perf_counter()
+        t0 = obs_clock.perf_counter()
         jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, obs_clock.perf_counter() - t0)
     return best * 1e6
 
 
@@ -414,6 +420,7 @@ def attention_tiles(op: str, *, kv_len: int, head_dim: int,
     key = (op, compat.backend(), kv_len, head_dim, jnp.dtype(dtype).name)
     hit = _TILE_CACHE.get(key)
     if hit is not None:
+        obs_kernels.record_autotune("tiles", key, hit.to_dict())
         return dict(hit.tiles)
     defaults = dict(ATTN_TILE_DEFAULTS[op])
     global _SWEEPS
@@ -451,6 +458,7 @@ def attention_tiles(op: str, *, kv_len: int, head_dim: int,
                             head_dim=head_dim, dtype=key[4],
                             tiles=defaults, timings_us=timings)
     _TILE_CACHE[key] = decision
+    obs_kernels.record_autotune("tiles", key, decision.to_dict())
     if timings:                      # defaults-only decisions aren't worth IO
         save_persisted_decisions()
     return dict(decision.tiles)

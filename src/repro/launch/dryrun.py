@@ -25,7 +25,6 @@ import argparse
 import functools
 import json
 import sys
-import time
 import traceback
 
 import jax
@@ -34,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 
 import repro.configs as configs
 from repro import compat
+from repro.obs import clock as obs_clock
 from repro.configs.base import SHAPE_BY_NAME, ModelConfig, ParallelConfig, RunConfig, ShapeConfig
 from repro.distributed import context, sharding
 from repro.launch.mesh import make_production_mesh
@@ -328,15 +328,15 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     sa = _sa(shape_cfg, mesh, ba)
     ctx = context.ShardContext(mesh=mesh, par=par, cache_seq_axes=sa,
                                batch_axes=ba)
-    t0 = time.monotonic()
+    t0 = obs_clock.monotonic()
     with context.use(ctx), mesh:
         fn, args, out_sh, donate = BUILDERS[shape_cfg.kind](
             run, mesh, par, shape_cfg)
         lowered = jax.jit(fn, out_shardings=out_sh,
                           donate_argnums=donate).lower(*args)
-        t_lower = time.monotonic() - t0
+        t_lower = obs_clock.monotonic() - t0
         compiled = lowered.compile()
-        t_compile = time.monotonic() - t0 - t_lower
+        t_compile = obs_clock.monotonic() - t0 - t_lower
     if hlo_path:
         import gzip
         with gzip.open(hlo_path, "wt") as f:

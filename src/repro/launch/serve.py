@@ -26,13 +26,16 @@ online-softmax + top-k, sample.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
 from repro.models import layers as L, transformer
+from repro.obs import clock as obs_clock
+from repro.obs import kernels as obs_kernels
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving import engine
 
 
@@ -55,22 +58,22 @@ def _lockstep(args, cfg, params) -> int:
     decode = jax.jit(lambda p, c, ln, t, r: engine.decode_step(
         p, c, ln, t, cfg, rng=r, top_k=args.top_k), donate_argnums=(1,))
 
-    t0 = time.monotonic()
+    t0 = obs_clock.monotonic()
     last_hidden, caches, length = prefill(params, prompts, patch)
     logits = transformer.logits_last(params, last_hidden[:, None], cfg)
     from repro.core import topk_sample
     tok, _ = topk_sample(jax.random.PRNGKey(3), logits, args.top_k)
     jax.block_until_ready(tok)
-    t_prefill = time.monotonic() - t0
+    t_prefill = obs_clock.monotonic() - t0
 
     out = [tok]
-    t0 = time.monotonic()
+    t0 = obs_clock.monotonic()
     for i in range(args.tokens - 1):
         tok, caches, length = decode(params, caches, length, tok[:, None],
                                      jax.random.fold_in(rng, i))
         out.append(tok)
     jax.block_until_ready(tok)
-    t_decode = time.monotonic() - t0
+    t_decode = obs_clock.monotonic() - t0
     gen = jnp.stack(out, axis=1)
     print(f"prefill: {args.batch}×{args.prompt_len} in {t_prefill*1e3:.1f}ms")
     print(f"decode: {args.tokens - 1} steps × {args.batch} seqs in "
@@ -103,6 +106,10 @@ def _continuous(args, cfg, params) -> int:
         vocab=vocab, seed=1, shared_prefix=shared_prefix,
         priority_classes=args.priority_classes,
         slo_ms=args.slo_ms or None)
+    if args.metrics:
+        obs_metrics.enable()
+        obs_kernels.enable_profiling()
+    tracer = obs_trace.Tracer(args.trace) if args.trace else None
     router = ReplicaRouter(
         params, cfg, replicas=args.replicas,
         affinity=not args.no_affinity,
@@ -111,8 +118,10 @@ def _continuous(args, cfg, params) -> int:
         base_rng=jax.random.PRNGKey(0), paged=args.paged,
         block_size=args.block_size,
         num_blocks=args.blocks or None,
-        preempt=not args.no_preempt)
+        preempt=not args.no_preempt, tracer=tracer)
     report = router.serve(requests)
+    if tracer is not None:
+        tracer.close()
 
     pct = report.latency_percentiles((50, 95))
     baseline = report.baseline_occupancy(args.slots * args.replicas)
@@ -152,11 +161,19 @@ def _continuous(args, cfg, params) -> int:
     if args.priority_classes > 1:
         for pr, pct_c in sorted(
                 report.latency_percentiles_by_class((50, 95)).items()):
-            n = sum(1 for r in report.results if r.priority == pr)
-            npre = sum(r.preempted for r in report.results
-                       if r.priority == pr)
-            print(f"class {pr}: n={n} p50={pct_c['p50']*1e3:.1f}ms "
-                  f"p95={pct_c['p95']*1e3:.1f}ms preemptions={npre}")
+            rs = [r for r in report.results if r.priority == pr]
+            npre = sum(r.preempted for r in rs)
+            # phase split: queue wait / prefill compute / decode, so a slow
+            # first token can be attributed instead of conflated
+            def _mean(vals):
+                vals = [v for v in vals if v is not None]
+                return sum(vals) / len(vals) if vals else 0.0
+            print(f"class {pr}: n={len(rs)} p50={pct_c['p50']*1e3:.1f}ms "
+                  f"p95={pct_c['p95']*1e3:.1f}ms "
+                  f"queued={_mean([r.queued_ms for r in rs]):.1f}ms "
+                  f"prefill={_mean([r.prefill_ms for r in rs]):.1f}ms "
+                  f"decode={_mean([r.decode_ms for r in rs]):.1f}ms "
+                  f"preemptions={npre}")
         att = report.slo_attainment()
         if att is not None:
             bearing = sum(1 for r in report.results if r.slo_ms is not None)
@@ -170,6 +187,18 @@ def _continuous(args, cfg, params) -> int:
     evicted = [r.rid for r in report.results if r.evicted]
     if evicted:
         print(f"evicted at capacity: {evicted}")
+    if args.metrics:
+        prof = obs_kernels.snapshot()
+        for op, rec in prof["paths"].items():
+            print(f"kernel path: {op} → {rec['path']} (×{rec['count']})")
+        for label, cost in prof["costs"].items():
+            print(f"kernel cost: {label} flops={cost['flops']:.4g} "
+                  f"bytes={cost['bytes_accessed']:.4g}")
+        print(f"metrics: {len(obs_metrics.snapshot())} instruments recorded")
+    if tracer is not None:
+        print(f"trace: {len(tracer.events)} events → {args.trace} "
+              f"(open in Perfetto, or: python -m repro.obs.report "
+              f"{args.trace})")
     if report.occupancy <= baseline:
         print("WARNING: occupancy did not beat the drain-and-refill baseline")
         return 1
@@ -224,6 +253,14 @@ def main(argv=None):
                     help="disable preempt-and-swap of lower-priority "
                          "decodes (paged mode; priorities stay "
                          "ordering-only)")
+    ap.add_argument("--trace", default="",
+                    help="write request-lifecycle + scheduler spans to this "
+                         "Chrome trace_event file (continuous mode; open in "
+                         "Perfetto or summarize with repro.obs.report)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable the repro.obs metrics registry + kernel "
+                         "cost profiling; prints dispatch paths and a "
+                         "snapshot summary after the run")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke(args.arch) if args.smoke

@@ -1,0 +1,25 @@
+"""Zero-dependency observability layer for the serving stack.
+
+Four seams, all stdlib-only at import time:
+
+- :mod:`repro.obs.clock` — injectable wall-clock (``monotonic`` /
+  ``perf_counter`` / ``wall_time``).  Everything in ``src/`` that needs a
+  timestamp goes through here (grep-enforced by ``tests/test_compat.py``),
+  so tests can swap in a :class:`~repro.obs.clock.VirtualClock` and assert
+  latencies deterministically.
+- :mod:`repro.obs.trace` — a :class:`~repro.obs.trace.Tracer` emitting
+  Chrome ``trace_event`` spans (request lifecycle + per-tick scheduler
+  work) to a file that both Perfetto and ``repro.obs.report`` can read.
+- :mod:`repro.obs.metrics` — process-wide registry of counters / gauges /
+  histograms.  Off by default; every instrument method is a guarded no-op
+  when the registry is disabled.
+- :mod:`repro.obs.kernels` — records which dispatch path each op resolved
+  to, the autotune decisions used, and XLA cost-analysis FLOPs/bytes for
+  compiled serving steps.
+
+``python -m repro.obs.report trace.json`` renders a tick timeline,
+per-request waterfall, and preemption-cause table from a trace file.
+"""
+from repro.obs import clock, kernels, metrics, trace
+
+__all__ = ["clock", "kernels", "metrics", "trace"]

@@ -1,0 +1,192 @@
+"""Render a serving trace: tick timeline, request waterfall, causes.
+
+Usage::
+
+    python -m repro.obs.report trace.json
+
+The input is the JSON-array trace_event file written by
+:class:`repro.obs.trace.Tracer` (also line-parseable — see that module).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, List, Optional
+
+# Request-lifecycle phases in waterfall order, with 1-char bar glyphs.
+_PHASES = ("queued", "prefill", "decode", "suspended")
+_GLYPH = {"queued": ".", "prefill": "=", "decode": "#", "suspended": "~"}
+
+
+def load_trace(path: str) -> List[Dict[str, Any]]:
+    """Read a trace file; tolerates both the array form and bare JSONL."""
+    with open(path) as fh:
+        text = fh.read()
+    try:
+        data = json.loads(text)
+        if isinstance(data, list):
+            return data
+    except json.JSONDecodeError:
+        pass
+    events = []
+    for line in text.splitlines():
+        line = line.strip().rstrip(",")
+        if not line or line in ("[", "]"):
+            continue
+        events.append(json.loads(line))
+    return events
+
+
+def validate(events: List[Dict[str, Any]]) -> List[str]:
+    """Structural checks; returns a list of problems (empty == clean).
+
+    - no span was force-closed (``unclosed`` flag from ``Tracer.close``)
+    - complete spans on each (pid, tid) track nest properly: a span that
+      starts inside another must end inside it too.
+    """
+    problems = []
+    tracks: Dict[Any, List[Dict[str, Any]]] = {}
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        if ev.get("args", {}).get("unclosed"):
+            problems.append(f"unclosed span {ev['name']!r} on "
+                            f"pid={ev.get('pid')} tid={ev.get('tid')}")
+        tracks.setdefault((ev.get("pid"), ev.get("tid")), []).append(ev)
+    for (pid, tid), spans in tracks.items():
+        spans.sort(key=lambda e: (e["ts"], -e.get("dur", 0.0)))
+        stack: List[Dict[str, Any]] = []
+        for ev in spans:
+            start, end = ev["ts"], ev["ts"] + ev.get("dur", 0.0)
+            while stack and start >= stack[-1]["ts"] + stack[-1]["dur"] - 1e-6:
+                stack.pop()
+            if stack:
+                outer_end = stack[-1]["ts"] + stack[-1]["dur"]
+                if end > outer_end + 1e-6:
+                    problems.append(
+                        f"span {ev['name']!r} overlaps {stack[-1]['name']!r} "
+                        f"without nesting (pid={pid} tid={tid})")
+            stack.append(ev)
+    return problems
+
+
+def _request_rows(events):
+    """Aggregate per-request phase totals + lifecycle instants."""
+    names = {}            # (pid, tid) -> track label
+    rows: Dict[Any, Dict[str, Any]] = {}
+    for ev in events:
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            names[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+    for ev in events:
+        pid, tid = ev.get("pid", 0), ev.get("tid", 0)
+        if tid == 0:      # scheduler track
+            continue
+        key = (pid, tid)
+        row = rows.setdefault(key, {
+            "label": names.get(key, f"pid{pid}/tid{tid}"),
+            "phase_ms": {p: 0.0 for p in _PHASES},
+            "segments": [], "tokens": 0, "preempts": 0,
+            "retire": None, "start": None, "end": None,
+        })
+        ts = ev.get("ts", 0.0)
+        if ev.get("ph") == "X":
+            name, dur = ev["name"], ev.get("dur", 0.0)
+            if name in row["phase_ms"]:
+                row["phase_ms"][name] += dur / 1000.0
+                row["segments"].append((ts, dur, name))
+            row["start"] = ts if row["start"] is None else min(row["start"], ts)
+            row["end"] = max(row["end"] or 0.0, ts + dur)
+        elif ev.get("ph") == "i":
+            if ev["name"] == "token":
+                row["tokens"] += 1
+            elif ev["name"] == "preempt":
+                row["preempts"] += 1
+            elif ev["name"] == "retire":
+                row["retire"] = ev.get("args", {}).get("cause", "?")
+    return rows
+
+
+def summarize(events: List[Dict[str, Any]], *, width: int = 48,
+              max_ticks: int = 40) -> str:
+    out: List[str] = []
+    problems = validate(events)
+    if problems:
+        out.append("TRACE PROBLEMS:")
+        out.extend(f"  - {p}" for p in problems)
+
+    # --- tick timeline --------------------------------------------------
+    ticks = [ev for ev in events
+             if ev.get("ph") == "X" and ev["name"] == "tick"]
+    counters = [ev for ev in events
+                if ev.get("ph") == "C" and ev["name"] == "sched"]
+    out.append(f"tick timeline ({len(ticks)} ticks)")
+    shown = ticks[:max_ticks]
+    gauges = {round(c["ts"], 1): c["args"] for c in counters}
+    for i, ev in enumerate(shown):
+        args = ev.get("args", {})
+        # nearest counter emitted at/after this tick's start
+        g = args or {}
+        for ts, vals in gauges.items():
+            if ts >= ev["ts"] - 1.0:
+                g = {**vals, **args}
+                break
+        extras = " ".join(f"{k}={g[k]}" for k in ("active", "queue",
+                                                  "free_slots") if k in g)
+        out.append(f"  tick {args.get('tick', i):>4}  "
+                   f"dur={ev.get('dur', 0.0) / 1000.0:8.3f}ms  {extras}")
+    if len(ticks) > max_ticks:
+        out.append(f"  ... {len(ticks) - max_ticks} more ticks")
+
+    # --- per-request waterfall ------------------------------------------
+    rows = _request_rows(events)
+    starts = [r["start"] for r in rows.values() if r["start"] is not None]
+    ends = [r["end"] for r in rows.values() if r["end"] is not None]
+    if rows and starts and ends:
+        span_start, span_end = min(starts), max(ends)
+        scale = width / max(span_end - span_start, 1e-9)
+        out.append("")
+        out.append("request waterfall "
+                   "(.=queued ==prefill #=decode ~=suspended)")
+        for key in sorted(rows):
+            row = rows[key]
+            bar = [" "] * width
+            for ts, dur, name in row["segments"]:
+                lo = int((ts - span_start) * scale)
+                hi = max(int((ts + dur - span_start) * scale), lo + 1)
+                for j in range(lo, min(hi, width)):
+                    bar[j] = _GLYPH[name]
+            ph = row["phase_ms"]
+            out.append(
+                f"  {row['label']:>8} |{''.join(bar)}| "
+                f"queued={ph['queued']:.1f}ms prefill={ph['prefill']:.1f}ms "
+                f"decode={ph['decode']:.1f}ms tokens={row['tokens']}")
+
+        # --- cause table ------------------------------------------------
+        causes: Dict[str, int] = {}
+        preempted = 0
+        for row in rows.values():
+            preempted += row["preempts"]
+            if row["retire"]:
+                causes[row["retire"]] = causes.get(row["retire"], 0) + 1
+        out.append("")
+        out.append("retire causes: " + (", ".join(
+            f"{k}={v}" for k, v in sorted(causes.items())) or "none"))
+        out.append(f"preemptions: {preempted}")
+    if not problems:
+        out.append("trace OK: all spans closed and nested")
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: python -m repro.obs.report trace.json",
+              file=sys.stderr)
+        return 2
+    events = load_trace(argv[0])
+    print(summarize(events))
+    return 1 if validate(events) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,194 @@
+"""Chrome ``trace_event`` tracer for the serving stack.
+
+Events follow the Trace Event Format that Perfetto and ``chrome://tracing``
+ingest: complete spans (``ph="X"`` with ``ts``/``dur`` in microseconds),
+instants (``"i"``), counters (``"C"``) and thread-name metadata (``"M"``).
+The scheduler maps ``pid`` to the replica index and ``tid`` to a track —
+tid 0 is the scheduler tick track, tid ``rid + 1`` is request ``rid``'s
+lifecycle track.
+
+The output file is a valid JSON **array** written one event per line::
+
+    [
+    {"name": "tick", "ph": "X", ...},
+    {"name": "queued", "ph": "X", ...}
+    ]
+
+so it both ``json.load``s (Perfetto-compatible) and can be parsed line by
+line by :mod:`repro.obs.report` without holding the whole file.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.obs import clock as _clock
+
+# one prebuilt encoder: json.dumps with non-default separators constructs a
+# fresh JSONEncoder per call, which roughly doubles per-event cost
+_ENCODE = json.JSONEncoder(separators=(",", ":")).encode
+
+
+class Span:
+    """An open span handle: ``begin()`` returns one, ``end()`` closes it."""
+
+    __slots__ = ("name", "pid", "tid", "cat", "start_us", "args", "closed")
+
+    def __init__(self, name: str, pid: int, tid: int, cat: str,
+                 start_us: float, args: Optional[Dict[str, Any]]):
+        self.name = name
+        self.pid = pid
+        self.tid = tid
+        self.cat = cat
+        self.start_us = start_us
+        self.args = dict(args) if args else {}
+        self.closed = False
+
+
+class _SpanCtx:
+    """``with tracer.span(...)`` handle — a plain class, not a
+    ``@contextmanager`` generator, because the generator protocol costs
+    ~1µs per use and spans are the hot path."""
+
+    __slots__ = ("_tracer", "_span")
+
+    def __init__(self, tracer: "Tracer", span: "Span"):
+        self._tracer = tracer
+        self._span = span
+
+    def __enter__(self) -> "Span":
+        return self._span
+
+    def __exit__(self, *exc) -> None:
+        self._tracer.end(self._span)
+
+
+class Tracer:
+    """Collects trace events in memory; :meth:`close` writes the file.
+
+    ``clock`` defaults to the process-wide :mod:`repro.obs.clock`; the
+    tracer records microseconds relative to its own creation so virtual
+    clocks produce small, exact timestamps.
+
+    The hot-path buffer holds one flat tuple of scalars per event — no
+    dict build, no serialization — so emitting costs a tuple pack and a
+    list append, and the growing buffer is cheap for the cyclic garbage
+    collector (CPython untracks tuples of atoms after a collection pass,
+    where a heap of long-lived dicts keeps gen-2 scans expensive).  JSON
+    encoding happens once, in :meth:`close`, outside the serve loop.
+    """
+
+    def __init__(self, path: Optional[str] = None, *,
+                 clock: Optional[_clock.Clock] = None, pid: int = 0):
+        self.path = path
+        self.clock = clock or _clock.get()
+        self.pid = pid
+        # entries: ("X", name, cat, pid, tid, ts, dur, args_items)
+        #          ("i", name, cat, pid, tid, ts, args_items)
+        #          ("C", name, cat, pid, ts, args_items)
+        #          ("M", pid, tid, name)
+        self._buf: List[tuple] = []
+        self._mono = self.clock.monotonic          # bound: hot-path calls
+        self._epoch = self._mono()
+        self._open: Dict[int, Span] = {}           # id(span) → span, O(1) end
+        self._named_tracks: set = set()
+
+    @staticmethod
+    def _to_dict(entry: tuple) -> Dict[str, Any]:
+        ph = entry[0]
+        if ph == "X":
+            _, name, cat, pid, tid, ts, dur, args = entry
+            return {"name": name, "ph": "X", "cat": cat, "pid": pid,
+                    "tid": tid, "ts": round(ts, 3),
+                    "dur": round(max(dur, 0.0), 3), "args": dict(args)}
+        if ph == "i":
+            _, name, cat, pid, tid, ts, args = entry
+            return {"name": name, "ph": "i", "s": "t", "cat": cat,
+                    "pid": pid, "tid": tid, "ts": round(ts, 3),
+                    "args": dict(args)}
+        if ph == "C":
+            _, name, cat, pid, ts, args = entry
+            return {"name": name, "ph": "C", "cat": cat, "pid": pid,
+                    "tid": 0, "ts": round(ts, 3), "args": dict(args)}
+        _, pid, tid, name = entry
+        return {"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+                "args": {"name": name}}
+
+    @property
+    def events(self) -> List[Dict[str, Any]]:
+        """The buffered events, materialized as trace_event dicts."""
+        return [self._to_dict(e) for e in self._buf]
+
+    # -- time ------------------------------------------------------------
+    def now_us(self) -> float:
+        return (self._mono() - self._epoch) * 1e6
+
+    # -- spans -----------------------------------------------------------
+    def begin(self, name: str, *, tid: int = 0, pid: Optional[int] = None,
+              cat: str = "serving", args: Optional[Dict[str, Any]] = None,
+              ) -> Span:
+        span = Span(name, self.pid if pid is None else pid, tid, cat,
+                    (self._mono() - self._epoch) * 1e6, args)
+        self._open[id(span)] = span
+        return span
+
+    def end(self, span: Span, args: Optional[Dict[str, Any]] = None) -> None:
+        if span.closed:
+            raise RuntimeError(f"span {span.name!r} ended twice")
+        span.closed = True
+        del self._open[id(span)]
+        if args:
+            span.args.update(args)
+        now = (self._mono() - self._epoch) * 1e6
+        self._buf.append((
+            "X", span.name, span.cat, span.pid, span.tid,
+            span.start_us, now - span.start_us, tuple(span.args.items())))
+
+    def span(self, name: str, *, tid: int = 0, pid: Optional[int] = None,
+             cat: str = "serving", args: Optional[Dict[str, Any]] = None,
+             ) -> _SpanCtx:
+        return _SpanCtx(self, self.begin(name, tid=tid, pid=pid, cat=cat,
+                                         args=args))
+
+    # -- point events ----------------------------------------------------
+    def instant(self, name: str, *, tid: int = 0, pid: Optional[int] = None,
+                cat: str = "serving", args: Optional[Dict[str, Any]] = None,
+                ) -> None:
+        self._buf.append((
+            "i", name, cat, self.pid if pid is None else pid, tid,
+            (self._mono() - self._epoch) * 1e6,
+            tuple(args.items()) if args else ()))
+
+    def counter(self, name: str, values: Dict[str, float], *,
+                pid: Optional[int] = None, cat: str = "serving") -> None:
+        self._buf.append((
+            "C", name, cat, self.pid if pid is None else pid,
+            (self._mono() - self._epoch) * 1e6, tuple(values.items())))
+
+    def thread_name(self, tid: int, name: str, *,
+                    pid: Optional[int] = None) -> None:
+        """Label a track (once per (pid, tid)); Perfetto shows it as the
+        row name."""
+        p = self.pid if pid is None else pid
+        if (p, tid) in self._named_tracks:
+            return
+        self._named_tracks.add((p, tid))
+        self._buf.append(("M", p, tid, name))
+
+    # -- output ----------------------------------------------------------
+    def close(self) -> List[Dict[str, Any]]:
+        """Force-close leftovers (flagged ``unclosed``) and write the file.
+
+        Returns the event list so in-process callers can skip the file
+        round-trip.  Idempotent on the file: a second close rewrites it.
+        """
+        for span in list(self._open.values()):
+            span.args["unclosed"] = True
+            self.end(span)
+        events = self.events
+        if self.path is not None:
+            with open(self.path, "w") as fh:
+                fh.write("[\n")
+                fh.write(",\n".join(_ENCODE(ev) for ev in events))
+                fh.write("\n]\n")
+        return events

@@ -30,9 +30,10 @@ a ``repro.serving.router.ReplicaRouter`` over several).
 from __future__ import annotations
 
 import math
-import time
 from typing import Iterable, Optional
 
+from repro.obs import kernels as obs_kernels
+from repro.obs import metrics as obs_metrics
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      RequestResult, ServeReport)
 
@@ -90,11 +91,12 @@ class Engine:
         self._sched.submit(req)
 
     def begin(self) -> None:
-        """(Re)start the wall clock.  ``step``/``drain`` call it lazily on
-        first use; ``serve`` calls it unconditionally so a reused engine
-        times each batch from its own start, exactly like the pre-engine
-        ``ContinuousScheduler.run`` did."""
-        self._t0 = time.monotonic()
+        """(Re)start the wall clock (the scheduler's injected clock seam).
+        ``step``/``drain`` call it lazily on first use; ``serve`` calls it
+        unconditionally so a reused engine times each batch from its own
+        start, exactly like the pre-engine ``ContinuousScheduler.run``
+        did."""
+        self._t0 = self._sched.clock.monotonic()
 
     def step(self) -> bool:
         """Advance one scheduler tick.  Returns True while work remains."""
@@ -127,18 +129,22 @@ class Engine:
         """Snapshot the scheduler's cumulative results as a ``ServeReport``
         (identical construction to the pre-engine ``run`` return)."""
         s = self._sched
-        wall = time.monotonic() - self._t0 if self._t0 is not None else 0.0
+        now = s.clock.monotonic()
+        started = self._t0 if self._t0 is not None else now
+        wall = now - self._t0 if self._t0 is not None else 0.0
         occ = (s._occupancy_sum / s.decode_steps if s.decode_steps else 0.0)
         return ServeReport(results=s.finished,
                            decode_steps=s.decode_steps,
                            prefill_chunks=s.prefill_chunks,
                            occupancy=occ, wall_time=wall,
                            paged=s.pool.stats() if s.paged else None,
-                           preemptions=s.preemptions)
+                           preemptions=s.preemptions,
+                           started_at=started, ended_at=now)
 
     def stats(self) -> dict:
         """Live counters for routing/monitoring (pool stats merged in when
-        paged)."""
+        paged; metrics-registry snapshot attached when the registry is
+        enabled)."""
         s = self._sched
         out = {"tick_count": s.tick_count,
                "decode_steps": s.decode_steps,
@@ -151,7 +157,14 @@ class Engine:
                "preemptions": s.preemptions}
         if s.paged:
             out.update(s.pool.stats())
+        if obs_metrics.enabled():
+            out["metrics"] = obs_metrics.snapshot()
         return out
+
+    def kernel_profile(self) -> dict:
+        """Dispatch paths, autotune decisions, and XLA cost figures the
+        kernels layer recorded (``repro.obs.kernels``)."""
+        return obs_kernels.snapshot()
 
     def cache_probe(self, prompt) -> int:
         """Tokens of ``prompt`` the persistent prefix cache / live blocks

@@ -339,6 +339,8 @@ class PagedPool:
         self.reclaimed_blocks = 0       # cold cached blocks fed to the free list
         self.swapped_blocks_out = 0     # exclusive blocks copied to the host
         self.swapped_blocks_in = 0      # host blocks restored by swap_in
+        self.swapped_bytes_out = 0      # payload bytes of those copies
+        self.swapped_bytes_in = 0
         self.swap_prefetched_blocks = 0  # host blocks staged ahead of swap_in
         self.min_free_blocks = self.alloc.free_blocks
 
@@ -627,6 +629,8 @@ class PagedPool:
                 self.index.drop_block(bid)
             entries.append(("host", content))
             self.swapped_blocks_out += 1
+            self.swapped_bytes_out += sum(
+                l.nbytes for l in compat.tree_leaves(content))
         rec = SwappedSeq(prompt=seq.prompt, matched=seq.matched,
                          length=int(np.asarray(self.lens)[slot]),
                          entries=entries)
@@ -670,6 +674,8 @@ class PagedPool:
                                        rec.staged.get(i, payload), bid)
             blocks.append(bid)
             self.swapped_blocks_in += 1
+            self.swapped_bytes_in += sum(
+                l.nbytes for l in compat.tree_leaves(payload))
         self.tables[slot, :] = self._sentinel
         self.tables[slot, :len(blocks)] = blocks
         self.lens = self.lens.at[slot].set(rec.length)
@@ -714,5 +720,7 @@ class PagedPool:
             "reclaimed_blocks": self.reclaimed_blocks,
             "swapped_blocks_out": self.swapped_blocks_out,
             "swapped_blocks_in": self.swapped_blocks_in,
+            "swapped_bytes_out": self.swapped_bytes_out,
+            "swapped_bytes_in": self.swapped_bytes_in,
             "swap_prefetched_blocks": self.swap_prefetched_blocks,
         }

@@ -41,6 +41,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Iterable, Optional
 
+from repro.obs import metrics as obs_metrics
 from repro.serving.engine_api import Engine
 from repro.serving.paged import PrefixIndex
 from repro.serving.scheduler import Request, ServeReport
@@ -62,8 +63,12 @@ class ReplicaRouter:
                  **engine_kwargs):
         if replicas < 1:
             raise ValueError(f"replicas must be ≥ 1 (got {replicas})")
-        self.engines = [Engine(params, cfg, **engine_kwargs)
-                        for _ in range(replicas)]
+        # one shared Tracer, one Perfetto pid per replica — its request and
+        # scheduler tracks land under "process i" in the combined trace
+        tracer = engine_kwargs.pop("tracer", None)
+        self.engines = [Engine(params, cfg, tracer=tracer, trace_pid=i,
+                               **engine_kwargs)
+                        for i in range(replicas)]
         self.block_size = int(engine_kwargs.get("block_size", 8))
         self.affinity = bool(affinity) and self.engines[0].paged
         self.backpressure = (replicas > 1 if backpressure is None
@@ -118,6 +123,8 @@ class ReplicaRouter:
                 and all(e.starved(len(req.prompt)) for e in self.engines)):
             self.rejected.append(req.rid)
             self.backpressure_rejects += 1
+            if obs_metrics.enabled():
+                obs_metrics.counter("router.backpressure_rejects").inc()
             return None
         choice = self.route(req)
         self.engines[choice].submit(req)
@@ -131,6 +138,12 @@ class ReplicaRouter:
         busy = False
         for e in self.engines:
             busy = e.step() or busy
+        if obs_metrics.enabled():
+            # mirrors only: the plain ints above stay the report inputs
+            obs_metrics.gauge("router.affinity_routes").set(
+                self.affinity_routes)
+            for i, e in enumerate(self.engines):
+                obs_metrics.gauge(f"router.r{i}.load").set(e.load)
         return busy
 
     def serve(self, requests: Optional[Iterable[Request]] = None, *,

@@ -80,8 +80,8 @@ these equivalences.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
@@ -91,6 +91,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.obs import clock as obs_clock
+from repro.obs import kernels as obs_kernels
+from repro.obs import metrics as obs_metrics
 from repro.serving import engine
 
 Array = jax.Array
@@ -124,23 +127,56 @@ class RequestResult:
     rid: int
     prompt_len: int
     tokens: list = field(default_factory=list)
-    token_times: list = field(default_factory=list)   # wall-clock per token
     arrival_time: float = 0.0           # wall-clock when first seen arrived
+    admitted_time: Optional[float] = None   # queue wait ends (prefill starts)
+    first_token_time: Optional[float] = None
     finish_time: float = 0.0
     evicted: bool = False               # retired by the slot-capacity backstop
     priority: int = 0                   # copied from the request
     slo_ms: Optional[float] = None      # copied from the request
     preempted: int = 0                  # times this request was swapped out
+    dropped_latencies: int = 0          # per-token samples beyond the cap
+    dropped_sum: float = 0.0
+    _latencies: list = field(default_factory=list)
+
+    # Per-token latency samples kept per request; percentile math stays
+    # exact below the cap, and beyond it only count+sum are accumulated —
+    # long-running streams no longer grow result memory without bound.
+    MAX_RECORDED_LATENCIES = 8192
+
+    def record_latency(self, latency: float) -> None:
+        if len(self._latencies) < self.MAX_RECORDED_LATENCIES:
+            self._latencies.append(latency)
+        else:
+            self.dropped_latencies += 1
+            self.dropped_sum += latency
 
     @property
     def latencies(self) -> list:
-        """Per-token latency: first token from arrival, rest inter-token."""
-        prev = self.arrival_time
-        out = []
-        for t in self.token_times:
-            out.append(t - prev)
-            prev = t
-        return out
+        """Per-token latency: first token end-to-end from arrival, rest
+        inter-token (capped — see ``record_latency``)."""
+        return self._latencies
+
+    @property
+    def queued_ms(self) -> Optional[float]:
+        """Queue wait: arrival → admission (prefill start)."""
+        if self.admitted_time is None:
+            return None
+        return (self.admitted_time - self.arrival_time) * 1e3
+
+    @property
+    def prefill_ms(self) -> Optional[float]:
+        """Prefill compute: admission → first token out."""
+        if self.admitted_time is None or self.first_token_time is None:
+            return None
+        return (self.first_token_time - self.admitted_time) * 1e3
+
+    @property
+    def decode_ms(self) -> Optional[float]:
+        """Decode: first token → finish (includes any suspended time)."""
+        if self.first_token_time is None:
+            return None
+        return (self.finish_time - self.first_token_time) * 1e3
 
     @property
     def slo_met(self) -> Optional[bool]:
@@ -160,6 +196,8 @@ class ServeReport:
     paged: Optional[dict] = None        # PagedPool.stats() when serving paged
     preemptions: int = 0                # swap-outs performed by the scheduler
     router: Optional[dict] = None       # ReplicaRouter stats (merged reports)
+    started_at: Optional[float] = None  # serve-loop start (engine clock)
+    ended_at: Optional[float] = None    # serve-loop end
 
     @property
     def total_tokens(self) -> int:
@@ -212,13 +250,16 @@ class ServeReport:
         """Combine per-replica reports into one global report.
 
         Percentile inputs stay RAW: the per-request results (each carrying
-        its token-time list) concatenate, so ``latency_percentiles`` and
+        its latency samples) concatenate, so ``latency_percentiles`` and
         the by-class/SLO views run over the union of raw latencies — never
         an average of per-replica p95s, which would understate the tail.
         Counters (decode steps, prefill chunks, preemptions, the paged
         accounting incl. per-replica free/min-free capacities) sum;
-        occupancy weights each replica by its decode steps; wall_time is
-        the max, since replicas serve concurrently."""
+        occupancy weights each replica by its decode steps.  Wall time is
+        the true overlapped interval ``max(ended_at) - min(started_at)``
+        when every report carries its serve start/end stamps (replicas
+        serve concurrently but need not start together); reports without
+        stamps fall back to ``max(wall_time)``."""
         reports = list(reports)
         if not reports:
             raise ValueError("merge needs at least one report")
@@ -232,15 +273,23 @@ class ServeReport:
             paged = {k: (paged_dicts[0][k] if k == "block_size"
                          else sum(d[k] for d in paged_dicts))
                      for k in paged_dicts[0]}
+        stamped = all(r.started_at is not None and r.ended_at is not None
+                      for r in reports)
+        started = min(r.started_at for r in reports) if stamped else None
+        ended = max(r.ended_at for r in reports) if stamped else None
+        wall = (ended - started if stamped
+                else max(r.wall_time for r in reports))
         return cls(
             results=[res for r in reports for res in r.results],
             decode_steps=steps,
             prefill_chunks=sum(r.prefill_chunks for r in reports),
             occupancy=occ,
-            wall_time=max(r.wall_time for r in reports),
+            wall_time=wall,
             paged=paged,
             preemptions=sum(r.preemptions for r in reports),
-            router=router)
+            router=router,
+            started_at=started,
+            ended_at=ended)
 
     def baseline_occupancy(self, num_slots: int) -> float:
         """Drain-and-refill bound on THIS workload, batched in the recorded
@@ -360,6 +409,8 @@ class _InFlight:
     slot: int = -1
     produced: int = 0                   # tokens sampled so far (keys the rng)
     remaining: int = 0
+    last_token_time: float = 0.0        # inter-token latency baseline
+    span: object = None                 # open lifecycle span (tracing only)
 
 
 @dataclass
@@ -407,6 +458,15 @@ class ContinuousScheduler:
         a strictly-lower-priority running decode (``PagedPool.swap_out``).
         The victim resumes later bit-identically; ``False`` makes priorities
         ordering-only, the preemption-off baseline the benchmarks diff.
+    clock:
+        Time source for every latency/SLO stamp (default: the process-wide
+        ``repro.obs.clock``).  Tests inject a ``VirtualClock`` here and
+        advance it per tick for exact latency assertions.
+    tracer / trace_pid:
+        Optional ``repro.obs.trace.Tracer``: request-lifecycle spans go to
+        track ``rid + 1``, scheduler ticks to track 0, under process id
+        ``trace_pid`` (the replica index).  ``None`` — the default — keeps
+        the hot path free of any tracing work.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
@@ -414,11 +474,19 @@ class ContinuousScheduler:
                  temperature: float = 1.0, base_rng: Optional[Array] = None,
                  eos_id: Optional[int] = None, paged: bool = False,
                  block_size: int = 8, num_blocks: Optional[int] = None,
-                 preempt: bool = True):
+                 preempt: bool = True, clock: Optional[obs_clock.Clock] = None,
+                 tracer=None, trace_pid: int = 0):
         self.params = params
         self.cfg = cfg
         self.paged = paged
         self.preempt = preempt
+        self.clock = clock or obs_clock.get()
+        self.tracer = tracer
+        self._pid = trace_pid
+        self._queued_spans: dict[int, object] = {}     # rid → open queued span
+        self._metrics = (self._build_metrics(trace_pid)
+                         if obs_metrics.enabled() else None)
+        self._profiled = False          # one cost-analysis per scheduler
         if paged:
             from repro.serving import paged as paged_mod
             self.pool = paged_mod.PagedPool(cfg, num_slots, slot_len,
@@ -459,6 +527,68 @@ class ContinuousScheduler:
         return jax.random.fold_in(
             jax.random.fold_in(self.base_rng, rid), token_index)
 
+    # -- observability --------------------------------------------------------
+    # The plain counters (decode_steps, preemptions, pool stats, …) stay the
+    # authoritative inputs to ServeReport — they must read the same whether
+    # the registry is on or off.  The registry only MIRRORS them (plus
+    # distributions the report cannot hold), so disabling it changes nothing.
+    def _build_metrics(self, pid: int) -> dict:
+        prefix = f"serving.r{pid}" if pid else "serving"
+        m = {
+            "tokens": obs_metrics.counter(f"{prefix}.tokens"),
+            "preemptions": obs_metrics.counter(f"{prefix}.preemptions"),
+            "occupancy": obs_metrics.histogram(f"{prefix}.occupancy"),
+            "tick_ms": obs_metrics.histogram(f"{prefix}.tick_ms"),
+            "active": obs_metrics.gauge(f"{prefix}.active"),
+            "queue_depth": obs_metrics.gauge(f"{prefix}.queue_depth"),
+            "free_slots": obs_metrics.gauge(f"{prefix}.free_slots"),
+        }
+        if self.paged:
+            # free_blocks is a Gauge, so its .min IS the low-water mark
+            for k in ("free_blocks", "cached_blocks", "prefix_cache_hits",
+                      "swapped_bytes_out", "swapped_bytes_in"):
+                m[k] = obs_metrics.gauge(f"{prefix}.{k}")
+        return m
+
+    def _update_metrics(self) -> None:
+        m = self._metrics
+        m["active"].set(len(self.active))
+        m["queue_depth"].set(len(self.queue) + len(self._suspended))
+        if self.paged:
+            m["free_slots"].set(self.pool.free_slots)
+            m["free_blocks"].set(self.pool.free_blocks)
+            m["cached_blocks"].set(self.pool.cached_blocks)
+            m["prefix_cache_hits"].set(self.pool.prefix_cache_hits)
+            m["swapped_bytes_out"].set(self.pool.swapped_bytes_out)
+            m["swapped_bytes_in"].set(self.pool.swapped_bytes_in)
+        else:
+            m["free_slots"].set(self.pool.free_slots)
+
+    @staticmethod
+    def _tid(rid: int) -> int:
+        """Trace track for a request (track 0 is the scheduler's)."""
+        return rid + 1
+
+    def _span(self, name: str, *, tid: int = 0, args=None):
+        """Scheduler-side span context; a no-op without a tracer."""
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(name, tid=tid, pid=self._pid, args=args)
+
+    def _begin_phase(self, flight: _InFlight, name: str, args=None) -> None:
+        """Close the flight's current lifecycle span and open ``name``."""
+        if self.tracer is None:
+            return
+        if flight.span is not None:
+            self.tracer.end(flight.span)
+        flight.span = self.tracer.begin(
+            name, tid=self._tid(flight.req.rid), pid=self._pid, args=args)
+
+    def _end_phase(self, flight: _InFlight) -> None:
+        if self.tracer is not None and flight.span is not None:
+            self.tracer.end(flight.span)
+            flight.span = None
+
     # -- API ----------------------------------------------------------------
     def submit(self, req: Request) -> None:
         if len(req.prompt) == 0:
@@ -482,14 +612,47 @@ class ContinuousScheduler:
 
     def tick(self) -> None:
         self.tick_count += 1
-        now = time.monotonic()
+        now = self.clock.monotonic()
         for r in self.queue:           # stamp arrivals BEFORE admission, so
             if (r.arrival_tick <= self.tick_count     # queue wait is counted
                     and r.rid not in self._arrival_times):
                 self._arrival_times[r.rid] = now
-        self._admit()
-        self._advance_prefill()
-        self._decode_tick()
+                if self.tracer is not None:
+                    self.tracer.thread_name(self._tid(r.rid), f"req {r.rid}",
+                                            pid=self._pid)
+                    self._queued_spans[r.rid] = self.tracer.begin(
+                        "queued", tid=self._tid(r.rid), pid=self._pid,
+                        args={"rid": r.rid, "priority": r.priority})
+        # section spans only when the section has work — idle sections are
+        # trace noise and, at ~3 spans/tick, a measurable share of overhead
+        with self._span("tick", args={"tick": self.tick_count}):
+            if self.queue:
+                with self._span("admit"):
+                    self._admit()
+            else:
+                self._admit()
+            if self._prefill is not None:
+                with self._span("prefill"):
+                    self._advance_prefill()
+            else:
+                self._advance_prefill()
+            if self.active:
+                with self._span("decode"):
+                    self._decode_tick()
+            else:
+                self._decode_tick()
+        if self.tracer is not None:
+            self.tracer.counter("sched", {
+                "active": len(self.active), "queue": len(self.queue),
+                "free_slots": self.pool.free_slots}, pid=self._pid)
+            if self.paged:
+                self.tracer.counter("blocks", {
+                    "free": self.pool.free_blocks,
+                    "cached": self.pool.cached_blocks}, pid=self._pid)
+        if self._metrics is not None:
+            self._update_metrics()
+            self._metrics["tick_ms"].observe(
+                (self.clock.monotonic() - now) * 1e3)
 
     @property
     def busy(self) -> bool:
@@ -554,7 +717,7 @@ class ContinuousScheduler:
         With uniform ``slo_ms`` per class — every workload the generator
         produces — slack order equals arrival order, so the FIFO
         equivalence pins are untouched."""
-        now = time.monotonic()
+        now = self.clock.monotonic()
         best = None
         for i, (rid, rec) in enumerate(self._suspended.items()):
             req = rec.flight.req
@@ -594,6 +757,7 @@ class ContinuousScheduler:
                     len(req.prompt) - seq.matched, self.prefill_chunk)),
                 "last": None,
             }
+            self._admitted(self._prefill["flight"])
             return True
         if self.pool.free_slots == 0:
             return False
@@ -611,7 +775,20 @@ class ContinuousScheduler:
                                                         self.prefill_chunk)),
             "last": None,
         }
+        self._admitted(self._prefill["flight"])
         return True
+
+    def _admitted(self, flight: _InFlight) -> None:
+        """Queue wait ends here: stamp the phase split and flip the trace
+        track from ``queued`` to ``prefill``."""
+        flight.result.admitted_time = self.clock.monotonic()
+        if self.tracer is not None:
+            span = self._queued_spans.pop(flight.req.rid, None)
+            if span is not None:
+                self.tracer.end(span)
+            flight.span = self.tracer.begin(
+                "prefill", tid=self._tid(flight.req.rid), pid=self._pid,
+                args={"prompt_len": flight.result.prompt_len})
 
     # -- preemption ---------------------------------------------------------
     def _make_room(self, priority: int, attempt) -> bool:
@@ -650,7 +827,7 @@ class ContinuousScheduler:
                    if f.req.priority > priority]
         if not victims:
             return False
-        now = time.monotonic()
+        now = self.clock.monotonic()
         victim = max(victims, key=lambda f: (f.req.priority,
                                              f.req.slo_ms is None,
                                              self._slack(f.req, now),
@@ -668,12 +845,19 @@ class ContinuousScheduler:
         flight.slot = -1
         flight.result.preempted += 1
         self.preemptions += 1
+        if self._metrics is not None:
+            self._metrics["preemptions"].inc()
+        if self.tracer is not None:
+            self.tracer.instant(
+                "preempt", tid=self._tid(flight.req.rid), pid=self._pid,
+                args={"cause": "priority", "produced": flight.produced})
+        self._begin_phase(flight, "suspended")
 
     def _prefetch_swap_in(self) -> None:
         """Stage the host-resident blocks of the suspended request most
         likely to resume next (same key order as ``_next_candidate``) onto
         the device while the current decode step is still in flight."""
-        now = time.monotonic()
+        now = self.clock.monotonic()
         best = None
         for i, (rid, rec) in enumerate(self._suspended.items()):
             req = rec.flight.req
@@ -697,6 +881,7 @@ class ContinuousScheduler:
         self.tokens = self.tokens.at[seq.slot].set(rec.token)
         self.active[seq.slot] = flight
         del self._suspended[rid]
+        self._begin_phase(flight, "decode", args={"resumed": True})
         return True
 
     # -- prefill ------------------------------------------------------------
@@ -713,6 +898,10 @@ class ContinuousScheduler:
         while budget > 0 and pf["sizes"]:
             width = pf["sizes"].popleft()
             chunk = np.asarray(prompt[pf["pos"]:pf["pos"] + width])[None, :]
+            chunk_span = (self.tracer.begin(
+                "prefill_chunk", tid=self._tid(pf["flight"].req.rid),
+                pid=self._pid, args={"pos": pf["pos"], "width": width})
+                if self.tracer is not None else None)
             if self.paged:
                 # chunks write straight into the shared pool through this
                 # sequence's block-table row — no batch-1 scratch cache, no
@@ -729,6 +918,8 @@ class ContinuousScheduler:
             pf["pos"] += width
             self.prefill_chunks += 1
             budget -= 1
+            if chunk_span is not None:
+                self.tracer.end(chunk_span)
         if pf["sizes"]:
             return
         self._finish_prefill()
@@ -740,7 +931,10 @@ class ContinuousScheduler:
         rid = flight.req.rid
         logits = self._logits(self.params, pf["last"])
         tok = self._sample(self._key(rid, 0)[None], logits)
+        # the first sampled token closes the prefill phase: record it, then
+        # flip the lifecycle track to decode
         self._record_token(flight, int(tok[0]))
+        self._begin_phase(flight, "decode")
         if flight.remaining <= 0 or self._hit_eos(flight):
             self._finish(flight)
             return
@@ -793,6 +987,23 @@ class ContinuousScheduler:
             rids[s] = flight.req.rid
             produced[s] = flight.produced
             active_mask[s] = True
+        if not self._profiled and obs_kernels.profiling_enabled():
+            # one-time roofline hook: FLOPs / bytes of the compiled decode
+            # step via compat.cost_analysis (lower+compile hits the jit
+            # cache for shapes the step below compiles anyway)
+            self._profiled = True
+            if self.paged:
+                obs_kernels.profile_jitted(
+                    self._decode_paged, "decode_step_paged", self.params,
+                    self.pool.caches,
+                    self.pool.device_tables(self.active.keys()),
+                    self.pool.lens, self.tokens[:, None], jnp.asarray(rids),
+                    jnp.asarray(produced), self.base_rng)
+            else:
+                obs_kernels.profile_jitted(
+                    self._decode, "decode_step", self.params,
+                    self.pool.caches, self.pool.lens, self.tokens[:, None],
+                    jnp.asarray(rids), jnp.asarray(produced), self.base_rng)
         if self.paged:
             # non-active rows (idle OR mid-prefill) are masked to the
             # sentinel table row: their lens-0 garbage write must land in
@@ -813,6 +1024,9 @@ class ContinuousScheduler:
         self.tokens = tok
         self.decode_steps += 1
         self._occupancy_sum += len(self.active) / self.pool.num_slots
+        if self._metrics is not None:
+            self._metrics["occupancy"].observe(
+                len(self.active) / self.pool.num_slots)
         if self.paged and self._suspended:
             # Overlap host→device swap-in staging with the decode step just
             # dispatched above: JAX queues the transfers asynchronously, so
@@ -832,8 +1046,21 @@ class ContinuousScheduler:
 
     # -- bookkeeping --------------------------------------------------------
     def _record_token(self, flight: _InFlight, token: int) -> None:
-        flight.result.tokens.append(token)
-        flight.result.token_times.append(time.monotonic())
+        now = self.clock.monotonic()
+        result = flight.result
+        result.tokens.append(token)
+        if flight.produced == 0:
+            result.first_token_time = now
+            result.record_latency(now - result.arrival_time)
+        else:
+            result.record_latency(now - flight.last_token_time)
+        flight.last_token_time = now
+        if self._metrics is not None:
+            self._metrics["tokens"].inc()
+        if self.tracer is not None:
+            self.tracer.instant(
+                "token", tid=self._tid(flight.req.rid), pid=self._pid,
+                args={"i": flight.produced, "token": token})
         flight.produced += 1
         flight.remaining -= 1
 
@@ -842,7 +1069,15 @@ class ContinuousScheduler:
                 and flight.result.tokens[-1] == self.eos_id)
 
     def _finish(self, flight: _InFlight) -> None:
-        flight.result.finish_time = time.monotonic()
+        flight.result.finish_time = self.clock.monotonic()
+        self._end_phase(flight)
+        if self.tracer is not None:
+            cause = ("evicted" if flight.result.evicted
+                     else "eos" if self._hit_eos(flight) and flight.remaining > 0
+                     else "completed")
+            self.tracer.instant(
+                "retire", tid=self._tid(flight.req.rid), pid=self._pid,
+                args={"cause": cause, "tokens": len(flight.result.tokens)})
         self.finished.append(flight.result)
         if flight.slot >= 0:
             # paged flights own their row (and blocks) from admission, so a

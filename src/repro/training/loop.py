@@ -22,13 +22,13 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Callable, Optional
 
 import jax
 import numpy as np
 
 from repro import compat
+from repro.obs import clock as obs_clock
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import RunConfig
 from repro.data.synthetic import SyntheticConfig, SyntheticDataset
@@ -88,16 +88,16 @@ def run(run_cfg: RunConfig, *, steps: int, train_step: Callable,
         batch = compat.tree_map(lambda x: jax.numpy.asarray(x), batch)
         if inject_failure is not None:
             inject_failure(step)          # may raise — simulated node death
-        t0 = time.monotonic()
+        t0 = obs_clock.monotonic()
         params, opt_state, metrics = train_step(params, opt_state, batch)
         metrics = {k: float(v) for k, v in metrics.items()
                    if np.ndim(v) == 0}
-        dt = time.monotonic() - t0
+        dt = obs_clock.monotonic() - t0
         if watchdog.observe(step, dt):
             log(f"[straggler] step {step} took {dt:.3f}s "
                 f"(median {np.median(watchdog.times):.3f}s)")
         with open(hb_path, "w") as f:
-            json.dump({"step": step, "t": time.time()}, f)
+            json.dump({"step": step, "t": obs_clock.wall_time()}, f)
         history.append({"step": step, "dt": dt, **metrics})
         if step % run_cfg.log_every == 0:
             log(f"[step {step}] loss={metrics.get('loss', float('nan')):.4f} "

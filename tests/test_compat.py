@@ -195,6 +195,39 @@ def test_engine_loop_centralized():
     assert not offenders, "\n".join(offenders)
 
 
+# Wall-clock access is owned by repro.obs.clock: every timestamp the serving
+# stack takes must go through the injectable clock, or the virtual-clock
+# tests (deterministic latencies) and the trace epoch silently diverge from
+# what the scheduler actually measured.
+_CLOCK_ONLY = (
+    ("time.monotonic(", "use repro.obs.clock.monotonic()"),
+    ("time.perf_counter(", "use repro.obs.clock.perf_counter()"),
+    ("time.time(", "use repro.obs.clock.wall_time()"),
+)
+
+
+def test_wall_clock_access_centralized():
+    offenders = []
+    obs_home = os.path.join(SRC, "obs")
+    for root, _, files in os.walk(SRC):
+        if os.path.abspath(root).startswith(os.path.abspath(obs_home)):
+            continue                          # the clock's own home
+        for name in files:
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(root, name)
+            with open(path) as f:
+                for lineno, line in enumerate(f, 1):
+                    if "``" in line or line.lstrip().startswith("#"):
+                        continue
+                    for pat, why in _CLOCK_ONLY:
+                        if pat in line:
+                            offenders.append(
+                                f"{os.path.relpath(path, REPO)}:{lineno} "
+                                f"[{pat!r} → {why}]")
+    assert not offenders, "\n".join(offenders)
+
+
 # ---------------------------------------------------------------------------
 # Dispatch registry: path selection on this backend.
 # ---------------------------------------------------------------------------

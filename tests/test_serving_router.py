@@ -189,7 +189,7 @@ def _result(rid, lats, *, priority=0, slo_ms=None, finish=None):
     r.arrival_time = t
     for l in lats:
         t += l
-        r.token_times.append(t)
+        r.record_latency(l)
         r.tokens.append(0)
     r.finish_time = finish if finish is not None else t
     return r
@@ -229,6 +229,30 @@ def test_merge_percentiles_over_union_not_averaged():
     assert single.occupancy == rep_a.occupancy
     with pytest.raises(ValueError):
         scheduler.ServeReport.merge([])
+
+
+def test_merge_wall_time_uses_overlapped_interval():
+    """Replicas that serve concurrently but start/stop at different moments:
+    merged throughput must be over the true overlapped wall interval
+    (max end − min start), not the longest per-replica wall_time."""
+    rep_a = scheduler.ServeReport(
+        results=[_result(0, [0.01] * 10)], decode_steps=10, prefill_chunks=1,
+        occupancy=1.0, wall_time=1.0, started_at=100.0, ended_at=101.0)
+    rep_b = scheduler.ServeReport(
+        results=[_result(1, [0.01] * 10)], decode_steps=10, prefill_chunks=1,
+        occupancy=1.0, wall_time=1.5, started_at=100.5, ended_at=102.0)
+    merged = scheduler.ServeReport.merge([rep_a, rep_b])
+    assert merged.wall_time == pytest.approx(2.0)     # 100.0 → 102.0
+    assert merged.started_at == 100.0 and merged.ended_at == 102.0
+    assert merged.tokens_per_s == pytest.approx(20 / 2.0)
+
+    # unstamped reports (hand-built, or pre-stamping files): the old
+    # conservative max-of-walls fallback
+    rep_c = scheduler.ServeReport(
+        results=[_result(2, [0.01])], decode_steps=1, prefill_chunks=1,
+        occupancy=1.0, wall_time=3.0)
+    merged2 = scheduler.ServeReport.merge([rep_a, rep_c])
+    assert merged2.wall_time == pytest.approx(3.0)
 
 
 def test_merge_slo_counts_by_class():
@@ -325,8 +349,10 @@ block pool: 8×8 blocks, free now 1, min free 0
 blocks saved by sharing: 4 (prefill tokens reused: 32, copy-on-write \
 copies: 0)
 prefix cache: 7 blocks resident, 1 hits, 2 reclaimed under pressure
-class 0: n=3 p50=<L>ms p95=<L>ms preemptions=0
-class 1: n=2 p50=<L>ms p95=<L>ms preemptions=0
+class 0: n=3 p50=<L>ms p95=<L>ms queued=<L>ms prefill=<L>ms \
+decode=<L>ms preemptions=0
+class 1: n=2 p50=<L>ms p95=<L>ms queued=<L>ms prefill=<L>ms \
+decode=<L>ms preemptions=0
 SLO attainment: 100.0% of 3 deadline-bearing requests
 preemptions: 0 (blocks swapped out: 0, swapped back in: 0)
 """
