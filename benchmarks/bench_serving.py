@@ -26,6 +26,14 @@ The workload is IDENTICAL for every N (and for ``affinity=False``), so
 ``run.py report replicas1.json replicas4.json`` is the scaling diff and an
 affinity-off run isolates what prefix routing buys.
 
+``arch=NAME`` serves a different smoke architecture through the same
+harness: ``zamba2_1p2b`` / ``xlstm_125m`` exercise the fixed-state cache
+family (one refcounted block per sequence; prompts snap to the state scan's
+chunk quantum), ``whisper_small`` the enc-dec family (prompts become a small
+pool of repeated audio clips so encoder-block sharing engages).  Non-default
+archs are forced paged — the block accounting is the point — and emit
+``serving/{tag}/{arch}/*`` rows so default-arch diffs stay comparable.
+
 All modes drive the engine layer (``Engine`` / ``ReplicaRouter``) — the
 grep-policy test pins that nothing here touches ``ContinuousScheduler``
 directly.
@@ -39,14 +47,22 @@ import jax
 
 def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
         preempt: bool = True, replicas: int = 0,
-        affinity: bool = True, obs: bool = False) -> list:
+        affinity: bool = True, obs: bool = False,
+        arch: str = "smollm_360m") -> list:
     import repro.configs as configs
-    from repro.models import layers as L, transformer
-    from repro.serving import scheduler
+    from repro.models import encdec, layers as L, transformer
+    from repro.serving import cache_family, scheduler
     from repro.serving.engine_api import Engine
     from repro.serving.router import ReplicaRouter
 
-    cfg = configs.get_smoke("smollm_360m")
+    cfg = configs.get_smoke(arch)
+    family = cache_family.resolve(cfg)
+    if family.kind != "token" and (priorities or replicas or obs):
+        raise SystemExit(f"--arch {arch} ({family.name}): only the plain "
+                         "serving rows are benchmarked for non-dense "
+                         "cache families")
+    if family.requires_paged or family.kind == "state":
+        paged = True               # the families this arch flag exists for
     block_size = 8
     slo_ms = 60_000.0                  # generous CPU-CI deadline: the metric
     if smoke:                          # should move, not saturate at 0
@@ -66,7 +82,8 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
         paged_kw["num_blocks"] = (slots + 1) * (slot_len // block_size) // 2
     paged_kw["preempt"] = preempt
 
-    params, _ = L.split_params(transformer.init(jax.random.PRNGKey(0), cfg))
+    init_fn = encdec.init if family.kind == "encdec" else transformer.init
+    params, _ = L.split_params(init_fn(jax.random.PRNGKey(0), cfg))
     if replicas:
         # prefix-heavy: four groups, each sharing its own system prompt —
         # the SAME workload for every replica count / routing policy, so
@@ -94,16 +111,46 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
             priority_classes=2 if priorities else 1,
             slo_ms=slo_ms if priorities else None)
 
+    import numpy as np
+    if family.kind == "encdec":
+        # prompts are audio: a small pool of distinct clips, repeated, so
+        # the encoder-block sharing the family exists for actually engages
+        audio_rng = np.random.default_rng(2)
+        audios = [audio_rng.integers(0, cfg.vocab_size, cfg.encoder_seq_len)
+                  for _ in range(3)]
+        requests = [dataclasses.replace(r, prompt=audios[r.rid % len(audios)])
+                    for r in requests]
+        # headroom so finished requests' encoder chains survive in the LRU
+        # prefix cache until the repeat arrives — the sharing being measured
+        nc = cfg.encoder_seq_len // block_size
+        paged_kw["num_blocks"] = slots * (nc + 1) + len(audios) * nc
+    elif family.kind == "state":
+        # single-shot prefill goes through the chunked state scan: snap
+        # prompt lengths onto the scan's quantum
+        q = family.prompt_quantum()
+        requests = [dataclasses.replace(
+            r, prompt=np.resize(r.prompt, len(r.prompt)
+                                if len(r.prompt) <= q
+                                else max(q, len(r.prompt) // q * q)))
+            for r in requests]
+
     # warmup: the compiled step functions are shared across scheduler
     # instances (and all router replicas), and a prompt of 2*chunk-1 hits
     # every prefill width the binary chunk schedule can produce — so the
     # timed run below measures serving, not jit compilation
-    import numpy as np
     warm = Engine(
         params, cfg, num_slots=slots, slot_len=slot_len, prefill_chunk=chunk,
         top_k=5, base_rng=jax.random.PRNGKey(1), **paged_kw)
-    warm_reqs = [scheduler.Request(rid=0, prompt=np.arange(2 * chunk - 1)
-                                   % 100, max_new_tokens=2)]
+    if family.kind == "encdec":
+        warm_reqs = [scheduler.Request(rid=0, prompt=audios[0],
+                                       max_new_tokens=2)]
+    elif family.kind == "state":
+        warm_reqs = [scheduler.Request(
+            rid=0, prompt=np.arange(family.prompt_quantum()) % 100,
+            max_new_tokens=2)]
+    else:
+        warm_reqs = [scheduler.Request(rid=0, prompt=np.arange(2 * chunk - 1)
+                                       % 100, max_new_tokens=2)]
     if priorities and preempt and not replicas:
         # also warm the preempt-and-swap path (swap-in's block restore jits
         # once per pool shape): low-priority decodes filling every row, then
@@ -162,7 +209,7 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
             tracer = obs_trace.Tracer(trace_path)
             rate = _serve_once(tracer).tokens_per_s
             tracer.close()
-            n_events = len(tracer.events)
+            n_events = tracer.total_events
             os.unlink(trace_path)
             obs_metrics.disable()
             return rate, n_events
@@ -192,6 +239,10 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
     pct = report.latency_percentiles((50, 95))
     baseline = report.baseline_occupancy(slots * max(replicas, 1))
     tag = "smoke" if smoke else "full"
+    if arch != "smollm_360m":
+        # default rows keep their pinned serving/{smoke,full}/* names so
+        # existing report diffs keep working; other archs get their own
+        tag = f"{tag}/{arch}"
     rows = [
         (f"serving/{tag}/per_token", 1e6 / max(report.tokens_per_s, 1e-9),
          f"{report.tokens_per_s:.1f}tok/s"),

@@ -147,6 +147,13 @@ def main(argv=None) -> int:
                     help="serving bench routes round-robin instead of by "
                          "prefix affinity (the baseline a --replicas run "
                          "diffs against)")
+    ap.add_argument("--arch", metavar="NAME", default="smollm_360m",
+                    help="serving bench architecture (smoke config name): "
+                         "zamba2_1p2b / xlstm_125m page SSM/xLSTM state as "
+                         "single fixed-size blocks, whisper_small pages the "
+                         "encoder output as shared immutable blocks; "
+                         "non-default archs emit serving/{tag}/{arch}/* "
+                         "rows so default-row diffs stay comparable")
     ap.add_argument("--obs", action="store_true",
                     help="serving bench re-runs the identical workload with "
                          "tracing + metrics armed and adds a per_token_obs "
@@ -174,6 +181,8 @@ def main(argv=None) -> int:
                 kwargs["affinity"] = not args.no_affinity
             if args.obs:
                 kwargs["obs"] = True
+            if args.arch != "smollm_360m":
+                kwargs["arch"] = args.arch
         rows.extend(mods[name].run(smoke=args.smoke, **kwargs))
     emit(rows)
     if args.json:

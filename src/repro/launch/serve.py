@@ -29,14 +29,15 @@ import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import repro.configs as configs
-from repro.models import layers as L, transformer
+from repro.models import encdec, layers as L, transformer
 from repro.obs import clock as obs_clock
 from repro.obs import kernels as obs_kernels
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
-from repro.serving import engine
+from repro.serving import cache_family, engine
 
 
 def _lockstep(args, cfg, params) -> int:
@@ -106,6 +107,24 @@ def _continuous(args, cfg, params) -> int:
         vocab=vocab, seed=1, shared_prefix=shared_prefix,
         priority_classes=args.priority_classes,
         slo_ms=args.slo_ms or None)
+    family = cache_family.resolve(cfg)
+    if family.kind == "encdec":
+        # prompts are audio: a small set of distinct frame-id sequences, each
+        # filling the encoder window; repeats of the same audio are where the
+        # shared encoder blocks (and zero recompute) pay
+        rng = np.random.default_rng(2)
+        audios = [rng.integers(0, vocab, cfg.encoder_seq_len)
+                  for _ in range(max(1, args.audios))]
+        for r in requests:
+            r.prompt = audios[r.rid % len(audios)]
+    elif family.kind == "state":
+        # single-shot prefill through the chunked scan: snap prompt lengths
+        # to the scan's chunk quantum (≤ q, or a multiple of q)
+        q = family.prompt_quantum()
+        for r in requests:
+            n = len(r.prompt)
+            if n > q and n % q:
+                r.prompt = r.prompt[:n - n % q]
     if args.metrics:
         obs_metrics.enable()
         obs_kernels.enable_profiling()
@@ -232,6 +251,10 @@ def main(argv=None):
     ap.add_argument("--blocks", type=int, default=0,
                     help="pool capacity in blocks (paged mode; 0 = enough "
                          "for every slot at full length)")
+    ap.add_argument("--audios", type=int, default=3,
+                    help="distinct synthetic audios in the enc-dec workload "
+                         "(requests cycle through them, so repeats share "
+                         "encoder blocks)")
     ap.add_argument("--shared-prefix", type=int, default=8,
                     help="shared synthetic prompt prefix length (paged "
                          "mode; demonstrates block sharing)")
@@ -265,16 +288,19 @@ def main(argv=None):
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get(args.arch))
-    if cfg.family == "encdec":
-        raise SystemExit("use examples/serve_whisper.py for enc-dec serving")
+    family = cache_family.resolve(cfg)
+    if family.requires_paged and not (args.continuous and args.paged):
+        raise SystemExit(f"{args.arch}: enc-dec serves under --continuous "
+                         "--paged (the encoder output pages as immutable "
+                         "shared blocks)")
     if args.continuous and cfg.num_patches:
         raise SystemExit("continuous batching serves text-only archs for now")
     if args.paged and not args.continuous:
         raise SystemExit("--paged requires --continuous (the lockstep "
                          "baseline keeps its contiguous cache)")
 
-    params, _ = L.split_params(
-        transformer.init(jax.random.PRNGKey(0), cfg))
+    init_fn = encdec.init if family.kind == "encdec" else transformer.init
+    params, _ = L.split_params(init_fn(jax.random.PRNGKey(0), cfg))
     if args.continuous:
         return _continuous(args, cfg, params)
     return _lockstep(args, cfg, params)

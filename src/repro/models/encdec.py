@@ -104,8 +104,11 @@ def decode_hidden(params: PyTree, tokens: Array, enc_out: Optional[Array],
     """Decoder forward.  caches = [{self: {k,v}, cross: {k,v}} per layer]
     (stacked).  Returns (hidden [B,T,D], new stacked caches)."""
     x = L.embed_tokens(params["embedding"], tokens)
-    base = cache_len if cache_len is not None else 0
-    positions = base + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    base = jnp.asarray(cache_len if cache_len is not None else 0, jnp.int32)
+    # scalar cache_len → positions [T] (broadcast over the batch); per-slot
+    # [B] cache_len → positions [B, T] (rope and the learned table both
+    # accept leading batch dims)
+    positions = base[..., None] + jnp.arange(tokens.shape[1], dtype=jnp.int32)
     x = x + jnp.take(params["pos_embed"], positions, axis=0)
 
     def body(x, layer_in):

@@ -282,7 +282,9 @@ def attention_apply(p: PyTree, x: Array, cfg: ModelConfig, *,
         out = _sdpa(cfg, q, k_pool, v_pool, causal=t > 1, q_offset=cache_len,
                     kv_valid_len=valid, decode=(t == 1),
                     block_tables=block_tables)
-    elif cache is not None and cfg.kv_cache_dtype == "int8":
+    elif cache is not None and "k_scale" in cache:
+        # the cache layout, not a config string, selects the quantized path
+        # (layout construction lives in serving.cache_family)
         # quantized cache: store int8 + per-(pos, head) scales; decode
         # dequantizes per chunk AFTER the HBM read (1 byte/elem streamed)
         k8, ks = _quantize_kv(k)

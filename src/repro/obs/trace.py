@@ -76,13 +76,27 @@ class Tracer:
     collector (CPython untracks tuples of atoms after a collection pass,
     where a heap of long-lived dicts keeps gen-2 scans expensive).  JSON
     encoding happens once, in :meth:`close`, outside the serve loop.
+
+    ``flush_every=N`` bounds the buffer instead: whenever N events are
+    pending they are encoded and appended to ``path`` incrementally, so a
+    long-lived server holds at most N events in memory.  The file stays
+    the same valid JSON array (:meth:`close` writes the closing bracket);
+    :attr:`events` then exposes only the still-buffered tail and
+    :attr:`total_events` counts everything emitted.
     """
 
     def __init__(self, path: Optional[str] = None, *,
-                 clock: Optional[_clock.Clock] = None, pid: int = 0):
+                 clock: Optional[_clock.Clock] = None, pid: int = 0,
+                 flush_every: Optional[int] = None):
+        if flush_every is not None:
+            if path is None:
+                raise ValueError("flush_every needs a path to flush to")
+            if flush_every < 1:
+                raise ValueError(f"flush_every must be >= 1, got {flush_every}")
         self.path = path
         self.clock = clock or _clock.get()
         self.pid = pid
+        self.flush_every = flush_every
         # entries: ("X", name, cat, pid, tid, ts, dur, args_items)
         #          ("i", name, cat, pid, tid, ts, args_items)
         #          ("C", name, cat, pid, ts, args_items)
@@ -92,6 +106,8 @@ class Tracer:
         self._epoch = self._mono()
         self._open: Dict[int, Span] = {}           # id(span) → span, O(1) end
         self._named_tracks: set = set()
+        self._fh = None                            # lazy incremental handle
+        self._flushed = 0                          # events already on disk
 
     @staticmethod
     def _to_dict(entry: tuple) -> Dict[str, Any]:
@@ -116,8 +132,33 @@ class Tracer:
 
     @property
     def events(self) -> List[Dict[str, Any]]:
-        """The buffered events, materialized as trace_event dicts."""
+        """The buffered events, materialized as trace_event dicts.  With
+        ``flush_every`` set this is only the unflushed tail — already
+        flushed events live in the file."""
         return [self._to_dict(e) for e in self._buf]
+
+    @property
+    def total_events(self) -> int:
+        """Events emitted over the tracer's lifetime: flushed + buffered."""
+        return self._flushed + len(self._buf)
+
+    def _emit(self, entry: tuple) -> None:
+        self._buf.append(entry)
+        if self.flush_every is not None and len(self._buf) >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> None:
+        """Append the buffered events to ``path`` and empty the buffer.
+        No-op without a path or with nothing buffered."""
+        if self.path is None or not self._buf:
+            return
+        if self._fh is None:
+            self._fh = open(self.path, "w")
+            self._fh.write("[\n")
+        body = ",\n".join(_ENCODE(self._to_dict(e)) for e in self._buf)
+        self._fh.write(",\n" + body if self._flushed else body)
+        self._flushed += len(self._buf)
+        self._buf.clear()
 
     # -- time ------------------------------------------------------------
     def now_us(self) -> float:
@@ -140,7 +181,7 @@ class Tracer:
         if args:
             span.args.update(args)
         now = (self._mono() - self._epoch) * 1e6
-        self._buf.append((
+        self._emit((
             "X", span.name, span.cat, span.pid, span.tid,
             span.start_us, now - span.start_us, tuple(span.args.items())))
 
@@ -154,14 +195,14 @@ class Tracer:
     def instant(self, name: str, *, tid: int = 0, pid: Optional[int] = None,
                 cat: str = "serving", args: Optional[Dict[str, Any]] = None,
                 ) -> None:
-        self._buf.append((
+        self._emit((
             "i", name, cat, self.pid if pid is None else pid, tid,
             (self._mono() - self._epoch) * 1e6,
             tuple(args.items()) if args else ()))
 
     def counter(self, name: str, values: Dict[str, float], *,
                 pid: Optional[int] = None, cat: str = "serving") -> None:
-        self._buf.append((
+        self._emit((
             "C", name, cat, self.pid if pid is None else pid,
             (self._mono() - self._epoch) * 1e6, tuple(values.items())))
 
@@ -173,20 +214,35 @@ class Tracer:
         if (p, tid) in self._named_tracks:
             return
         self._named_tracks.add((p, tid))
-        self._buf.append(("M", p, tid, name))
+        self._emit(("M", p, tid, name))
 
     # -- output ----------------------------------------------------------
     def close(self) -> List[Dict[str, Any]]:
-        """Force-close leftovers (flagged ``unclosed``) and write the file.
+        """Force-close leftovers (flagged ``unclosed``) and finish the file.
 
-        Returns the event list so in-process callers can skip the file
-        round-trip.  Idempotent on the file: a second close rewrites it.
+        Returns the events still in memory — everything, unless
+        ``flush_every`` already streamed a prefix to disk (then only the
+        tail; the file has the rest).  Without incremental flushing a
+        second close rewrites the file from the retained buffer.
         """
         for span in list(self._open.values()):
             span.args["unclosed"] = True
             self.end(span)
         events = self.events
-        if self.path is not None:
+        if self._fh is not None or self.flush_every is not None:
+            # incremental mode: append the tail, close the array, release
+            # the handle.  The buffer was streamed out, so a second close
+            # has nothing left to write.
+            self.flush()
+            if (self._fh is None and self.path is not None
+                    and self._flushed == 0):
+                self._fh = open(self.path, "w")   # zero events: empty array
+                self._fh.write("[\n")
+            if self._fh is not None:
+                self._fh.write("\n]\n")
+                self._fh.close()
+                self._fh = None
+        elif self.path is not None:
             with open(self.path, "w") as fh:
                 fh.write("[\n")
                 fh.write(",\n".join(_ENCODE(ev) for ev in events))

@@ -1,0 +1,404 @@
+"""Cache families: one protocol for every cache shape the stack serves.
+
+The paper's associative ``(m, d)`` merge makes online softmax indifferent to
+*how* the KV operands are stored — dense fp blocks, quantized blocks, a
+fixed-size recurrence state, or an immutable encoder projection are all just
+operand layouts.  This module owns everything the serving stack assumes about
+those layouts, so ``PagedPool`` / ``ContinuousScheduler`` / ``Engine`` can
+stay layout-agnostic:
+
+* pool-tensor init (contiguous slot caches and paged block pools),
+* block-size semantics (``token``: a block holds ``block_size`` token
+  positions; ``state``: one block IS a sequence's entire recurrent state;
+  ``encdec``: immutable encoder-output blocks + one growing decoder row),
+* prefix-shareability rules (dense prefixes chain-share with copy-on-write;
+  state mutates in place and never shares; encoder output shares only on a
+  whole-audio exact match — the encoder is bidirectional, so a frame-prefix
+  match would adopt K/V computed from a *different* full audio),
+* the ``continuous_serveable`` / single-shot-prefill policy bits that used to
+  live as string checks inside ``engine.py`` and ``scheduler.py``.
+
+Every paged layout obeys one structural contract: **all pool leaves carry the
+physical-block axis at position 1**.  That single rule is what lets the
+pool's generic machinery — swap-out/swap-in serialization, copy-on-write
+block copies, LRU parking — run unchanged across families.
+
+Families are resolved per config (``resolve(cfg)``) and cached, so the
+jitted helpers the scheduler builds around a family persist for the process.
+The ``dense_int8`` family is registered but paged serving for it is a
+follow-up: the dequant hook below is the protocol boundary where per-block
+scales will be consumed (PAPERS.md 2201.04562 / 2111.10770 supply the
+reduced-precision menu).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs.base import ModelConfig
+from repro.models import ssm, transformer
+from repro.models import xlstm as xlstm_mod
+
+Array = jax.Array
+PyTree = Any
+
+STATE_KINDS = frozenset({"mamba", "mlstm", "slstm"})
+
+
+def _attn_cache(cfg: ModelConfig, n: int, batch: int, max_len: int,
+                quantized: bool) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if quantized:
+        return {"attn": {
+            "k": jnp.zeros((n, batch, max_len, hkv, hd), jnp.int8),
+            "v": jnp.zeros((n, batch, max_len, hkv, hd), jnp.int8),
+            "k_scale": jnp.zeros((n, batch, max_len, hkv), jnp.bfloat16),
+            "v_scale": jnp.zeros((n, batch, max_len, hkv), jnp.bfloat16)}}
+    return {"attn": {
+        "k": jnp.zeros((n, batch, max_len, hkv, hd), dt),
+        "v": jnp.zeros((n, batch, max_len, hkv, hd), dt)}}
+
+
+def _segment_caches(cfg: ModelConfig, batch: int, max_len: int,
+                    quantized: bool) -> list:
+    """The per-segment stacked cache pytree (zeros) — one entry per
+    ``transformer.block_pattern`` segment, leading axis = layers in the
+    segment (Zamba2's shared block stored unstacked, batch on axis 0)."""
+    dt = jnp.dtype(cfg.dtype)
+    caches: list = []
+    layer_idx = 0
+    for kind, count in transformer.block_pattern(cfg):
+        if kind in ("dense", "moe"):
+            caches.append(_attn_cache(cfg, count, batch, max_len, quantized))
+        elif kind == "shared_attn":
+            c = _attn_cache(cfg, 1, batch, max_len, quantized)
+            caches.append(compat.tree_map(lambda x: x[0], c))
+        elif kind == "mla":
+            m = cfg.mla
+            caches.append({"attn": {
+                "c_kv": jnp.zeros((count, batch, max_len, m.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((count, batch, max_len,
+                                     m.qk_rope_head_dim), dt)}})
+        elif kind == "mamba":
+            one = ssm.mamba2_cache_init(cfg, batch, dt)
+            caches.append(compat.tree_map(
+                lambda x: jnp.broadcast_to(x, (count,) + x.shape), one))
+        elif kind in ("mlstm", "slstm"):
+            one = xlstm_mod.xlstm_cache_init(cfg, layer_idx, batch, dt)
+            caches.append(compat.tree_map(
+                lambda x: jnp.broadcast_to(x, (count,) + x.shape), one))
+        else:
+            raise ValueError(kind)
+        layer_idx += count
+    return caches
+
+
+class CacheFamily:
+    """Base protocol: layout construction + serving-policy bits.
+
+    Subclasses set the policy attributes and implement the layout methods;
+    the scheduler and pool only ever consult these, never ``cfg.family`` or
+    ``cfg.kv_cache_dtype`` directly (grep-enforced by
+    ``tests/test_compat.py::test_cache_family_centralized``).
+    """
+
+    #: "token" (block = block_size token positions), "state" (block = one
+    #: sequence's whole recurrent state), or "encdec".
+    kind: str = "token"
+    #: May this config serve through ContinuousScheduler at all?
+    continuous_serveable: bool = True
+    #: May it serve through PagedPool?  When False, ``init_paged_cache``
+    #: raises with ``paged_unsupported_reason``.
+    paged_serveable: bool = True
+    #: Must prefill go in one shot (no chunk schedule)?  True where chunked
+    #: prefill would drop information: quantized caches re-read only exact
+    #: fp tensors of the current chunk, and SSM/xLSTM chunked prefill does
+    #: not thread the recurrent prefix state.
+    single_shot_prefill: bool = False
+    #: Do identical prompt prefixes share physical blocks (with CoW)?
+    shareable: bool = True
+    #: Does the prompt occupy the decode cache?  (enc-dec prompts are audio
+    #: frames feeding the encoder; the decoder row starts at BOS.)
+    prompt_in_decoder: bool = True
+    #: Does this family only make sense under the paged pool?
+    requires_paged: bool = False
+    paged_unsupported_reason: str = ""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- layout ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> PyTree:
+        """Contiguous (slot-pool / solo) cache pytree, zeros."""
+        raise NotImplementedError
+
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         slot_len: Optional[int] = None) -> PyTree:
+        """Block-pool cache pytree, zeros.  Every leaf carries the physical
+        block axis at position 1; ``num_blocks`` includes the sentinel."""
+        raise NotImplementedError
+
+    def _reject_paged(self) -> None:
+        cfg = self.cfg
+        raise ValueError(
+            f"paged KV cache unsupported for arch {cfg.name!r}: "
+            f"{self.paged_unsupported_reason} "
+            f"(family={cfg.family!r}, kv_cache_dtype={cfg.kv_cache_dtype!r})")
+
+    # -- geometry --------------------------------------------------------
+    def max_blocks(self, slot_len: int, block_size: int) -> int:
+        """Block-table width: physical blocks one sequence can hold."""
+        raise NotImplementedError
+
+    def blocks_for_prompt(self, prompt_len: int, block_size: int) -> int:
+        """Blocks a fresh request needs admitted (prompt + first token)."""
+        raise NotImplementedError
+
+    def validate_geometry(self, slot_len: int, block_size: int) -> None:
+        """Raise ValueError on a pool geometry this family cannot serve."""
+
+    def validate_prompt(self, prompt_len: int, slot_len: int) -> None:
+        """Raise ValueError on a prompt this family can never admit."""
+        if self.prompt_in_decoder and prompt_len >= slot_len:
+            raise ValueError(
+                f"prompt of {prompt_len} cannot fit a slot of {slot_len} "
+                "with room to decode")
+
+    # -- quantization hook ----------------------------------------------
+    def dequantize_block(self, block: PyTree) -> PyTree:
+        """Dequantize one block payload to compute dtype.  Identity for fp
+        families; the int8 family overrides this as the (stubbed) seam the
+        in-kernel dequant gather will consume."""
+        return block
+
+
+class DenseFamily(CacheFamily):
+    """Standard fp attention K/V — dense, MoE, MLA, VLM text stacks.
+
+    A paged block holds ``block_size`` token positions per layer/head; prefix
+    chains share blocks with copy-on-write.  MLA's latent cache is contiguous
+    only for now (paging it is a named ROADMAP gap), so ``paged_serveable``
+    follows the block kinds.
+    """
+
+    name = "dense"
+    kind = "token"
+    quantized = False
+
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        kinds = {k for k, _ in transformer.block_pattern(cfg)}
+        self.paged_serveable = kinds <= {"dense", "moe"}
+        if not self.paged_serveable:
+            self.paged_unsupported_reason = (
+                "needs standard fp attention caches in every block")
+
+    def init_cache(self, batch: int, max_len: int) -> list:
+        return _segment_caches(self.cfg, batch, max_len, self.quantized)
+
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         slot_len: Optional[int] = None) -> list:
+        if not self.paged_serveable:
+            self._reject_paged()
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        return [{"attn": {
+            "k": jnp.zeros((count, num_blocks, hkv, block_size, hd), dt),
+            "v": jnp.zeros((count, num_blocks, hkv, block_size, hd), dt)}}
+            for _, count in transformer.block_pattern(cfg)]
+
+    def max_blocks(self, slot_len: int, block_size: int) -> int:
+        return slot_len // block_size
+
+    def blocks_for_prompt(self, prompt_len: int, block_size: int) -> int:
+        return -(-(prompt_len + 1) // block_size)
+
+    def validate_geometry(self, slot_len: int, block_size: int) -> None:
+        if slot_len % block_size:
+            raise ValueError(
+                f"slot_len {slot_len} must be a multiple of block_size "
+                f"{block_size}")
+
+
+class DenseInt8Family(DenseFamily):
+    """Quantized (int8 + per-position scales) attention K/V.
+
+    Continuous-serveable with single-shot prefill: the quantized prefill
+    computes on the CURRENT chunk's exact fp tensors only — the quantized
+    prefix is never re-read during prefill — so a chunk schedule would
+    silently drop the prefix.  Paged serving is the registered follow-up:
+    it needs the dequant hook below lowered into the kernel gather step.
+    """
+
+    name = "dense_int8"
+    quantized = True
+    single_shot_prefill = True
+    shareable = False
+
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        self.paged_serveable = False
+        self.paged_unsupported_reason = (
+            "needs standard fp attention caches in every block")
+
+    def dequantize_block(self, block: PyTree) -> PyTree:
+        raise NotImplementedError(
+            "int8 paged blocks are a registered follow-up: dequantize with "
+            "the per-position k_scale/v_scale at the kernel gather step")
+
+
+class FixedStateFamily(CacheFamily):
+    """SSM / xLSTM / hybrid recurrent state (zamba2, xlstm configs).
+
+    Fixed-size state is a degenerate one-block "page": one physical block IS
+    a sequence's entire cache row — the recurrent state of every layer plus,
+    for hybrids, the shared-attention K/V region.  ``block_size`` is
+    irrelevant; the table is one column wide.  State mutates in place every
+    step, so blocks never share (refcount stays 1) and prefill must be
+    single-shot (the chunked SSD scan does not thread prefix state).
+    """
+
+    name = "fixed_state"
+    kind = "state"
+    single_shot_prefill = True
+    shareable = False
+
+    def init_cache(self, batch: int, max_len: int) -> list:
+        return _segment_caches(self.cfg, batch, max_len, False)
+
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         slot_len: Optional[int] = None) -> list:
+        if slot_len is None:
+            raise TypeError(
+                "fixed-state pools need slot_len: one block holds a whole "
+                "state row sized by it")
+        segs = self.init_cache(num_blocks, slot_len)
+        out = []
+        for (kind, _), c in zip(transformer.block_pattern(self.cfg), segs):
+            # the shared block is stored unstacked (block axis 0) in slot
+            # caches; re-add a unit layer axis so the pool contract holds
+            # (block axis at position 1 on every leaf)
+            out.append(compat.tree_map(lambda x: x[None], c)
+                       if kind == "shared_attn" else c)
+        return out
+
+    def max_blocks(self, slot_len: int, block_size: int) -> int:
+        return 1
+
+    def blocks_for_prompt(self, prompt_len: int, block_size: int) -> int:
+        return 1
+
+    def prompt_quantum(self) -> int:
+        """Single-shot prefill runs the chunked scan once over the whole
+        prompt, and the scan requires the length to divide into its chunk —
+        prompts must be ≤ this quantum or a multiple of it."""
+        qs = [sub.chunk for sub in (self.cfg.ssm, self.cfg.xlstm)
+              if sub is not None]
+        q = 1
+        for c in qs:
+            q = q * c // math.gcd(q, c)
+        return q
+
+    def validate_prompt(self, prompt_len: int, slot_len: int) -> None:
+        super().validate_prompt(prompt_len, slot_len)
+        q = self.prompt_quantum()
+        if prompt_len > q and prompt_len % q:
+            raise ValueError(
+                f"fixed-state prefill is single-shot through the chunked "
+                f"scan: prompt of {prompt_len} must be ≤ {q} or a multiple "
+                f"of {q}")
+
+
+class EncDecFamily(CacheFamily):
+    """Encoder–decoder (whisper): immutable encoder cross-K/V + decoder row.
+
+    The prompt is the audio (frame ids); the encoder is bidirectional, so
+    its output — and thus the cross-attention K/V — depends on *all* frames:
+    only a whole-audio exact match may share blocks, and whisper's fixed
+    padded window (``cfg.encoder_seq_len``) makes every prompt that exact
+    length.  A sequence's table row is ``S_enc // block_size`` immutable
+    cross blocks (shareable, refcounted, LRU-parked like dense prefixes)
+    plus one self-K/V row block that grows with decoded tokens.
+    """
+
+    name = "encdec"
+    kind = "encdec"
+    single_shot_prefill = True
+    prompt_in_decoder = False
+    requires_paged = True
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        n, s_enc = cfg.num_layers, cfg.encoder_seq_len
+        return {
+            "self": {"k": jnp.zeros((n, batch, max_len, hkv, hd), dt),
+                     "v": jnp.zeros((n, batch, max_len, hkv, hd), dt)},
+            "cross": {"k": jnp.zeros((n, batch, s_enc, hkv, hd), dt),
+                      "v": jnp.zeros((n, batch, s_enc, hkv, hd), dt)},
+        }
+
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         slot_len: Optional[int] = None) -> dict:
+        if slot_len is None:
+            raise TypeError(
+                "enc-dec pools need slot_len: each block carries a decoder "
+                "self-K/V row sized by it")
+        self.validate_geometry(slot_len, block_size)
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        n = cfg.num_layers
+        return {
+            "self": {
+                "k": jnp.zeros((n, num_blocks, slot_len, hkv, hd), dt),
+                "v": jnp.zeros((n, num_blocks, slot_len, hkv, hd), dt)},
+            "cross": {
+                "k": jnp.zeros((n, num_blocks, block_size, hkv, hd), dt),
+                "v": jnp.zeros((n, num_blocks, block_size, hkv, hd), dt)},
+        }
+
+    def cross_blocks(self, block_size: int) -> int:
+        return self.cfg.encoder_seq_len // block_size
+
+    def max_blocks(self, slot_len: int, block_size: int) -> int:
+        return self.cross_blocks(block_size) + 1
+
+    def blocks_for_prompt(self, prompt_len: int, block_size: int) -> int:
+        return self.cross_blocks(block_size) + 1
+
+    def validate_geometry(self, slot_len: int, block_size: int) -> None:
+        if self.cfg.encoder_seq_len % block_size:
+            raise ValueError(
+                f"encoder_seq_len {self.cfg.encoder_seq_len} must be a "
+                f"multiple of block_size {block_size} to page the encoder "
+                "output")
+
+    def validate_prompt(self, prompt_len: int, slot_len: int) -> None:
+        if prompt_len != self.cfg.encoder_seq_len:
+            raise ValueError(
+                f"enc-dec prompts are audio frame ids padded to the encoder "
+                f"window: expected exactly {self.cfg.encoder_seq_len} "
+                f"frames, got {prompt_len}")
+
+
+@functools.lru_cache(maxsize=None)
+def resolve(cfg: ModelConfig) -> CacheFamily:
+    """The cache family serving this config.  Cached per config so the
+    jitted step functions the scheduler builds around a family persist."""
+    if cfg.family == "encdec":
+        return EncDecFamily(cfg)
+    kinds = {k for k, _ in transformer.block_pattern(cfg)}
+    if kinds & STATE_KINDS:
+        return FixedStateFamily(cfg)
+    if cfg.kv_cache_dtype == "int8":
+        return DenseInt8Family(cfg)
+    return DenseFamily(cfg)

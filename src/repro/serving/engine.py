@@ -39,57 +39,17 @@ import jax.numpy as jnp
 
 from repro import compat, core
 from repro.configs.base import ModelConfig
-from repro.models import encdec, ssm, transformer
-from repro.models import xlstm as xlstm_mod
+from repro.models import encdec, transformer
+from repro.serving import cache_family
 
 Array = jax.Array
 PyTree = Any
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> list:
-    """Build the per-segment stacked cache pytree (zeros)."""
-    dt = jnp.dtype(cfg.dtype)
-    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-
-    def attn_cache(n):
-        if cfg.kv_cache_dtype == "int8":
-            return {"attn": {
-                "k": jnp.zeros((n, batch, max_len, hkv, hd), jnp.int8),
-                "v": jnp.zeros((n, batch, max_len, hkv, hd), jnp.int8),
-                "k_scale": jnp.zeros((n, batch, max_len, hkv), jnp.bfloat16),
-                "v_scale": jnp.zeros((n, batch, max_len, hkv), jnp.bfloat16)}}
-        return {"attn": {
-            "k": jnp.zeros((n, batch, max_len, hkv, hd), dt),
-            "v": jnp.zeros((n, batch, max_len, hkv, hd), dt)}}
-
-    caches: list = []
-    layer_idx = 0
-    for kind, count in transformer.block_pattern(cfg):
-        if kind in ("dense", "moe"):
-            caches.append(attn_cache(count))
-        elif kind == "shared_attn":
-            c = attn_cache(1)
-            caches.append(compat.tree_map(lambda x: x[0], c))
-        elif kind == "mla":
-            m = cfg.mla
-            caches.append({"attn": {
-                "c_kv": jnp.zeros((count, batch, max_len, m.kv_lora_rank), dt),
-                "k_rope": jnp.zeros((count, batch, max_len,
-                                     m.qk_rope_head_dim), dt)}})
-        elif kind == "mamba":
-            one = ssm.mamba2_cache_init(cfg, batch, dt)
-            caches.append(compat.tree_map(
-                lambda x: jnp.broadcast_to(x, (count,) + x.shape), one))
-        elif kind in ("mlstm", "slstm"):
-            one = xlstm_mod.xlstm_cache_init(
-                cfg, layer_idx if kind == "slstm" else layer_idx, batch, dt)
-            # pick representative layer of right kind
-            caches.append(compat.tree_map(
-                lambda x: jnp.broadcast_to(x, (count,) + x.shape), one))
-        else:
-            raise ValueError(kind)
-        layer_idx += count
-    return caches
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    """Build the contiguous cache pytree (zeros) — layout owned by the
+    config's cache family (``serving.cache_family``)."""
+    return cache_family.resolve(cfg).init_cache(batch, max_len)
 
 
 def prefill(params: PyTree, tokens: Array, cfg: ModelConfig, *,
@@ -186,10 +146,10 @@ def chunked_prefill(params: PyTree, tokens: Array, cfg: ModelConfig, *,
     natively (``dispatch.sdpa`` routes it; XLA chunked elsewhere).
     Returns (last_hidden [B, D], caches, length)."""
     b, t = tokens.shape
-    if cfg.kv_cache_dtype == "int8":
-        # int8 prefill computes on the CURRENT chunk's exact fp tensors only
-        # (the quantized prefix is never re-read during prefill), so a
-        # chunked int8 prefill would silently drop the prefix — go in whole
+    if cache_family.resolve(cfg).single_shot_prefill:
+        # the family's prefill would drop information chunked (int8 prefill
+        # computes on the current chunk's exact fp tensors only; SSM/xLSTM
+        # chunked prefill does not thread prefix state) — go in whole
         chunk = 0
     caches = init_cache(cfg, b, max_len)
     length = jnp.asarray(0, jnp.int32)
@@ -279,33 +239,26 @@ def decode_step_slots(params: PyTree, caches: list, slot_lens: Array,
 # through tables it is handed.
 # ---------------------------------------------------------------------------
 def paged_supported(cfg: ModelConfig) -> bool:
-    """Paged serving covers archs whose caches are all standard attention
-    K/V in a float dtype: every block kind must carry a [.., S, Hkv, D]
-    cache (no SSM/xLSTM recurrent state, no MLA latent cache) and int8
-    caches are out (their prefill computes on exact fp tensors only)."""
-    kinds = {kind for kind, _ in transformer.block_pattern(cfg)}
-    return kinds <= {"dense", "moe"} and cfg.kv_cache_dtype != "int8"
+    """Paged serving covers every config whose cache family implements the
+    block-pool layout: dense token blocks, fixed-size state rows, enc-dec
+    cross/self blocks.  int8 caches and MLA latent caches are the registered
+    follow-ups (``cache_family.DenseInt8Family.dequantize_block`` is the
+    seam)."""
+    return cache_family.resolve(cfg).paged_serveable
 
 
-def init_paged_cache(cfg: ModelConfig, num_blocks: int,
-                     block_size: int) -> list:
-    """Build the per-segment block-pool cache pytree (zeros).
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     slot_len: Optional[int] = None) -> PyTree:
+    """Build the block-pool cache pytree (zeros) for the config's family.
 
-    Leaves are [n_layers, P, Hkv, BS, D] — kernel-native page layout, NO
-    batch axis: the pool is shared by every sequence and block tables carry
-    the per-sequence mapping.  ``num_blocks`` counts physical blocks
-    including the sentinel block 0 (see ``serving.paged.PagedPool``)."""
-    if not paged_supported(cfg):
-        raise ValueError(
-            f"paged KV cache unsupported for arch {cfg.name!r}: needs "
-            "standard fp attention caches in every block "
-            f"(family={cfg.family!r}, kv_cache_dtype={cfg.kv_cache_dtype!r})")
-    dt = jnp.dtype(cfg.dtype)
-    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-    return [{"attn": {
-        "k": jnp.zeros((count, num_blocks, hkv, block_size, hd), dt),
-        "v": jnp.zeros((count, num_blocks, hkv, block_size, hd), dt)}}
-        for _, count in transformer.block_pattern(cfg)]
+    Dense leaves are [n_layers, P, Hkv, BS, D] — kernel-native page layout,
+    NO batch axis: the pool is shared by every sequence and block tables
+    carry the per-sequence mapping.  State/enc-dec families size per-block
+    rows by ``slot_len``.  Every family puts the physical-block axis at leaf
+    position 1; ``num_blocks`` counts physical blocks including the sentinel
+    block 0 (see ``serving.paged.PagedPool``)."""
+    return cache_family.resolve(cfg).init_paged_cache(
+        num_blocks, block_size, slot_len)
 
 
 def copy_paged_block(pools: list, src, dst) -> list:
@@ -367,6 +320,71 @@ def decode_step_paged(params: PyTree, pools: list, block_tables: Array,
 
 
 # ---------------------------------------------------------------------------
+# Fixed-state (SSM / xLSTM / hybrid) paged serving: one block = one
+# sequence's entire state row.  The pool layout is the contiguous slot-cache
+# layout with the batch axis serving as the block axis (shared-attention
+# segments carry a unit layer axis so every leaf keeps the block axis at
+# position 1 — the pool contract in ``serving.cache_family``).
+# ---------------------------------------------------------------------------
+def gather_state_rows(cfg: ModelConfig, pools: list, rows: Array) -> list:
+    """Gather pool rows ``rows`` [B] into a contiguous batch-B cache list —
+    the exact pytree ``init_cache(cfg, B, slot_len)`` produces, so the
+    ordinary slot-pool decode step runs on it unchanged."""
+    rows = jnp.asarray(rows, jnp.int32)
+    out: list = []
+    for (kind, _), c in zip(transformer.block_pattern(cfg), pools):
+        if kind == "shared_attn":
+            out.append(compat.tree_map(
+                lambda x: jnp.take(x[0], rows, axis=0), c))
+        else:
+            out.append(compat.tree_map(
+                lambda x: jnp.take(x, rows, axis=1), c))
+    return out
+
+
+def scatter_state_rows(cfg: ModelConfig, pools: list, caches: list,
+                       rows: Array) -> list:
+    """Write a contiguous batch-B cache list back into pool rows ``rows``
+    [B].  Out-of-range row indices are dropped — the scheduler routes
+    inactive slots out of bounds so a gather/decode over garbage rows never
+    writes anything back."""
+    rows = jnp.asarray(rows, jnp.int32)
+    out: list = []
+    for (kind, _), p, c in zip(transformer.block_pattern(cfg), pools, caches):
+        if kind == "shared_attn":
+            out.append(compat.tree_map(
+                lambda x, v: x.at[0, rows].set(v.astype(x.dtype),
+                                               mode="drop"), p, c))
+        else:
+            out.append(compat.tree_map(
+                lambda x, v: x.at[:, rows].set(v.astype(x.dtype),
+                                               mode="drop"), p, c))
+    return out
+
+
+def decode_step_state(params: PyTree, pools: list, rows: Array,
+                      active: Array, slot_lens: Array, tokens: Array,
+                      cfg: ModelConfig, *, rngs: Array, top_k: int = 5,
+                      temperature: float = 1.0):
+    """One decode step over a fixed-state block pool: gather each active
+    slot's state row, run the ordinary slot-pool decode, scatter the new
+    state back.  Inactive slots gather the (zero-initialized) sentinel row
+    and their writes are dropped, so their compute is discarded without
+    touching live state — and because rows are independent through the whole
+    network, the active slots' streams are bit-identical to solo decode."""
+    rows = jnp.asarray(rows, jnp.int32)
+    active = jnp.asarray(active, bool)
+    num_rows = compat.tree_leaves(pools)[0].shape[1]
+    caches = gather_state_rows(cfg, pools, jnp.where(active, rows, 0))
+    next_tok, new_caches, new_lens = decode_step_slots(
+        params, caches, slot_lens, tokens, cfg, rngs=rngs, top_k=top_k,
+        temperature=temperature)
+    new_pools = scatter_state_rows(
+        cfg, pools, new_caches, jnp.where(active, rows, num_rows))
+    return next_tok, new_pools, new_lens
+
+
+# ---------------------------------------------------------------------------
 # Encoder–decoder (whisper) serving.
 # ---------------------------------------------------------------------------
 def encdec_prefill(params: PyTree, frames: Array, bos_tokens: Array,
@@ -397,3 +415,141 @@ def encdec_decode_step(params: PyTree, caches: PyTree, cache_len: Array,
     logits = transformer.logits_last(params, hidden, cfg)
     next_tok, _ = core.topk_sample(rng, logits, top_k)
     return next_tok, new_caches, cache_len + 1
+
+
+# ---------------------------------------------------------------------------
+# Enc-dec paged serving: the prompt is the audio (frame ids); the encoder
+# output's cross-K/V projection is sliced into immutable, shareable pool
+# blocks, and each sequence additionally owns one growing decoder self-K/V
+# row block.  The scheduler's key property: a repeated same-audio request
+# adopts the cross blocks refcount++ and the encoder NEVER re-runs.
+# ---------------------------------------------------------------------------
+#: Decoder start token for served enc-dec requests.  Fixed — the prompt is
+#: the audio; every decoder row begins at the same BOS, so two same-audio
+#: requests differ only in their (rid, token-index) sample keys.
+ENCDEC_BOS = 0
+
+
+def encdec_frames_from_ids(ids, cfg: ModelConfig) -> Array:
+    """Deterministic stand-in audio features for serving workloads: frame id
+    ``i`` maps to the ``i``-th row of a sinusoidal table, so identical id
+    sequences are identical audio.  Returns frames [1, S_enc, D]."""
+    table = encdec.sinusoidal(cfg.vocab_size, cfg.d_model)
+    return table[jnp.asarray(ids, jnp.int32)][None]
+
+
+def encdec_prefill_cached(params: PyTree, cross: PyTree, bos_tokens: Array,
+                          cfg: ModelConfig, *, max_len: int):
+    """Prime a decoder cache from an already-computed cross-K/V projection
+    ``{k, v: [n, B, S_enc, Hkv, D]}`` — the zero-encoder-recompute path a
+    whole-audio prefix hit takes.  Bit-identical to ``encdec_prefill`` of
+    the same audio: the stored K/V are exactly what the fresh encode
+    produced, and attention over given K/V is the same computation either
+    way.  Returns (last_hidden [B, D], caches, length)."""
+    b = bos_tokens.shape[0]
+    caches = dict(cache_family.resolve(cfg).init_cache(b, max_len))
+    caches["cross"] = cross
+    hidden, new_caches = encdec.decode_hidden(
+        params, bos_tokens, None, cfg, caches=caches,
+        cache_len=jnp.asarray(0, jnp.int32))
+    return hidden[:, -1], new_caches, jnp.asarray(
+        bos_tokens.shape[1], jnp.int32)
+
+
+def encdec_decode_step_slots(params: PyTree, caches: PyTree,
+                             slot_lens: Array, tokens: Array,
+                             cfg: ModelConfig, *, rngs: Array,
+                             top_k: int = 5, temperature: float = 1.0):
+    """One continuous-batching decode step for enc-dec: tokens [B, 1],
+    per-slot decoder lengths [B] → (next_token [B], new caches, lens + 1).
+    Per-slot sampling keys, so streams are independent of batch neighbours —
+    the same scheduler-equivalence guarantee as ``decode_step_slots``."""
+    hidden, new_caches = encdec.decode_hidden(
+        params, tokens, None, cfg, caches=caches, cache_len=slot_lens)
+    logits = logits_from_hidden(params, hidden[:, -1], cfg)
+    next_tok = sample_per_slot(rngs, logits, top_k, temperature)
+    return next_tok, new_caches, slot_lens + 1
+
+
+def gather_encdec_rows(pools: PyTree, cross_tables: Array,
+                       self_rows: Array) -> PyTree:
+    """Assemble contiguous decoder caches from the block pool:
+    ``cross_tables`` [B, S_enc // BS] gathers and re-flattens the encoder
+    blocks, ``self_rows`` [B] picks each sequence's self-K/V row."""
+    cross_tables = jnp.asarray(cross_tables, jnp.int32)
+    self_rows = jnp.asarray(self_rows, jnp.int32)
+    b = cross_tables.shape[0]
+
+    def flat_cross(x):
+        g = x[:, cross_tables]                  # [n, B, nc, BS, Hkv, D]
+        n, _, nc, bs = g.shape[:4]
+        return g.reshape((n, b, nc * bs) + g.shape[4:])
+
+    return {
+        "self": compat.tree_map(lambda x: x[:, self_rows], pools["self"]),
+        "cross": compat.tree_map(flat_cross, pools["cross"]),
+    }
+
+
+def gather_encdec_cross(pools: PyTree, cross_bids: Array) -> PyTree:
+    """Re-flatten shared encoder blocks ``cross_bids`` [nc] into one
+    contiguous batch-1 cross projection ``{k, v: [n, 1, S_enc, Hkv, D]}`` —
+    the operand a whole-audio prefix hit hands ``encdec_prefill_cached``."""
+    bids = jnp.asarray(cross_bids, jnp.int32)
+
+    def flat(x):
+        g = x[:, bids]                          # [n, nc, BS, Hkv, D]
+        n, nc, bs = g.shape[:3]
+        return g.reshape((n, 1, nc * bs) + g.shape[3:])
+
+    return compat.tree_map(flat, pools["cross"])
+
+
+def install_encdec_row(pools: PyTree, caches: PyTree, cross_bids: Array,
+                       self_row: Array) -> PyTree:
+    """Scatter a freshly-prefilled batch-1 decoder cache into the pool:
+    the cross projection sliced into blocks ``cross_bids`` [nc] and the
+    self row into block ``self_row``.  Out-of-range indices are dropped —
+    a prefix-hit install passes out-of-range cross bids so the shared
+    (identical) blocks are simply not rewritten."""
+    cross_bids = jnp.asarray(cross_bids, jnp.int32)
+    self_row = jnp.asarray(self_row, jnp.int32).reshape((1,))
+    nc = cross_bids.shape[0]
+
+    def put_cross(x, v):
+        n, _, s_enc = v.shape[:3]
+        blocks = v.reshape((n, nc, s_enc // nc) + v.shape[3:])
+        return x.at[:, cross_bids].set(blocks.astype(x.dtype), mode="drop")
+
+    return {
+        "self": compat.tree_map(
+            lambda x, v: x.at[:, self_row].set(v.astype(x.dtype),
+                                               mode="drop"),
+            pools["self"], caches["self"]),
+        "cross": compat.tree_map(put_cross, pools["cross"],
+                                 caches["cross"]),
+    }
+
+
+def decode_step_encdec_paged(params: PyTree, pools: PyTree,
+                             cross_tables: Array, self_rows: Array,
+                             active: Array, slot_lens: Array, tokens: Array,
+                             cfg: ModelConfig, *, rngs: Array,
+                             top_k: int = 5, temperature: float = 1.0):
+    """One enc-dec decode step through the block pool: gather cross + self
+    rows, run the slot decode, scatter ONLY the self rows back (cross blocks
+    are immutable — possibly shared — and a decode step never changes
+    them).  Inactive slots gather the sentinel row and their writes drop."""
+    self_rows = jnp.asarray(self_rows, jnp.int32)
+    active = jnp.asarray(active, bool)
+    num_rows = compat.tree_leaves(pools)[0].shape[1]
+    caches = gather_encdec_rows(
+        pools, cross_tables, jnp.where(active, self_rows, 0))
+    next_tok, new_caches, new_lens = encdec_decode_step_slots(
+        params, caches, slot_lens, tokens, cfg, rngs=rngs, top_k=top_k,
+        temperature=temperature)
+    rows = jnp.where(active, self_rows, num_rows)
+    new_self = compat.tree_map(
+        lambda x, v: x.at[:, rows].set(v.astype(x.dtype), mode="drop"),
+        pools["self"], new_caches["self"])
+    return next_tok, {"self": new_self, "cross": pools["cross"]}, new_lens

@@ -29,7 +29,6 @@ a ``repro.serving.router.ReplicaRouter`` over several).
 """
 from __future__ import annotations
 
-import math
 from typing import Iterable, Optional
 
 from repro.obs import kernels as obs_kernels
@@ -183,7 +182,7 @@ class Engine:
             return False
         if not s.paged:
             return s.pool.free_slots == 0
-        need = math.ceil((prompt_len + 1) / s.pool.block_size)
+        need = s.pool.family.blocks_for_prompt(prompt_len, s.pool.block_size)
         return s.pool.free_blocks + s.pool.cached_blocks < need
 
 

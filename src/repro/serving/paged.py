@@ -66,9 +66,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import functools
+
 from repro import compat
 from repro.configs.base import ModelConfig
-from repro.serving import engine
+from repro.serving import cache_family, engine
 
 
 class DoubleFreeError(RuntimeError):
@@ -258,9 +260,20 @@ class SwappedSeq:
 
 # The copy-on-write and swap-in-restore primitives, jitted once per pool
 # shape (shapes recur, so jax.jit's signature cache is the right
-# granularity).
+# granularity).  They address blocks as ``leaf[:, bid]`` — valid for EVERY
+# cache family because the pool-layout contract puts the physical-block axis
+# at leaf position 1 (see ``serving.cache_family``).
 _copy_block = jax.jit(engine.copy_paged_block, donate_argnums=(0,))
 _write_block = jax.jit(engine.write_paged_block, donate_argnums=(0,))
+_install_encdec = jax.jit(engine.install_encdec_row, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _install_state(cfg: ModelConfig):
+    """The fixed-state prefill install: scatter a batch-1 contiguous cache
+    into one pool row.  Jitted per config (the block pattern is static)."""
+    return jax.jit(functools.partial(engine.scatter_state_rows, cfg),
+                   donate_argnums=(0,))
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -298,27 +311,29 @@ class PagedPool:
     def __init__(self, cfg: ModelConfig, num_slots: int, slot_len: int,
                  block_size: int, num_blocks: Optional[int] = None,
                  persistent_prefix: bool = True):
-        if slot_len % block_size:
-            raise ValueError(
-                f"slot_len {slot_len} must be a multiple of block_size "
-                f"{block_size} (bit-identity with the contiguous slot pool "
-                "needs the gathered page list to match the slot extent)")
         self.cfg = cfg
+        self.family = cache_family.resolve(cfg)
+        # dense: slot_len must be a multiple of block_size (bit-identity with
+        # the contiguous slot pool needs the gathered page list to match the
+        # slot extent); enc-dec: the encoder window must block-align
+        self.family.validate_geometry(slot_len, block_size)
         self.num_slots = num_slots
         self.slot_len = slot_len
         self.block_size = block_size
-        self.max_blocks = slot_len // block_size
+        self.max_blocks = self.family.max_blocks(slot_len, block_size)
         usable = (num_blocks if num_blocks is not None
                   else num_slots * self.max_blocks)
         if usable < 1:
             raise ValueError(f"need at least one usable block (got {usable})")
         # +1: physical block 0 is the reserved sentinel (dead table entries,
-        # idle-row garbage writes); the allocator never hands it out again
+        # idle batch rows' garbage reads/writes); the allocator never hands
+        # it out again
         self.alloc = BlockAllocator(usable + 1)
         self._sentinel = self.alloc.alloc()
         assert self._sentinel == 0
         self.index = PrefixIndex()
-        self.caches = engine.init_paged_cache(cfg, usable + 1, block_size)
+        self.caches = engine.init_paged_cache(cfg, usable + 1, block_size,
+                                              slot_len)
         self.lens = jnp.zeros((num_slots,), jnp.int32)
         self.tables = np.zeros((num_slots, self.max_blocks), np.int32)
         self._free_rows: deque[int] = deque(range(num_slots))
@@ -351,9 +366,10 @@ class PagedPool:
 
     def fits(self, prompt_len: int) -> bool:
         """Whether a prompt of this length can EVER be admitted: its worst
-        case block need (no sharing, prompt + first decode write) must fit
-        the usable pool, or the FIFO head would wait forever."""
-        return _ceil_div(prompt_len + 1, self.block_size) \
+        case block need (no sharing; dense: prompt + first decode write,
+        state: one row, enc-dec: encoder blocks + self row) must fit the
+        usable pool, or the FIFO head would wait forever."""
+        return self.family.blocks_for_prompt(prompt_len, self.block_size) \
             <= self.alloc.num_blocks - 1
 
     @property
@@ -426,9 +442,19 @@ class PagedPool:
         first decode write).  None when either is unavailable — the request
         stays queued.  At most ``len(prompt) - 1`` tokens are adopted: the
         final prompt position always prefills locally so there is a hidden
-        state to sample the first token from."""
+        state to sample the first token from.
+
+        Non-token families route to their own admission: fixed-state claims
+        one unshared row block; enc-dec matches the WHOLE audio against the
+        index (the encoder is bidirectional — a frame-prefix match would
+        adopt K/V computed from a different full audio) and claims a self
+        row block."""
         if not self._free_rows:
             return None
+        if self.family.kind == "state":
+            return self._admit_state(prompt)
+        if self.family.kind == "encdec":
+            return self._admit_encdec(prompt)
         toks = [int(t) for t in prompt]
         n = len(toks)
         bs = self.block_size
@@ -490,10 +516,109 @@ class PagedPool:
                                    self.alloc.free_blocks)
         return seq
 
+    @staticmethod
+    def _audio_key(toks, block_size: int) -> tuple:
+        """The whole-audio identity an enc-dec prompt shares under: the full
+        chain key over every frame block — it encodes the entire frame
+        sequence, so two prompts share it iff they are the same audio."""
+        return PrefixIndex.chain_keys(toks, block_size)[-1]
+
+    def _admit_state(self, prompt) -> Optional[PagedSeq]:
+        """Fixed-state admission: one fresh block (the whole state row), no
+        sharing — state mutates in place every decode step."""
+        if self.alloc.free_blocks < 1:
+            self._reclaim_until(1)
+        bid = self.alloc.alloc()
+        if bid is None:
+            return None
+        slot = self._free_rows.popleft()
+        self.tables[slot, 0] = bid
+        seq = PagedSeq(slot=slot,
+                       prompt=np.asarray([int(t) for t in prompt], np.int64),
+                       blocks=[bid], matched=0)
+        self.seqs[slot] = seq
+        self.min_free_blocks = min(self.min_free_blocks,
+                                   self.alloc.free_blocks)
+        return seq
+
+    def _admit_encdec(self, prompt) -> Optional[PagedSeq]:
+        """Enc-dec admission: adopt the whole audio's encoder blocks on an
+        exact match (refcount++, zero encoder recompute), else claim fresh
+        ones; always claim one self-K/V row block."""
+        toks = [int(t) for t in prompt]
+        bs = self.block_size
+        nc = self.max_blocks - 1
+        audio = self._audio_key(toks, bs)
+        shared: list[int] = []
+        for i in range(nc):
+            bid = self.index.lookup((audio, i))
+            if bid is None:
+                shared = []          # all-or-nothing by construction
+                break
+            shared.append(bid)
+        fresh_needed = (nc - len(shared)) + 1          # + the self row
+        if self.alloc.free_blocks < fresh_needed:
+            self._reclaim_until(fresh_needed, exclude=shared)
+        if self.alloc.free_blocks < fresh_needed:
+            return None
+        slot = self._free_rows.popleft()
+        for bid in shared:
+            if self.alloc.refcount(bid) == 1 and bid in self._cached:
+                self.prefix_cache_hits += 1
+            self.alloc.incref(bid)
+            self._touch(bid)
+        blocks = list(shared)
+        for _ in range(fresh_needed):
+            bid = self.alloc.alloc()
+            assert bid is not None          # gated above
+            blocks.append(bid)
+        matched = len(toks) if shared else 0
+        self.blocks_shared += len(shared)
+        self.tokens_reused += matched
+        self.tables[slot, :len(blocks)] = blocks
+        seq = PagedSeq(slot=slot, prompt=np.asarray(toks, np.int64),
+                       blocks=blocks, matched=matched)
+        self.seqs[slot] = seq
+        self.min_free_blocks = min(self.min_free_blocks,
+                                   self.alloc.free_blocks)
+        return seq
+
+    # -- prefill install (non-token families) -------------------------------
+    def install_state(self, seq: PagedSeq, caches) -> None:
+        """Scatter a freshly-prefilled batch-1 contiguous cache into the
+        sequence's state row block."""
+        rows = jnp.asarray([seq.blocks[0]], jnp.int32)
+        self.caches = _install_state(self.cfg)(self.caches, caches, rows)
+
+    def install_encdec(self, seq: PagedSeq, caches) -> None:
+        """Scatter a freshly-prefilled batch-1 decoder cache into the pool:
+        the self row always; the cross blocks only when this sequence
+        computed them (a prefix hit adopted identical shared blocks, which
+        must not be rewritten — their bids are routed out of range so the
+        jitted scatter drops them)."""
+        nc = self.max_blocks - 1
+        if seq.matched:
+            cross_bids = np.full(nc, self.alloc.num_blocks, np.int32)
+        else:
+            cross_bids = np.asarray(seq.blocks[:nc], np.int32)
+        self.caches = _install_encdec(
+            self.caches, caches, jnp.asarray(cross_bids),
+            jnp.asarray(seq.blocks[nc], jnp.int32))
+
     def finalize_prefill(self, seq: PagedSeq) -> None:
         """Register the finished prompt's block chain so later arrivals with
         the same prefix share it.  Full blocks key the exact-match chain;
-        a partial tail registers as a divergence-block candidate."""
+        a partial tail registers as a divergence-block candidate.  Enc-dec
+        registers the cross blocks under the whole-audio key; fixed-state
+        registers nothing (state never shares)."""
+        if self.family.kind == "state":
+            return
+        if self.family.kind == "encdec":
+            toks = [int(t) for t in seq.prompt]
+            audio = self._audio_key(toks, self.block_size)
+            for i, bid in enumerate(seq.blocks[:self.max_blocks - 1]):
+                self.index.register((audio, i), bid)
+            return
         toks = [int(t) for t in seq.prompt]
         bs = self.block_size
         key: tuple = ()
@@ -521,6 +646,11 @@ class PagedPool:
         on this to route a request where its prefix already lives;
         ``admit`` stays the only path that claims blocks."""
         toks = [int(t) for t in prompt]
+        if self.family.kind == "state":
+            return 0
+        if self.family.kind == "encdec":
+            audio = self._audio_key(toks, self.block_size)
+            return len(toks) if self.index.lookup((audio, 0)) is not None else 0
         cap = len(toks) - 1
         bs = self.block_size
         matched = 0
@@ -554,7 +684,9 @@ class PagedPool:
         means the pool is out of blocks even after reclaiming the prefix
         cache — the scheduler preempts a lower-priority sequence or evicts
         this one, returning its non-shared blocks in the same tick."""
-        seq = self.seqs[slot]
+        if self.family.kind != "token":
+            return True    # state rewrites in place; enc-dec self rows are
+        seq = self.seqs[slot]  # pre-sized to slot_len and cross is immutable
         bi = pos // self.block_size
         assert bi <= len(seq.blocks), (bi, len(seq.blocks))
         if bi < len(seq.blocks):

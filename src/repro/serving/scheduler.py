@@ -94,7 +94,7 @@ from repro.configs.base import ModelConfig
 from repro.obs import clock as obs_clock
 from repro.obs import kernels as obs_kernels
 from repro.obs import metrics as obs_metrics
-from repro.serving import engine
+from repro.serving import cache_family, engine
 
 Array = jax.Array
 
@@ -366,6 +366,44 @@ def _jitted_paged_steps(cfg: ModelConfig, top_k: int, temperature: float):
                     donate_argnums=(1,)))
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_state_steps(cfg: ModelConfig, top_k: int, temperature: float):
+    """Fixed-state paged decode: gather each active slot's state row, run
+    the ordinary slot decode, scatter back.  Same per-slot PRNG fold — the
+    stream is independent of where the state physically lives."""
+    def decode(params, pools, rows, active, lens, tokens, rids, produced,
+               base_rng):
+        keys = jax.vmap(lambda r, p: jax.random.fold_in(
+            jax.random.fold_in(base_rng, r), p))(rids, produced)
+        return engine.decode_step_state(params, pools, rows, active, lens,
+                                        tokens, cfg, rngs=keys, top_k=top_k,
+                                        temperature=temperature)
+
+    return jax.jit(decode, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_encdec_steps(cfg: ModelConfig, slot_len: int, top_k: int,
+                         temperature: float):
+    """Enc-dec paged steps: (decode, fresh prefill, prefix-hit prefill,
+    cross gather).  The two prefill forms produce bit-identical decoder
+    caches for the same audio — the cached one just skips the encoder."""
+    def decode(params, pools, cross_tables, self_rows, active, lens, tokens,
+               rids, produced, base_rng):
+        keys = jax.vmap(lambda r, p: jax.random.fold_in(
+            jax.random.fold_in(base_rng, r), p))(rids, produced)
+        return engine.decode_step_encdec_paged(
+            params, pools, cross_tables, self_rows, active, lens, tokens,
+            cfg, rngs=keys, top_k=top_k, temperature=temperature)
+
+    return (jax.jit(decode, donate_argnums=(1,)),
+            jax.jit(functools.partial(engine.encdec_prefill, cfg=cfg,
+                                      max_len=slot_len)),
+            jax.jit(functools.partial(engine.encdec_prefill_cached, cfg=cfg,
+                                      max_len=slot_len)),
+            jax.jit(engine.gather_encdec_cross))
+
+
 # ---------------------------------------------------------------------------
 # Slot pool.
 # ---------------------------------------------------------------------------
@@ -478,7 +516,13 @@ class ContinuousScheduler:
                  tracer=None, trace_pid: int = 0):
         self.params = params
         self.cfg = cfg
+        self.family = cache_family.resolve(cfg)
         self.paged = paged
+        if self.family.requires_paged and not paged:
+            raise ValueError(
+                f"{cfg.name!r} serves only in paged mode: the encoder output "
+                "pages as immutable shared blocks "
+                f"(family={self.family.name!r})")
         self.preempt = preempt
         self.clock = clock or obs_clock.get()
         self.tracer = tracer
@@ -494,9 +538,9 @@ class ContinuousScheduler:
         else:
             self.pool = SlotPool(cfg, num_slots, slot_len)
         self.prefill_chunk = max(1, prefill_chunk)
-        # int8 caches prefill on the exact fp tensors of the CURRENT chunk
-        # only (layers.attention_apply), so their prompts must go in whole
-        self._single_shot_prefill = cfg.kv_cache_dtype == "int8"
+        # a family whose prefill drops information when chunked (quantized
+        # caches, recurrent state) sends its prompts in whole
+        self._single_shot_prefill = self.family.single_shot_prefill
         self.top_k = top_k
         self.temperature = temperature
         self.base_rng = (base_rng if base_rng is not None
@@ -518,9 +562,17 @@ class ContinuousScheduler:
         self.tokens = jnp.zeros((num_slots,), jnp.int32)
         (self._decode, self._prefill_step, self._logits,
          self._sample) = _jitted_steps(cfg, top_k, float(temperature))
-        if paged:
+        if paged and self.family.kind == "token":
             (self._decode_paged, self._prefill_paged) = _jitted_paged_steps(
                 cfg, top_k, float(temperature))
+        elif paged and self.family.kind == "state":
+            self._decode_state = _jitted_state_steps(cfg, top_k,
+                                                     float(temperature))
+        elif paged and self.family.kind == "encdec":
+            (self._decode_encdec, self._encdec_prefill,
+             self._encdec_prefill_cached,
+             self._encdec_gather_cross) = _jitted_encdec_steps(
+                cfg, slot_len, top_k, float(temperature))
 
     # -- rng ----------------------------------------------------------------
     def _key(self, rid: int, token_index: int) -> Array:
@@ -596,10 +648,13 @@ class ContinuousScheduler:
         if req.max_new_tokens < 1:
             raise ValueError(f"request {req.rid}: max_new_tokens must be ≥ 1 "
                              f"(got {req.max_new_tokens})")
-        if len(req.prompt) >= self.pool.slot_len:
-            raise ValueError(
-                f"request {req.rid}: prompt of {len(req.prompt)} cannot fit a "
-                f"slot of {self.pool.slot_len} with room to decode")
+        try:
+            # family-specific admissibility: dense/state prompts must leave
+            # decode room in the slot; enc-dec prompts are audio frames that
+            # must fill the encoder window exactly
+            self.family.validate_prompt(len(req.prompt), self.pool.slot_len)
+        except ValueError as e:
+            raise ValueError(f"request {req.rid}: {e}") from None
         if self.paged and not self.pool.fits(len(req.prompt)):
             raise ValueError(
                 f"request {req.rid}: prompt of {len(req.prompt)} can never "
@@ -745,18 +800,39 @@ class ContinuousScheduler:
             if seq is None:
                 return False
             self.queue.remove(req)
-            self._prefill = {
-                "flight": _InFlight(req=req, result=result, slot=seq.slot,
-                                    remaining=req.max_new_tokens),
-                "seq": seq,
-                "length": jnp.asarray(seq.matched, jnp.int32),
-                "pos": seq.matched,
-                # prefill resumes at the first unmatched token — shared
-                # prefix blocks already hold bit-identical cache content
-                "sizes": deque(engine.prefill_schedule(
-                    len(req.prompt) - seq.matched, self.prefill_chunk)),
-                "last": None,
-            }
+            flight = _InFlight(req=req, result=result, slot=seq.slot,
+                               remaining=req.max_new_tokens)
+            if self.family.kind == "state":
+                # single-shot into a batch-1 scratch cache, installed into
+                # the sequence's state block at finish (the pool row is
+                # donated to the decode jit, so prefill can't write it live)
+                self._prefill = {
+                    "flight": flight, "seq": seq,
+                    "caches": engine.init_cache(self.cfg, 1,
+                                                self.pool.slot_len),
+                    "length": jnp.asarray(0, jnp.int32), "pos": 0,
+                    "sizes": deque([len(req.prompt)]), "last": None,
+                }
+            elif self.family.kind == "encdec":
+                # one shot: encode (or adopt the shared cross blocks) and
+                # prime the decoder row at BOS — see _advance_encdec_prefill
+                self._prefill = {
+                    "flight": flight, "seq": seq, "caches": None,
+                    "length": jnp.asarray(0, jnp.int32), "pos": 0,
+                    "sizes": deque([len(req.prompt)]), "last": None,
+                }
+            else:
+                self._prefill = {
+                    "flight": flight,
+                    "seq": seq,
+                    "length": jnp.asarray(seq.matched, jnp.int32),
+                    "pos": seq.matched,
+                    # prefill resumes at the first unmatched token — shared
+                    # prefix blocks already hold bit-identical cache content
+                    "sizes": deque(engine.prefill_schedule(
+                        len(req.prompt) - seq.matched, self.prefill_chunk)),
+                    "last": None,
+                }
             self._admitted(self._prefill["flight"])
             return True
         if self.pool.free_slots == 0:
@@ -894,6 +970,9 @@ class ContinuousScheduler:
         # everything at once when nobody is waiting on decode
         budget = max(1, self.pool.free_slots) if self.active else 10 ** 9
         pf = self._prefill
+        if self.paged and self.family.kind == "encdec":
+            self._advance_encdec_prefill(pf)
+            return
         prompt = pf["flight"].req.prompt
         while budget > 0 and pf["sizes"]:
             width = pf["sizes"].popleft()
@@ -902,7 +981,7 @@ class ContinuousScheduler:
                 "prefill_chunk", tid=self._tid(pf["flight"].req.rid),
                 pid=self._pid, args={"pos": pf["pos"], "width": width})
                 if self.tracer is not None else None)
-            if self.paged:
+            if self.paged and self.family.kind == "token":
                 # chunks write straight into the shared pool through this
                 # sequence's block-table row — no batch-1 scratch cache, no
                 # insert copy at the end
@@ -912,6 +991,9 @@ class ContinuousScheduler:
                         self.pool.device_row(pf["flight"].slot),
                         pf["length"], jnp.asarray(chunk))
             else:
+                # unpaged slots AND paged fixed-state: single-sequence
+                # prefill into the scratch cache (state installs into its
+                # pool block at finish)
                 pf["last"], pf["caches"], pf["length"] = self._prefill_step(
                     self.params, pf["caches"], pf["length"],
                     jnp.asarray(chunk))
@@ -922,6 +1004,37 @@ class ContinuousScheduler:
                 self.tracer.end(chunk_span)
         if pf["sizes"]:
             return
+        self._finish_prefill()
+
+    def _advance_encdec_prefill(self, pf: dict) -> None:
+        """One-shot enc-dec prefill: a whole-audio prefix hit gathers the
+        shared cross blocks and skips the encoder entirely; a miss encodes
+        the frames.  Both paths prime the decoder row at BOS and produce
+        bit-identical decoder caches for the same audio."""
+        flight = pf["flight"]
+        seq = pf["seq"]
+        bos = jnp.full((1, 1), engine.ENCDEC_BOS, jnp.int32)
+        span = (self.tracer.begin(
+            "prefill_chunk", tid=self._tid(flight.req.rid), pid=self._pid,
+            args={"pos": 0, "width": len(flight.req.prompt),
+                  "encoder_skipped": bool(seq.matched)})
+            if self.tracer is not None else None)
+        if seq.matched:
+            nc = self.pool.max_blocks - 1
+            cross = self._encdec_gather_cross(
+                self.pool.caches, jnp.asarray(seq.blocks[:nc], jnp.int32))
+            pf["last"], pf["caches"], pf["length"] = \
+                self._encdec_prefill_cached(self.params, cross, bos)
+        else:
+            frames = engine.encdec_frames_from_ids(flight.req.prompt,
+                                                   self.cfg)
+            pf["last"], pf["caches"], pf["length"] = self._encdec_prefill(
+                self.params, frames, bos)
+        pf["sizes"].clear()
+        pf["pos"] = len(flight.req.prompt)
+        self.prefill_chunks += 1
+        if span is not None:
+            self.tracer.end(span)
         self._finish_prefill()
 
     def _finish_prefill(self) -> None:
@@ -940,6 +1053,10 @@ class ContinuousScheduler:
             return
         if self.paged:
             slot = flight.slot               # row claimed at admission
+            if self.family.kind == "state":
+                self.pool.install_state(pf["seq"], pf["caches"])
+            elif self.family.kind == "encdec":
+                self.pool.install_encdec(pf["seq"], pf["caches"])
             self.pool.finalize_prefill(pf["seq"])
             self.pool.lens = self.pool.lens.at[slot].set(int(pf["length"]))
         else:
@@ -992,7 +1109,9 @@ class ContinuousScheduler:
             # step via compat.cost_analysis (lower+compile hits the jit
             # cache for shapes the step below compiles anyway)
             self._profiled = True
-            if self.paged:
+            if self.paged and self.family.kind != "token":
+                pass        # roofline hook covers the dense step shapes
+            elif self.paged:
                 obs_kernels.profile_jitted(
                     self._decode_paged, "decode_step_paged", self.params,
                     self.pool.caches,
@@ -1004,7 +1123,28 @@ class ContinuousScheduler:
                     self._decode, "decode_step", self.params,
                     self.pool.caches, self.pool.lens, self.tokens[:, None],
                     jnp.asarray(rids), jnp.asarray(produced), self.base_rng)
-        if self.paged:
+        if self.paged and self.family.kind == "state":
+            # each active slot decodes in its own state row; inactive slots
+            # gather the sentinel row and their writes drop
+            rows = np.zeros((self.pool.num_slots,), np.int32)
+            for s in self.active:
+                rows[s] = self.pool.seqs[s].blocks[0]
+            tok, self.pool.caches, new_lens = self._decode_state(
+                self.params, self.pool.caches, jnp.asarray(rows),
+                jnp.asarray(active_mask), self.pool.lens,
+                self.tokens[:, None], jnp.asarray(rids),
+                jnp.asarray(produced), self.base_rng)
+        elif self.paged and self.family.kind == "encdec":
+            # table row = [cross blocks..., self row]; cross is immutable so
+            # only the self rows scatter back
+            tables = self.pool.device_tables(self.active.keys())
+            nc = self.pool.max_blocks - 1
+            tok, self.pool.caches, new_lens = self._decode_encdec(
+                self.params, self.pool.caches, tables[:, :nc], tables[:, nc],
+                jnp.asarray(active_mask), self.pool.lens,
+                self.tokens[:, None], jnp.asarray(rids),
+                jnp.asarray(produced), self.base_rng)
+        elif self.paged:
             # non-active rows (idle OR mid-prefill) are masked to the
             # sentinel table row: their lens-0 garbage write must land in
             # block 0, never in a live block a prefill already filled

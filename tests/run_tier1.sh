@@ -1,0 +1,45 @@
+#!/bin/sh
+# Tier-1 suite in the split ROADMAP.md documents.
+#
+# A single `pytest -x -q` over the whole tree segfaults in XLA's
+# backend_compile at ~test 230 on the CPU CI container — identically on the
+# pristine seed tree, so it is cumulative-compile jaxlib flakiness, not a
+# test bug.  Every test passes when the suite runs in groups; this script IS
+# that split, so "run tier-1" stays one command and nothing after the crash
+# point gets silently skipped.  (Three groups since PR 8: the cache-family
+# suites compile enough fresh step functions that two halves re-crossed the
+# threshold.)
+#
+# Usage: tests/run_tier1.sh  [extra pytest args appended to EVERY group]
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONPATH
+
+echo "== tier-1 group 1: kernels, core, models, compat, docs, obs =="
+python -m pytest -x -q "$@" \
+    tests/kernels \
+    tests/test_attention_and_ce.py \
+    tests/test_compat.py \
+    tests/test_distributed.py \
+    tests/test_docs.py \
+    tests/test_models.py \
+    tests/test_obs.py \
+    tests/test_online_softmax.py
+
+echo "== tier-1 group 2: serving caches (continuous, families, paged) =="
+python -m pytest -x -q "$@" \
+    tests/test_serving_continuous.py \
+    tests/test_serving_families.py \
+    tests/test_serving_paged.py
+
+echo "== tier-1 group 3: router, slo, substrate, system, data, training =="
+python -m pytest -x -q "$@" \
+    tests/test_serving_router.py \
+    tests/test_serving_slo.py \
+    tests/test_substrate.py \
+    tests/test_system.py \
+    tests/test_text_data.py \
+    tests/test_training.py
+
+echo "tier-1: all groups green"

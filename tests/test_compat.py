@@ -195,6 +195,43 @@ def test_engine_loop_centralized():
     assert not offenders, "\n".join(offenders)
 
 
+# Cache layout is owned by repro.serving.cache_family: pool/slot tensor
+# construction and kv-cache-dtype policy checks anywhere else would fork the
+# layout contract the paged substrate (block axis at leaf position 1) and
+# the jitted steps are built on.  models/layers.py keys the quantized path
+# off the cache payload ("k_scale" in cache), not the config string.
+_CACHE_FAMILY_ONLY = (
+    ("kv_cache_dtype ==", "dtype policy lives in serving.cache_family"),
+    ("kv_cache_dtype !=", "dtype policy lives in serving.cache_family"),
+    ("jnp.zeros((n, batch", "slot-cache layout lives in serving.cache_family"),
+    ("jnp.zeros((count, num_blocks",
+     "pool-cache layout lives in serving.cache_family"),
+)
+
+
+def test_cache_family_centralized():
+    offenders = []
+    allowed = {os.path.join(SRC, "serving", "cache_family.py"),
+               os.path.join(SRC, "serving", "engine.py")}
+    for root, _, files in os.walk(SRC):
+        for name in files:
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(root, name)
+            if os.path.abspath(path) in {os.path.abspath(a) for a in allowed}:
+                continue
+            with open(path) as f:
+                for lineno, line in enumerate(f, 1):
+                    if "``" in line or line.lstrip().startswith("#"):
+                        continue
+                    for pat, why in _CACHE_FAMILY_ONLY:
+                        if pat in line:
+                            offenders.append(
+                                f"{os.path.relpath(path, REPO)}:{lineno}"
+                                f" [{pat!r} → {why}]")
+    assert not offenders, "\n".join(offenders)
+
+
 # Wall-clock access is owned by repro.obs.clock: every timestamp the serving
 # stack takes must go through the injectable clock, or the virtual-clock
 # tests (deterministic latencies) and the trace epoch silently diverge from

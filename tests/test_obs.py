@@ -235,6 +235,42 @@ def test_tracing_off_streams_bit_identical(model):
     assert rep_off.prefill_chunks == rep_on.prefill_chunks
 
 
+def test_tracer_incremental_flush_bounds_buffer(model, tmp_path):
+    """``flush_every=N`` keeps at most N events in memory over a real serve
+    while the file stays one valid, complete JSON array."""
+    params, cfg = model
+    path = tmp_path / "flushed_trace.json"
+    N = 16
+    tracer = obs_trace.Tracer(str(path), flush_every=N)
+    peak = 0
+    emit = tracer._emit
+
+    def spying_emit(entry):
+        nonlocal peak
+        emit(entry)
+        peak = max(peak, len(tracer._buf))
+
+    tracer._emit = spying_emit
+    rep = _engine(params, cfg, tracer=tracer).serve(_workload())
+    tail = tracer.close()
+    assert peak <= N, f"buffer peaked at {peak} events (bound {N})"
+    assert tracer.total_events > N, "workload too small to force a flush"
+    assert len(tail) < N                   # close returns only the remainder
+    with open(path) as f:
+        loaded = json.load(f)
+    assert len(loaded) == tracer.total_events
+    assert obs_report.validate(loaded) == []
+    tokens = [e for e in loaded if e["ph"] == "i" and e["name"] == "token"]
+    assert len(tokens) == sum(len(r.tokens) for r in rep.results)
+
+
+def test_tracer_flush_every_needs_path():
+    with pytest.raises(ValueError, match="path"):
+        obs_trace.Tracer(None, flush_every=4)
+    with pytest.raises(ValueError, match="flush_every"):
+        obs_trace.Tracer("/tmp/x.json", flush_every=0)
+
+
 # ---------------------------------------------------------------------------
 # Metrics registry.
 # ---------------------------------------------------------------------------

@@ -1,0 +1,276 @@
+"""Cache families (ISSUE 8): every cache shape through one paged substrate.
+
+The load-bearing claims:
+
+* **Fixed-state serves paged**: zamba2 (hybrid SSM) and xLSTM requests run
+  under ``--continuous --paged`` with the whole recurrent state as a single
+  refcounted block, and every token stream is bit-identical to the request
+  decoded alone — block indirection is a layout change, not a numerics
+  change (the same guarantee ISSUE 4 pinned for dense KV).
+* **Enc-dec shares encoder output**: repeated same-audio whisper requests
+  adopt the SAME physical encoder blocks (allocator refcount > 1 while both
+  are live, ``prefix_cache_hits`` when the LRU cache revives a finished
+  chain), skip the encoder entirely on a hit, and still stream bit-identical
+  to solo decodes.
+* **Family policy is enforced at the boundary**: state prompts must respect
+  the chunked scan's quantum, enc-dec prompts must be the whole audio, and
+  enc-dec refuses to serve unpaged (the shared encoder chain IS the paged
+  pool).
+* **Allocator invariants hold with fixed-state blocks in the mix**: random
+  admit/release churn over a fixed-state pool never aliases live state rows,
+  never hands out the sentinel, and keeps free+live partitioning the pool
+  (property test — real hypothesis where installed, the fixed-seed fallback
+  elsewhere).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                                    # offline fallback
+    from _hypothesis_compat import given, settings, st
+
+import repro.configs as configs
+from repro.models import encdec, layers as L, transformer
+from repro.serving import cache_family, engine, paged, scheduler
+
+SLOT_LEN = 48
+BLOCK = 8
+CHUNK = 8
+TOP_K = 5
+BASE_RNG = jax.random.PRNGKey(7)
+
+
+def _key(rid, step):
+    return jax.random.fold_in(jax.random.fold_in(BASE_RNG, rid), step)
+
+
+def _params(cfg):
+    init_fn = encdec.init if cfg.family == "encdec" else transformer.init
+    params, _ = L.split_params(init_fn(jax.random.PRNGKey(0), cfg))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Fixed-state (SSM / xLSTM): paged == unpaged == solo.
+# ---------------------------------------------------------------------------
+def _solo_state_decode(params, cfg, req):
+    """The request alone: chunked prefill + batch-1 decode — the reference
+    both the slot pool and the block pool must reproduce token-for-token."""
+    last, caches, ln = engine.chunked_prefill(
+        params, jnp.asarray(req.prompt)[None], cfg, max_len=SLOT_LEN)
+    logits = engine.logits_from_hidden(params, last, cfg)
+    tok = engine.sample_per_slot(_key(req.rid, 0)[None], logits, TOP_K)
+    tokens = [int(tok[0])]
+    lens = jnp.asarray([int(ln)], jnp.int32)
+    for step in range(1, req.max_new_tokens):
+        tok, caches, lens = engine.decode_step_slots(
+            params, caches, lens, tok[:, None], cfg,
+            rngs=_key(req.rid, step)[None], top_k=TOP_K)
+        tokens.append(int(tok[0]))
+    return tokens
+
+
+def _state_workload(cfg, quantum):
+    rng = np.random.default_rng(11)
+    # quantum-compliant lengths: ≤ q and a multiple of q
+    lens = [quantum // 2, quantum, quantum // 4 * 3]
+    return [scheduler.Request(rid=i,
+                              prompt=rng.integers(0, cfg.vocab_size, n),
+                              max_new_tokens=d, arrival_tick=i)
+            for i, (n, d) in enumerate(zip(lens, (5, 4, 6)))]
+
+
+@pytest.mark.parametrize("arch", ["zamba2_1p2b", "xlstm_125m"])
+@pytest.mark.parametrize("use_paged", [True, False])
+def test_fixed_state_serving_matches_solo(arch, use_paged):
+    cfg = configs.get_smoke(arch)
+    family = cache_family.resolve(cfg)
+    assert family.kind == "state" and family.continuous_serveable
+    params = _params(cfg)
+    requests = _state_workload(cfg, family.prompt_quantum())
+    expect = {r.rid: _solo_state_decode(params, cfg, r) for r in requests}
+
+    paged_kw = dict(paged=True, block_size=BLOCK) if use_paged else {}
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=2, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG, **paged_kw)
+    report = sched.run(requests)
+    got = {r.rid: r.tokens for r in report.results}
+    for rid, toks in expect.items():
+        assert got[rid] == toks, (
+            f"request {rid} diverged under {'paged' if use_paged else 'slot'}"
+            f" fixed-state serving")
+    if use_paged:
+        # one block per sequence, never shared, all returned
+        p = report.paged
+        assert p["blocks_shared"] == 0 and p["cow_copies"] == 0
+        assert p["free_blocks"] + p["cached_blocks"] == p["num_blocks"]
+
+
+def test_fixed_state_prompt_quantum_enforced():
+    cfg = configs.get_smoke("zamba2_1p2b")
+    family = cache_family.resolve(cfg)
+    q = family.prompt_quantum()
+    sched = scheduler.ContinuousScheduler(
+        _params(cfg), cfg, num_slots=2, slot_len=SLOT_LEN,
+        prefill_chunk=CHUNK, top_k=TOP_K, base_rng=BASE_RNG,
+        paged=True, block_size=BLOCK)
+    with pytest.raises(ValueError, match=f"multiple of {q}"):
+        sched.submit(scheduler.Request(
+            rid=0, prompt=np.zeros(q + 1, np.int64), max_new_tokens=2))
+
+
+# ---------------------------------------------------------------------------
+# Enc-dec (whisper): encoder-output sharing + bit-identity.
+# ---------------------------------------------------------------------------
+def _solo_encdec_decode(params, cfg, req):
+    frames = engine.encdec_frames_from_ids(np.asarray(req.prompt), cfg)
+    bos = jnp.full((1, 1), engine.ENCDEC_BOS, jnp.int32)
+    last, caches, ln = engine.encdec_prefill(params, frames, bos, cfg,
+                                             max_len=SLOT_LEN)
+    logits = engine.logits_from_hidden(params, last, cfg)
+    tok = engine.sample_per_slot(_key(req.rid, 0)[None], logits, TOP_K)
+    tokens = [int(tok[0])]
+    lens = jnp.asarray([int(ln)], jnp.int32)
+    for step in range(1, req.max_new_tokens):
+        tok, caches, lens = engine.encdec_decode_step_slots(
+            params, caches, lens, tok[:, None], cfg,
+            rngs=_key(req.rid, step)[None], top_k=TOP_K)
+        tokens.append(int(tok[0]))
+    return tokens
+
+
+@pytest.fixture(scope="module")
+def whisper():
+    cfg = configs.get_smoke("whisper_small")
+    return _params(cfg), cfg
+
+
+def _audio_requests(cfg):
+    """Four requests over two distinct audios: 0 and 1 share audio A and
+    arrive together (live sharing), 3 repeats audio B long after 2 finished
+    (LRU-cache revival)."""
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, cfg.vocab_size, cfg.encoder_seq_len)
+    b = rng.integers(0, cfg.vocab_size, cfg.encoder_seq_len)
+    spec = [(0, a, 5, 0), (1, a, 4, 0), (2, b, 6, 1), (3, b, 3, 40)]
+    return [scheduler.Request(rid=r, prompt=audio.copy(), max_new_tokens=n,
+                              arrival_tick=t) for r, audio, n, t in spec]
+
+
+def test_encdec_paged_shares_encoder_blocks_bit_identically(whisper):
+    """The acceptance scenario: repeated same-audio requests share encoder
+    blocks (refcount > 1 while both are live), skip the encoder entirely,
+    and every stream still equals the request running alone."""
+    params, cfg = whisper
+    requests = _audio_requests(cfg)
+    expect = {r.rid: _solo_encdec_decode(params, cfg, r) for r in requests}
+
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=2, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG, paged=True, block_size=BLOCK,
+        num_blocks=4 * (cfg.encoder_seq_len // BLOCK + 1))
+    # count encoder invocations through the two prefill paths: a prefix hit
+    # must take the cached path (zero encoder recompute)
+    calls = {"fresh": 0, "cached": 0}
+    fresh_fn, cached_fn = sched._encdec_prefill, sched._encdec_prefill_cached
+
+    def counting_fresh(*a, **kw):
+        calls["fresh"] += 1
+        return fresh_fn(*a, **kw)
+
+    def counting_cached(*a, **kw):
+        calls["cached"] += 1
+        return cached_fn(*a, **kw)
+
+    sched._encdec_prefill = counting_fresh
+    sched._encdec_prefill_cached = counting_cached
+
+    for r in requests:
+        sched.submit(r)
+    nc = cfg.encoder_seq_len // BLOCK
+    saw_live_sharing = False
+    for _ in range(10_000):
+        if not sched.busy:
+            break
+        sched.tick()
+        live = list(sched.pool.seqs.values())
+        if len(live) == 2 and live[0].blocks[:nc] == live[1].blocks[:nc]:
+            # both same-audio sequences hold the same physical chain
+            assert all(sched.pool.alloc.refcount(bid) > 1
+                       for bid in live[0].blocks[:nc])
+            saw_live_sharing = True
+    assert not sched.busy, "serve did not drain"
+    assert saw_live_sharing, "same-audio requests never shared live blocks"
+
+    got = {r.rid: r.tokens for r in sched.finished}
+    for rid, toks in expect.items():
+        assert got[rid] == toks, f"request {rid} diverged under paged enc-dec"
+
+    # two distinct audios → exactly two encoder runs; the two repeats took
+    # the cached path (one via live sharing, one via LRU revival)
+    assert calls["fresh"] == 2 and calls["cached"] == 2
+    st = sched.pool.stats()
+    assert st["blocks_shared"] == 2 * nc
+    assert st["tokens_reused"] == 2 * cfg.encoder_seq_len
+    assert st["prefix_cache_hits"] >= nc        # rid 3 revived B's chain
+
+
+def test_encdec_refuses_unpaged(whisper):
+    params, cfg = whisper
+    with pytest.raises(ValueError, match="paged"):
+        scheduler.ContinuousScheduler(
+            params, cfg, num_slots=2, slot_len=SLOT_LEN,
+            prefill_chunk=CHUNK, top_k=TOP_K, base_rng=BASE_RNG)
+
+
+def test_encdec_prompt_must_be_whole_audio(whisper):
+    params, cfg = whisper
+    sched = scheduler.ContinuousScheduler(
+        params, cfg, num_slots=2, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+        top_k=TOP_K, base_rng=BASE_RNG, paged=True, block_size=BLOCK)
+    with pytest.raises(ValueError, match=str(cfg.encoder_seq_len)):
+        sched.submit(scheduler.Request(
+            rid=0, prompt=np.zeros(cfg.encoder_seq_len - 1, np.int64),
+            max_new_tokens=2))
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariants with fixed-state blocks in the mix (property test).
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=2, max_value=6),
+       st.lists(st.integers(min_value=0, max_value=2 ** 31 - 1),
+                min_size=0, max_size=60))
+def test_fixed_state_pool_invariants_under_churn(num_slots, actions):
+    """Random admit/release churn over a fixed-state pool: every live
+    sequence holds exactly one unshared non-sentinel block, no two live
+    sequences alias a block, and free+live always partitions the pool."""
+    cfg = configs.get_smoke("zamba2_1p2b")
+    pool = paged.PagedPool(cfg, num_slots=num_slots, slot_len=SLOT_LEN,
+                           block_size=BLOCK, num_blocks=num_slots)
+    rng = np.random.default_rng(7)
+    for a in actions:
+        if a % 2 == 0:
+            seq = pool.admit(rng.integers(0, cfg.vocab_size, 8))
+            if seq is None:
+                assert pool.free_slots == 0 or pool.free_blocks == 0
+            else:
+                pool.finalize_prefill(seq)
+        elif pool.seqs:
+            slots = sorted(pool.seqs)
+            pool.release(slots[(a // 2) % len(slots)])
+        pool.alloc.check_invariants()
+        held = [s.blocks[0] for s in pool.seqs.values()]
+        assert len(held) == len(set(held)), "live state rows alias"
+        assert all(bid != 0 for bid in held), "sentinel handed out"
+        for bid in held:
+            assert pool.alloc.refcount(bid) == 1, "state blocks never share"
+        # fixed-state registers nothing in the prefix index → no cached
+        # blocks; free + one-per-live-seq covers the usable pool exactly
+        assert pool.cached_blocks == 0
+        assert pool.free_blocks + len(held) == pool.alloc.num_blocks - 1

@@ -202,12 +202,20 @@ def test_paged_submit_rejects_never_admissible_prompt(model):
 
 
 def test_paged_rejects_unsupported_archs():
-    cfg = configs.get_smoke("zamba2_1p2b")      # mamba caches can't page
-    with pytest.raises(ValueError, match="paged KV cache unsupported"):
-        engine.init_paged_cache(cfg, num_blocks=4, block_size=8)
     cfg8 = configs.get_smoke("smollm_360m").replace(kv_cache_dtype="int8")
     with pytest.raises(ValueError, match="paged KV cache unsupported"):
         engine.init_paged_cache(cfg8, num_blocks=4, block_size=8)
+
+
+def test_paged_fixed_state_pool_needs_slot_len():
+    """zamba2 pages since the cache-family refactor — its pool tensor is the
+    slot cache itself, so building it requires the slot length."""
+    cfg = configs.get_smoke("zamba2_1p2b")
+    with pytest.raises(TypeError, match="slot_len"):
+        engine.init_paged_cache(cfg, num_blocks=4, block_size=8)
+    pools = engine.init_paged_cache(cfg, num_blocks=4, block_size=8,
+                                    slot_len=SLOT_LEN)
+    assert isinstance(pools, list) and pools
 
 
 # ---------------------------------------------------------------------------
