@@ -44,6 +44,8 @@ import dataclasses
 
 import jax
 
+from benchmarks import common
+
 
 def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
         preempt: bool = True, replicas: int = 0,
@@ -227,11 +229,8 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
             on_rates.append(rate_on)
         if was_enabled:
             obs_metrics.enable()
-        def _fast_half(rates):
-            top = sorted(rates, reverse=True)[:max(len(rates) // 2, 1)]
-            return sum(top) / len(top)
-
-        fast_on, fast_off = _fast_half(on_rates), _fast_half(off_rates)
+        fast_on = common.fastest_half_mean(on_rates, bigger_is_faster=True)
+        fast_off = common.fastest_half_mean(off_rates, bigger_is_faster=True)
         overhead = (fast_off / max(fast_on, 1e-9) - 1.0) * 100.0
         obs_row = (1e6 / max(fast_on, 1e-9),
                    f"overhead={overhead:+.1f}% events={events}")

@@ -12,6 +12,12 @@ from typing import Callable
 
 import jax
 
+# The regression sentry and the --obs overhead harness must agree on what
+# "the uncontended cost" means, so both use the same estimator: contention
+# noise on a shared box is strictly additive, making the mean of the
+# fastest half of a sample window a robust stand-in for the clean figure.
+from repro.obs.regress import fastest_half_mean  # noqa: F401  (re-export)
+
 
 def time_fn(fn: Callable, *args, warmup: int = 2, reps: int = 5) -> float:
     """Median wall-time of ``fn(*args)`` in microseconds (jit + blocked)."""

@@ -21,6 +21,19 @@ rows plus the probed backend capabilities to a results file.
 EXPERIMENTS.md-style markdown table (name | baseline | candidate | Δ%),
 flagging rows present on only one side and any env mismatch — paste it into
 EXPERIMENTS.md as the record of a before/after run.
+
+``--history PATH`` (or ``REPRO_BENCH_HISTORY``) additionally appends every
+``--json`` run as one record to the append-only JSONL history store
+(``repro.obs.history``), keyed by row name + env fingerprint.
+
+``check`` is the CI regression gate: it takes a candidate run (``--from
+results.json``, or runs the named benches itself), compares each row
+against the noise-aware baseline built from the last K same-env history
+records (``repro.obs.regress``: median + fastest-half mean, per-row
+relative thresholds), prints the verdict table, and exits nonzero iff any
+row regressed.  ``--update-baseline`` records the candidate into history
+(and exits 0) — how a fresh environment seeds its baseline and how an
+accepted perf change becomes the new normal.
 """
 from __future__ import annotations
 
@@ -98,10 +111,16 @@ def _report_main(argv) -> int:
     return 0
 
 
-def main(argv=None) -> int:
-    argv = list(sys.argv[1:] if argv is None else argv)
-    if argv and argv[0] == "report":
-        return _report_main(argv[1:])
+def _capability_env() -> dict:
+    from repro import compat
+    caps = compat.capabilities()
+    return {"backend": caps.backend,
+            "jax_version": caps.jax_version,
+            "device_count": caps.device_count,
+            "pallas_native": caps.pallas_native}
+
+
+def _bench_mods() -> dict:
     from benchmarks import (
         bench_attention,
         bench_chunked_ce,
@@ -110,9 +129,7 @@ def main(argv=None) -> int:
         bench_softmax_topk,
         bench_topk_sweep,
     )
-    from benchmarks.common import emit
-
-    mods = {
+    return {
         "softmax": bench_softmax,
         "softmax_topk": bench_softmax_topk,
         "topk_sweep": bench_topk_sweep,
@@ -120,6 +137,96 @@ def main(argv=None) -> int:
         "chunked_ce": bench_chunked_ce,
         "serving": bench_serving,
     }
+
+
+def _collect_rows(benches, *, smoke: bool) -> list:
+    """Run the named benches (default kwargs) and return their rows."""
+    mods = _bench_mods()
+    unknown = [b for b in benches if b not in mods]
+    if unknown:
+        raise SystemExit(f"unknown bench(es) {unknown}; "
+                         f"choose from {list(mods)}")
+    rows = []
+    for name in benches or list(mods):
+        rows.extend(mods[name].run(smoke=smoke))
+    return rows
+
+
+def _check_main(argv) -> int:
+    """``run.py check``: gate a candidate run against the history store."""
+    from repro.obs import history, regress
+
+    ap = argparse.ArgumentParser(
+        prog="run.py check",
+        description="Noise-aware regression gate: compare a candidate run "
+                    "against the per-row baseline from the last K same-env "
+                    "history records; exit 1 iff any row regressed.")
+    ap.add_argument("benches", nargs="*", metavar="bench",
+                    help="benches to run as the candidate (ignored with "
+                         "--from)")
+    ap.add_argument("--from", dest="from_json", metavar="RESULTS.json",
+                    default=None,
+                    help="use a recorded --json results file as the "
+                         "candidate instead of running benches")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the candidate benches in smoke mode")
+    ap.add_argument("--history", metavar="PATH", default=None,
+                    help="history store (default: $REPRO_BENCH_HISTORY, "
+                         f"then {history.DEFAULT_PATH})")
+    ap.add_argument("--k", type=int, default=regress.DEFAULT_K,
+                    help="baseline window: last K same-env records "
+                         "(default %(default)s)")
+    ap.add_argument("--min-records", type=int,
+                    default=regress.DEFAULT_MIN_RECORDS,
+                    help="records required before a row has a baseline "
+                         "(default %(default)s; fewer → no-baseline, "
+                         "never a failure)")
+    ap.add_argument("--threshold", type=float, default=None, metavar="PCT",
+                    help="override the per-row relative thresholds with one "
+                         "global band, in percent (e.g. 30)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="append the candidate to the history store and "
+                         "exit 0 — seeds a fresh env's baseline / accepts "
+                         "a perf change as the new normal")
+    args = ap.parse_args(argv)
+
+    if args.from_json:
+        data = _load_results(args.from_json)
+        rows = data["rows"]
+        env, smoke = data.get("env", {}), bool(data.get("smoke"))
+        label = os.path.basename(args.from_json)
+    else:
+        rows = _collect_rows(args.benches, smoke=args.smoke)
+        env, smoke = _capability_env(), bool(args.smoke)
+        label = "check:" + ",".join(args.benches or ["all"])
+
+    path = history.history_path(args.history, default=history.DEFAULT_PATH)
+    store = history.HistoryStore(path)
+    fp = history.fingerprint(env, smoke=smoke)
+    threshold = args.threshold / 100.0 if args.threshold is not None else None
+    verdicts = regress.check_rows(
+        rows, store, env, smoke=smoke, k=args.k,
+        min_records=args.min_records, threshold=threshold)
+    sys.stdout.write(regress.render(verdicts, fp=fp))
+    if store.skipped:
+        print(f"(history: skipped {store.skipped} unparseable lines in "
+              f"{path})", file=sys.stderr)
+    if args.update_baseline:
+        store.append(env, rows, smoke=smoke, label=label)
+        print(f"baseline updated: recorded {len(list(rows))} rows → {path}")
+        return 0
+    return 1 if regress.regressions(verdicts) else 0
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "report":
+        return _report_main(argv[1:])
+    if argv and argv[0] == "check":
+        return _check_main(argv[1:])
+    from benchmarks.common import emit
+
+    mods = _bench_mods()
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("benches", nargs="*", metavar="bench",
                     help=f"subset to run (default: all): {', '.join(mods)}")
@@ -161,6 +268,11 @@ def main(argv=None) -> int:
                          "payload also records the metrics snapshot")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + backend capabilities to PATH")
+    ap.add_argument("--history", metavar="PATH", default=None,
+                    help="append this run to the JSONL history store "
+                         "(also honoured via $REPRO_BENCH_HISTORY); "
+                         "requires --json semantics, so rows are recorded "
+                         "even without a results file")
     args = ap.parse_args(argv)
     unknown = [b for b in args.benches if b not in mods]
     if unknown:
@@ -185,18 +297,14 @@ def main(argv=None) -> int:
                 kwargs["arch"] = args.arch
         rows.extend(mods[name].run(smoke=args.smoke, **kwargs))
     emit(rows)
+    from repro.obs import history
+    hist_path = history.history_path(args.history)
+    if args.json or hist_path:
+        env = _capability_env()
+        row_dicts = [{"name": n, "us_per_call": round(us, 2), "derived": d}
+                     for n, us, d in rows]
     if args.json:
-        from repro import compat
-        caps = compat.capabilities()
-        payload = {
-            "smoke": bool(args.smoke),
-            "env": {"backend": caps.backend,
-                    "jax_version": caps.jax_version,
-                    "device_count": caps.device_count,
-                    "pallas_native": caps.pallas_native},
-            "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
-                     for n, us, d in rows],
-        }
+        payload = {"smoke": bool(args.smoke), "env": env, "rows": row_dicts}
         if args.obs:
             from repro.obs import metrics as obs_metrics
             payload["metrics"] = obs_metrics.snapshot()
@@ -204,6 +312,12 @@ def main(argv=None) -> int:
                     exist_ok=True)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
+    if hist_path:
+        history.HistoryStore(hist_path).append(
+            env, row_dicts, smoke=bool(args.smoke),
+            label="run:" + ",".join(args.benches or ["all"]))
+        print(f"history: recorded {len(row_dicts)} rows → {hist_path}",
+              file=sys.stderr)
     return 0
 
 

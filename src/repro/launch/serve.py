@@ -26,6 +26,7 @@ online-softmax + top-k, sample.
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
@@ -128,7 +129,21 @@ def _continuous(args, cfg, params) -> int:
     if args.metrics:
         obs_metrics.enable()
         obs_kernels.enable_profiling()
-    tracer = obs_trace.Tracer(args.trace) if args.trace else None
+    # --trace FILE shares one Tracer across replicas (pids split the
+    # tracks); --trace DIR/ writes replica{i}.json per replica plus a
+    # clock-aligned merged.json via repro.obs.merge
+    trace_dir = None
+    tracer = None
+    tracers = None
+    if args.trace:
+        if args.trace.endswith(os.sep) or os.path.isdir(args.trace):
+            trace_dir = args.trace.rstrip(os.sep) or os.sep
+            os.makedirs(trace_dir, exist_ok=True)
+            tracers = [obs_trace.Tracer(
+                           os.path.join(trace_dir, f"replica{i}.json"))
+                       for i in range(args.replicas)]
+        else:
+            tracer = obs_trace.Tracer(args.trace)
     router = ReplicaRouter(
         params, cfg, replicas=args.replicas,
         affinity=not args.no_affinity,
@@ -137,10 +152,20 @@ def _continuous(args, cfg, params) -> int:
         base_rng=jax.random.PRNGKey(0), paged=args.paged,
         block_size=args.block_size,
         num_blocks=args.blocks or None,
-        preempt=not args.no_preempt, tracer=tracer)
+        preempt=not args.no_preempt, tracer=tracer, tracers=tracers)
     report = router.serve(requests)
     if tracer is not None:
         tracer.close()
+    merged_path = None
+    if tracers is not None:
+        for t in tracers:
+            t.close()
+        from repro.obs import merge as obs_merge
+        merged_path = os.path.join(trace_dir, "merged.json")
+        obs_merge.merge_traces(
+            [os.path.join(trace_dir, f"replica{i}.json")
+             for i in range(args.replicas)],
+            out=merged_path)
 
     pct = report.latency_percentiles((50, 95))
     baseline = report.baseline_occupancy(args.slots * args.replicas)
@@ -213,11 +238,23 @@ def _continuous(args, cfg, params) -> int:
         for label, cost in prof["costs"].items():
             print(f"kernel cost: {label} flops={cost['flops']:.4g} "
                   f"bytes={cost['bytes_accessed']:.4g}")
-        print(f"metrics: {len(obs_metrics.snapshot())} instruments recorded")
+        snap = obs_metrics.snapshot()
+        for mname, rec in snap.items():
+            if rec.get("type") != "histogram":
+                continue
+            print(f"metric {mname}: n={rec['count']} "
+                  f"mean={rec['mean']:.4g} p50={rec['p50']:.4g} "
+                  f"p95={rec['p95']:.4g}")
+        print(f"metrics: {len(snap)} instruments recorded")
     if tracer is not None:
         print(f"trace: {len(tracer.events)} events → {args.trace} "
               f"(open in Perfetto, or: python -m repro.obs.report "
               f"{args.trace})")
+    if merged_path is not None:
+        print(f"trace: {args.replicas} per-replica files in {trace_dir}"
+              f"{os.sep} → merged view {merged_path} "
+              f"(open in Perfetto, or: python -m repro.obs.report "
+              f"{merged_path})")
     if report.occupancy <= baseline:
         print("WARNING: occupancy did not beat the drain-and-refill baseline")
         return 1
@@ -279,7 +316,10 @@ def main(argv=None):
     ap.add_argument("--trace", default="",
                     help="write request-lifecycle + scheduler spans to this "
                          "Chrome trace_event file (continuous mode; open in "
-                         "Perfetto or summarize with repro.obs.report)")
+                         "Perfetto or summarize with repro.obs.report); a "
+                         "directory (trailing '/' or existing dir) writes "
+                         "one replica{i}.json per replica plus a "
+                         "clock-aligned merged.json")
     ap.add_argument("--metrics", action="store_true",
                     help="enable the repro.obs metrics registry + kernel "
                          "cost profiling; prints dispatch paths and a "

@@ -16,10 +16,17 @@ Four seams, all stdlib-only at import time:
 - :mod:`repro.obs.kernels` — records which dispatch path each op resolved
   to, the autotune decisions used, and XLA cost-analysis FLOPs/bytes for
   compiled serving steps.
+- :mod:`repro.obs.history` / :mod:`repro.obs.regress` — the performance
+  regression sentry: an append-only JSONL store of ``benchmarks/run.py
+  --json`` records keyed by env fingerprint, and the noise-aware detector
+  ``run.py check`` gates CI on (verdicts ``ok`` / ``regressed`` /
+  ``improved`` / ``no-baseline``).
 
 ``python -m repro.obs.report trace.json`` renders a tick timeline,
-per-request waterfall, and preemption-cause table from a trace file.
+per-request waterfall, and preemption-cause table from a trace file;
+``--diff A.json B.json`` compares two traces, and ``python -m
+repro.obs.merge`` aligns per-replica traces into one Perfetto view.
 """
-from repro.obs import clock, kernels, metrics, trace
+from repro.obs import clock, history, kernels, metrics, regress, trace
 
-__all__ = ["clock", "kernels", "metrics", "trace"]
+__all__ = ["clock", "history", "kernels", "metrics", "regress", "trace"]

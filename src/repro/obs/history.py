@@ -1,0 +1,154 @@
+"""Append-only benchmark history store: JSONL of ``run.py --json`` results.
+
+One ``benchmarks/run.py --json`` run produces one *record* — its rows plus
+the probed backend capabilities — and :class:`HistoryStore` appends it as a
+single JSON line.  The store is the longitudinal memory the one-shot result
+files lack: ``run.py check`` (see :mod:`repro.obs.regress`) compares a fresh
+run against the last K records taken **on the same environment** and gates
+CI on the verdict.
+
+Env fingerprinting is the load-bearing part.  Bandwidth-bound comparisons
+flip with problem size and hardware (the Two-Pass Softmax paper, arXiv
+2001.04438, documents exactly this for softmax forms), so timings are only
+comparable within one ``(backend, jax_version, device_count, pallas_native,
+smoke)`` fingerprint — records from a different fingerprint are *invisible*
+to the baseline window, never averaged in.
+
+Path resolution: an explicit path beats the ``REPRO_BENCH_HISTORY``
+environment variable, which beats the caller-supplied default (``run.py``
+passes none for plain ``--json`` runs — recording is opt-in there — and
+``bench_history.jsonl`` for ``check``, which exists to read one).
+
+The file is append-only and tolerant: lines that do not parse (a crashed
+writer, a merge artifact, a foreign schema) are counted in
+:attr:`HistoryStore.skipped` and skipped, never fatal — a corrupt line
+must not be able to take down the CI gate.
+
+Stdlib-only, like every ``repro.obs`` module: no jax at import time.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterable, List, Optional
+
+from repro.obs import clock as _clock
+
+HISTORY_ENV = "REPRO_BENCH_HISTORY"
+DEFAULT_PATH = "bench_history.jsonl"
+SCHEMA_VERSION = 1
+
+# capability fields that shift timings: two records compare only when all
+# of these (plus the smoke flag) agree
+ENV_FIELDS = ("backend", "jax_version", "device_count", "pallas_native")
+
+
+def history_path(explicit: Optional[str] = None, *,
+                 default: Optional[str] = None) -> Optional[str]:
+    """Resolve the store path: ``explicit`` → ``$REPRO_BENCH_HISTORY`` →
+    ``default`` (``None`` means "no store": recording is skipped)."""
+    if explicit:
+        return explicit
+    env = os.environ.get(HISTORY_ENV)
+    if env:
+        return env
+    return default
+
+
+def fingerprint(env: Dict[str, Any], *, smoke: bool = False) -> str:
+    """Stable comparison key for an env/capability record.  Only records
+    with an identical fingerprint feed a row's baseline window."""
+    parts = [f"smoke={bool(smoke)}"]
+    parts += [f"{k}={env.get(k)}" for k in ENV_FIELDS]
+    return "|".join(parts)
+
+
+def _normalize_rows(rows: Iterable) -> List[Dict[str, Any]]:
+    """Accept both the ``--json`` dict form and the in-process
+    ``(name, us, derived)`` tuple form."""
+    out = []
+    for r in rows:
+        if isinstance(r, dict):
+            out.append({"name": str(r["name"]),
+                        "us_per_call": float(r["us_per_call"]),
+                        "derived": str(r.get("derived") or "")})
+        else:
+            name, us, derived = r
+            out.append({"name": str(name), "us_per_call": float(us),
+                        "derived": str(derived)})
+    return out
+
+
+class HistoryStore:
+    """One JSONL file of benchmark records, append-only.
+
+    ``append`` writes one line per run; ``records`` reads them all back in
+    file order (oldest first), skipping anything unparseable; ``samples``
+    extracts one row's timing series for a given fingerprint — the input
+    :mod:`repro.obs.regress` builds baselines from.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.skipped = 0            # unparseable lines seen by records()
+
+    def append(self, env: Dict[str, Any], rows: Iterable, *,
+               smoke: bool = False, label: Optional[str] = None,
+               ) -> Dict[str, Any]:
+        """Append one record; returns the dict written."""
+        rec: Dict[str, Any] = {
+            "schema": SCHEMA_VERSION,
+            "ts": round(_clock.wall_time(), 3),
+            "fingerprint": fingerprint(env, smoke=smoke),
+            "env": {k: env.get(k) for k in ENV_FIELDS},
+            "smoke": bool(smoke),
+            "rows": _normalize_rows(rows),
+        }
+        if label:
+            rec["label"] = str(label)
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        with open(self.path, "a") as fh:
+            fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        return rec
+
+    def records(self) -> List[Dict[str, Any]]:
+        """All parseable records, oldest first.  Missing file → empty
+        history (the first run of a fresh checkout)."""
+        self.skipped = 0
+        if not os.path.exists(self.path):
+            return []
+        out = []
+        with open(self.path) as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    self.skipped += 1
+                    continue
+                if not isinstance(rec, dict) or "rows" not in rec:
+                    self.skipped += 1
+                    continue
+                out.append(rec)
+        return out
+
+    def samples(self, name: str, fp: str, *,
+                k: Optional[int] = None) -> List[float]:
+        """Row ``name``'s ``us_per_call`` series under fingerprint ``fp``,
+        oldest first; ``k`` keeps only the most recent k."""
+        vals = []
+        for rec in self.records():
+            if rec.get("fingerprint") != fp:
+                continue
+            for row in rec["rows"]:
+                if row.get("name") == name:
+                    vals.append(float(row["us_per_call"]))
+                    break
+        return vals[-k:] if k else vals
+
+
+__all__ = ["HistoryStore", "history_path", "fingerprint",
+           "HISTORY_ENV", "DEFAULT_PATH", "ENV_FIELDS", "SCHEMA_VERSION"]

@@ -89,6 +89,35 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
+    def percentile(self, q: float) -> Optional[float]:
+        """Estimated q-th percentile (0–100) from the exponential buckets.
+
+        Walks the cumulative counts to the bucket holding the q-th sample
+        and interpolates linearly inside it; bucket bounds are clamped to
+        the exactly-tracked ``min``/``max``, so a single-value histogram
+        reports that value exactly and no estimate ever leaves the
+        observed range.
+        """
+        if not self.count:
+            return None
+        target = max(q / 100.0 * self.count, 1.0)
+        cum = 0
+        for i, n in enumerate(self.buckets):
+            if not n:
+                continue
+            if cum + n >= target:
+                lo = 0.0 if i == 0 else self.least * (2.0 ** (i - 1))
+                hi = (self.least if i == 0
+                      else self.least * (2.0 ** i))
+                lo = max(lo, self.min)
+                hi = self.max if i == self.NUM_BUCKETS else min(hi, self.max)
+                if hi < lo:
+                    hi = lo
+                frac = (target - cum) / n
+                return lo + frac * (hi - lo)
+            cum += n
+        return self.max
+
 
 class Registry:
     """Get-or-create instrument store.
@@ -140,7 +169,9 @@ class Registry:
                     continue
                 out[name] = {"type": "histogram", "count": inst.count,
                              "sum": inst.sum, "mean": inst.mean,
-                             "min": inst.min, "max": inst.max}
+                             "min": inst.min, "max": inst.max,
+                             "p50": inst.percentile(50),
+                             "p95": inst.percentile(95)}
         return out
 
     def reset(self) -> None:

@@ -1,0 +1,184 @@
+"""Noise-aware benchmark regression detection over the history store.
+
+The problem: one-shot timing comparisons on a shared CI box are noise.
+Contention adds ±5–8% per run (measured in ``benchmarks/bench_serving.py``'s
+overhead harness), and serving rows swing wider still — an eyeballed diff of
+two result files cannot tell a kernel regression from a noisy neighbour.
+
+The approach, per row:
+
+* **Window** — the last K ``us_per_call`` samples for this row from history
+  records whose env fingerprint matches the candidate's (different backend /
+  jax version / device count / smoke flag → different window; see
+  :mod:`repro.obs.history`).  Fewer than ``min_records`` samples →
+  ``no-baseline`` (never a gate failure: a fresh environment starts by
+  recording, not by failing).
+* **Baseline** — two estimates of the window.  The *median* is the robust
+  center reported to humans.  The *fastest-half mean* is what the gate
+  compares against: contention noise is strictly additive (a neighbour only
+  ever slows a run down), so the mean of the window's fastest half
+  approaches the uncontended cost while keeping enough samples that one
+  lucky run cannot swing it — the same estimator the ``--obs`` overhead
+  bench uses, shared here as :func:`fastest_half_mean`.
+* **Verdict** — relative delta of the candidate against the fastest-half
+  mean, judged against a per-row threshold (longest-prefix match in
+  :data:`THRESHOLDS`; serving rows get a wider band than kernel
+  microbenches).  ``regressed`` above ``+threshold``, ``improved`` below
+  ``-threshold``, ``ok`` between.
+
+``benchmarks/run.py check`` renders the verdicts (markdown, the same style
+as ``run.py report``) and exits nonzero iff anything regressed — the CI
+gate the ROADMAP's measurement surface was missing.
+
+Stdlib-only: no jax at import time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.obs.history import HistoryStore, fingerprint
+
+OK = "ok"
+REGRESSED = "regressed"
+IMPROVED = "improved"
+NO_BASELINE = "no-baseline"
+
+DEFAULT_K = 5               # baseline window: last K same-env samples
+DEFAULT_MIN_RECORDS = 2     # fewer → no-baseline
+DEFAULT_THRESHOLD = 0.25    # relative band for kernel microbenches
+
+# per-row relative thresholds, longest matching prefix wins; the fallback
+# is DEFAULT_THRESHOLD.  Serving rows aggregate a whole scheduler run on a
+# contended box, so their band is wider than the microbench rows'.
+THRESHOLDS: Sequence = (
+    ("serving/", 0.50),
+)
+
+
+def fastest_half_mean(values: Sequence[float], *,
+                      bigger_is_faster: bool = False) -> float:
+    """Mean of the fastest half of ``values`` (at least one kept).
+
+    For µs-per-call series "fastest" means smallest; rate series
+    (tokens/s) pass ``bigger_is_faster=True``.  Additive-noise estimator:
+    the fastest runs approach the uncontended cost, and averaging half the
+    samples (rather than taking the single min) keeps one lucky run from
+    deciding the number.
+    """
+    if not values:
+        raise ValueError("fastest_half_mean of an empty sequence")
+    ordered = sorted(values, reverse=bigger_is_faster)
+    top = ordered[:max(len(ordered) // 2, 1)]
+    return sum(top) / len(top)
+
+
+def median(values: Sequence[float]) -> float:
+    if not values:
+        raise ValueError("median of an empty sequence")
+    s = sorted(values)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def threshold_for(name: str,
+                  overrides: Optional[Sequence] = None) -> float:
+    """Relative threshold for row ``name``: longest matching prefix in
+    ``overrides`` (default :data:`THRESHOLDS`), else
+    :data:`DEFAULT_THRESHOLD`."""
+    best, best_len = DEFAULT_THRESHOLD, -1
+    for prefix, thr in (THRESHOLDS if overrides is None else overrides):
+        if name.startswith(prefix) and len(prefix) > best_len:
+            best, best_len = float(thr), len(prefix)
+    return best
+
+
+@dataclass
+class RowVerdict:
+    """One row's comparison against its same-env baseline window."""
+
+    name: str
+    verdict: str                       # ok / regressed / improved / no-baseline
+    candidate_us: float
+    baseline_us: Optional[float] = None   # fastest-half mean (the gate side)
+    median_us: Optional[float] = None     # robust center (the human side)
+    delta_pct: Optional[float] = None     # candidate vs baseline_us
+    threshold_pct: float = DEFAULT_THRESHOLD * 100.0
+    window: int = 0                    # samples behind the baseline
+
+
+def check_rows(rows: Iterable, store: HistoryStore, env: Dict, *,
+               smoke: bool = False, k: int = DEFAULT_K,
+               min_records: int = DEFAULT_MIN_RECORDS,
+               threshold: Optional[float] = None) -> List[RowVerdict]:
+    """Compare candidate ``rows`` (dicts or ``(name, us, derived)`` tuples)
+    against ``store``'s same-fingerprint window.  ``threshold`` overrides
+    the per-row prefix table with one global relative band."""
+    fp = fingerprint(env, smoke=smoke)
+    verdicts = []
+    for row in rows:
+        if isinstance(row, dict):
+            name, us = str(row["name"]), float(row["us_per_call"])
+        else:
+            name, us = str(row[0]), float(row[1])
+        thr = threshold if threshold is not None else threshold_for(name)
+        values = store.samples(name, fp, k=k)
+        if len(values) < min_records:
+            verdicts.append(RowVerdict(
+                name=name, verdict=NO_BASELINE, candidate_us=us,
+                threshold_pct=thr * 100.0, window=len(values)))
+            continue
+        base = fastest_half_mean(values)
+        med = median(values)
+        delta = (us - base) / base if base else float("inf")
+        if delta > thr:
+            verdict = REGRESSED
+        elif delta < -thr:
+            verdict = IMPROVED
+        else:
+            verdict = OK
+        verdicts.append(RowVerdict(
+            name=name, verdict=verdict, candidate_us=us, baseline_us=base,
+            median_us=med, delta_pct=delta * 100.0,
+            threshold_pct=thr * 100.0, window=len(values)))
+    return verdicts
+
+
+def regressions(verdicts: Iterable[RowVerdict]) -> List[RowVerdict]:
+    return [v for v in verdicts if v.verdict == REGRESSED]
+
+
+def render(verdicts: Sequence[RowVerdict], *, fp: str = "") -> str:
+    """Markdown verdict table (the ``run.py report`` house style), plus one
+    named ``REGRESSION:`` line per offending row so a CI log grep finds
+    the culprit without parsing the table."""
+    lines = [f"## Regression check — {len(verdicts)} rows"
+             + (f" (fingerprint {fp})" if fp else ""), ""]
+    lines += ["| name | baseline µs | median µs | candidate µs | Δ% "
+              "| thr % | n | verdict |",
+              "|---|---:|---:|---:|---:|---:|---:|---|"]
+    for v in verdicts:
+        base = f"{v.baseline_us:.2f}" if v.baseline_us is not None else "—"
+        med = f"{v.median_us:.2f}" if v.median_us is not None else "—"
+        delta = f"{v.delta_pct:+.1f}%" if v.delta_pct is not None else "—"
+        lines.append(f"| {v.name} | {base} | {med} | {v.candidate_us:.2f} "
+                     f"| {delta} | {v.threshold_pct:.0f} | {v.window} "
+                     f"| {v.verdict} |")
+    counts: Dict[str, int] = {}
+    for v in verdicts:
+        counts[v.verdict] = counts.get(v.verdict, 0) + 1
+    lines += ["", "check: " + ", ".join(
+        f"{counts.get(k, 0)} {k}"
+        for k in (OK, IMPROVED, NO_BASELINE, REGRESSED))]
+    for v in regressions(verdicts):
+        lines.append(f"REGRESSION: {v.name} {v.delta_pct:+.1f}% over "
+                     f"baseline {v.baseline_us:.2f}µs "
+                     f"(threshold {v.threshold_pct:.0f}%)")
+    return "\n".join(lines) + "\n"
+
+
+__all__ = ["RowVerdict", "check_rows", "regressions", "render",
+           "fastest_half_mean", "median", "threshold_for",
+           "OK", "REGRESSED", "IMPROVED", "NO_BASELINE",
+           "DEFAULT_K", "DEFAULT_MIN_RECORDS", "DEFAULT_THRESHOLD",
+           "THRESHOLDS"]

@@ -64,11 +64,22 @@ class ReplicaRouter:
         if replicas < 1:
             raise ValueError(f"replicas must be ≥ 1 (got {replicas})")
         # one shared Tracer, one Perfetto pid per replica — its request and
-        # scheduler tracks land under "process i" in the combined trace
+        # scheduler tracks land under "process i" in the combined trace.
+        # ``tracers`` instead gives each replica its own Tracer (same pid
+        # scheme), for per-replica files that repro.obs.merge re-combines.
         tracer = engine_kwargs.pop("tracer", None)
-        self.engines = [Engine(params, cfg, tracer=tracer, trace_pid=i,
-                               **engine_kwargs)
-                        for i in range(replicas)]
+        tracers = engine_kwargs.pop("tracers", None)
+        if tracers is not None:
+            if tracer is not None:
+                raise ValueError("pass tracer= or tracers=, not both")
+            if len(tracers) != replicas:
+                raise ValueError(f"tracers has {len(tracers)} entries for "
+                                 f"{replicas} replicas")
+        self.engines = [
+            Engine(params, cfg,
+                   tracer=tracers[i] if tracers is not None else tracer,
+                   trace_pid=i, **engine_kwargs)
+            for i in range(replicas)]
         self.block_size = int(engine_kwargs.get("block_size", 8))
         self.affinity = bool(affinity) and self.engines[0].paged
         self.backpressure = (replicas > 1 if backpressure is None

@@ -25,6 +25,7 @@ python -m pytest -x -q "$@" \
     tests/test_docs.py \
     tests/test_models.py \
     tests/test_obs.py \
+    tests/test_obs_history.py \
     tests/test_online_softmax.py
 
 echo "== tier-1 group 2: serving caches (continuous, families, paged) =="

@@ -271,6 +271,39 @@ def test_tracer_flush_every_needs_path():
         obs_trace.Tracer("/tmp/x.json", flush_every=0)
 
 
+def test_tracer_streaming_survives_preempt_and_swap(model, tmp_path):
+    """A preempt-and-swap lifecycle traced through ``flush_every=N``:
+    suspend/resume spans and preempt instants land intact even though most
+    of the trace left the buffer mid-run, and ``close()`` is idempotent."""
+    params, cfg = model
+    path = tmp_path / "stream_preempt.json"
+    tracer = obs_trace.Tracer(str(path), flush_every=8)
+    eng = _engine(params, cfg, paged=True, block_size=BLOCK, num_blocks=8,
+                  tracer=tracer)
+    rep = eng.serve(_priority_workload())
+    tracer.close()
+    assert rep.preemptions >= 1, "workload must actually preempt"
+    assert tracer.total_events > 8, "workload too small to force a flush"
+
+    with open(path) as f:
+        loaded = json.load(f)
+    assert len(loaded) == tracer.total_events
+    assert obs_report.validate(loaded) == []
+    preempts = [e for e in loaded
+                if e["ph"] == "i" and e["name"] == "preempt"]
+    assert len(preempts) == rep.preemptions
+    assert any(e["ph"] == "X" and e["name"] == "suspended" for e in loaded)
+    for res in rep.results:
+        toks = [e["args"]["token"] for e in loaded
+                if e.get("tid") == res.rid + 1
+                and e["ph"] == "i" and e["name"] == "token"]
+        assert toks == res.tokens, f"rid {res.rid}: stream mismatch"
+    # second close: no new events, file bytes untouched
+    before = path.read_bytes()
+    assert tracer.close() == []
+    assert path.read_bytes() == before
+
+
 # ---------------------------------------------------------------------------
 # Metrics registry.
 # ---------------------------------------------------------------------------
@@ -308,6 +341,36 @@ def test_metrics_enabled_counts_and_snapshots(registry):
     assert snap["h"]["mean"] == pytest.approx(7.0 / 3000.0)
     with pytest.raises(TypeError):
         registry.gauge("c")                   # name already a counter
+
+
+def test_histogram_percentiles_estimated_within_bounds(registry):
+    registry.enable()
+    h = registry.histogram("h")
+    assert h.percentile(50) is None              # empty: no estimate
+    h.observe(0.25)
+    assert h.percentile(50) == pytest.approx(0.25)   # single value: exact
+    assert h.percentile(95) == pytest.approx(0.25)
+    for v in (0.001, 0.002, 0.004, 0.008, 0.016, 0.512):
+        registry.histogram("spread").observe(v)
+    s = registry.histogram("spread")
+    p50, p95 = s.percentile(50), s.percentile(95)
+    assert s.min <= p50 <= p95 <= s.max          # clamped, monotone in q
+    assert p50 < s.mean < p95                    # the outlier skews the mean
+    snap = registry.snapshot()
+    assert snap["spread"]["p50"] == pytest.approx(p50)
+    assert snap["spread"]["p95"] == pytest.approx(p95)
+    assert "p50" not in snap.get("h_missing", {})
+
+
+def test_engine_stats_metrics_include_percentiles(model, registry):
+    params, cfg = model
+    registry.enable()
+    eng = _engine(params, cfg)
+    eng.serve(_workload(n=2))
+    m = eng.stats()["metrics"]
+    occ = m["serving.occupancy"]
+    assert occ["type"] == "histogram"
+    assert occ["min"] <= occ["p50"] <= occ["p95"] <= occ["max"]
 
 
 def test_engine_stats_attach_metrics_snapshot(model, registry):
@@ -379,3 +442,111 @@ def test_report_cli_runs_on_generated_trace(model, tmp_path):
     out2 = subprocess.run([sys.executable, "-m", "repro.obs.report"],
                           capture_output=True, text=True, timeout=60, env=env)
     assert out2.returncode == 2                # usage error
+
+
+def test_report_cli_nonzero_on_broken_trace(tmp_path):
+    """Satellite pin: the trace smoke can gate CI because a structurally
+    broken trace exits 1 and names the problem."""
+    path = tmp_path / "broken.json"
+    path.write_text(json.dumps([
+        {"name": "decode", "ph": "X", "ts": 0.0, "dur": 5.0,
+         "pid": 0, "tid": 1, "args": {"unclosed": True}},
+    ]))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.obs.report", str(path)],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert out.returncode == 1, out.stdout
+    assert "TRACE PROBLEM" in out.stderr
+    assert "unclosed" in out.stderr
+
+
+# ---------------------------------------------------------------------------
+# Trace diff + multi-replica merge.
+# ---------------------------------------------------------------------------
+def _tick(pid, ts, dur, tick, **extra):
+    args = {"tick": tick, "active": 0, "queue": 0, "free_slots": 2}
+    args.update(extra)
+    return {"name": "tick", "ph": "X", "ts": ts, "dur": dur,
+            "pid": pid, "tid": 0, "args": args}
+
+
+def test_merge_aligns_first_ticks_and_renumbers_colliding_pids():
+    from repro.obs import merge as obs_merge
+    # both files claim pid 0 and start their clocks at different epochs
+    a = [_tick(0, 1000.0, 5.0, 1), _tick(0, 1100.0, 5.0, 2)]
+    b = [_tick(0, 9000.0, 7.0, 1), _tick(0, 9100.0, 7.0, 2)]
+    merged = obs_merge.merge_events([a, b], labels=["a.json", "b.json"])
+    ticks = [e for e in merged if e["ph"] == "X"]
+    # first tick of each file lands at t=0: the common fiducial
+    assert sorted(e["ts"] for e in ticks) == [0.0, 0.0, 100.0, 100.0]
+    assert {e["pid"] for e in ticks} == {0, 1}   # collision → renumbered
+    names = [e for e in merged if e["ph"] == "M"]
+    assert {n["args"]["name"] for n in names} == {
+        "replica 0 (a.json)", "replica 1 (b.json)"}
+    assert obs_report.validate(merged) == []
+    # distinct pids merge untouched — no renumbering, no name metadata
+    c = [_tick(1, 500.0, 5.0, 1)]
+    merged2 = obs_merge.merge_events([a, c])
+    assert {e.get("pid") for e in merged2} == {0, 1}
+    assert not any(e["ph"] == "M" for e in merged2)
+
+
+def test_diff_reports_aligned_ticks_and_class_latency():
+    a = [_tick(0, 0.0, 1000.0, 1), _tick(0, 2000.0, 1000.0, 2)]
+    b = [_tick(0, 0.0, 2000.0, 1), _tick(0, 3000.0, 2000.0, 2)]
+    text = obs_report.diff(a, b, label_a="a.json", label_b="b.json")
+    assert "## Trace diff — a.json → b.json" in text
+    assert "| ticks | 2 | 2 | +0.0% |" in text
+    assert "| 0 | 1.000 | 2.000 | +100.0% |" in text   # aligned by index
+    assert "Aligned tick timeline" in text
+
+
+def test_serve_trace_dir_writes_per_replica_and_merged(model, tmp_path):
+    """Acceptance pin: ``--replicas 2 --trace dir/`` produces per-replica
+    traces plus a merged view that load-validates, and ``report --diff``
+    runs clean on the pair."""
+    tdir = tmp_path / "traces"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--smoke",
+         "--continuous", "--paged", "--replicas", "2", "--requests", "6",
+         "--tokens", "6", "--no-affinity", "--trace", str(tdir) + os.sep],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert out.returncode in (0, 1), out.stderr[-2000:]  # 1 = occupancy warn
+    paths = [tdir / f"replica{i}.json" for i in range(2)]
+    merged_path = tdir / "merged.json"
+    assert all(p.exists() for p in paths) and merged_path.exists()
+    assert "merged view" in out.stdout
+
+    merged = obs_report.load_trace(str(merged_path))
+    assert obs_report.validate(merged) == []
+    assert {e.get("pid") for e in merged} == {0, 1}
+    per_replica = [obs_report.load_trace(str(p)) for p in paths]
+    # the merged stream is exactly the per-replica events, clock-aligned
+    assert len(merged) == sum(len(t) for t in per_replica)
+    for t in per_replica:
+        assert obs_report.validate(t) == []
+        assert any(e["ph"] == "X" and e["name"] == "tick" for e in t)
+
+    rep = subprocess.run(
+        [sys.executable, "-m", "repro.obs.report", str(merged_path)],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert rep.returncode == 0, rep.stderr[-2000:]
+    dif = subprocess.run(
+        [sys.executable, "-m", "repro.obs.report", "--diff",
+         str(paths[0]), str(paths[1])],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert dif.returncode == 0, dif.stderr[-2000:]
+    assert "## Trace diff" in dif.stdout
+    assert "Aligned tick timeline" in dif.stdout
+    mrg = subprocess.run(
+        [sys.executable, "-m", "repro.obs.merge", str(paths[0]),
+         str(paths[1]), "--out", str(tmp_path / "re_merged.json")],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert mrg.returncode == 0, mrg.stderr[-2000:]
+    assert "merged 2 traces" in mrg.stdout

@@ -1,0 +1,279 @@
+"""Performance regression sentry (ISSUE 9): history store + noise-aware gate.
+
+The load-bearing claims:
+
+* **History is append-only and env-keyed**: every record lands as one JSONL
+  line carrying the env fingerprint; a record from a different fingerprint
+  is invisible to a row's baseline window, and a corrupt line is skipped,
+  never fatal.
+* **The gate is noise-aware**: the baseline is the fastest-half mean of the
+  last K same-env samples (contention noise is additive, so the fastest
+  half approaches the uncontended cost), judged against per-row relative
+  thresholds — serving rows get a wider band than kernel microbenches.
+* **The CLI actually gates**: ``run.py check`` exits nonzero iff a row
+  regressed, names the offending row on a grep-able ``REGRESSION:`` line,
+  stays green on same-noise reruns, and ``--update-baseline`` records the
+  candidate and exits 0 — proven end-to-end on synthetic history below,
+  and on a real ``--smoke`` bench run at the bottom.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.obs import history, regress
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUN_PY = os.path.join(REPO, "benchmarks", "run.py")
+
+ENV_A = {"backend": "cpu", "jax_version": "0.4.0",
+         "device_count": 1, "pallas_native": False}
+ENV_B = {"backend": "tpu", "jax_version": "0.4.0",
+         "device_count": 8, "pallas_native": True}
+
+
+def _rows(us_map):
+    return [{"name": n, "us_per_call": us, "derived": ""}
+            for n, us in us_map.items()]
+
+
+def _results_file(path, us_map, env=ENV_A, smoke=True):
+    with open(path, "w") as fh:
+        json.dump({"smoke": smoke, "env": env, "rows": _rows(us_map)}, fh)
+    return str(path)
+
+
+def _check(args, env_extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.pop(history.HISTORY_ENV, None)
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run([sys.executable, RUN_PY, "check"] + args,
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+
+
+# ---------------------------------------------------------------------------
+# Store semantics.
+# ---------------------------------------------------------------------------
+def test_history_append_reload_roundtrip(tmp_path):
+    store = history.HistoryStore(str(tmp_path / "h.jsonl"))
+    assert store.records() == []               # missing file: fresh checkout
+    store.append(ENV_A, _rows({"softmax/online": 100.0}), smoke=True,
+                 label="gen1")
+    store.append(ENV_A, [("softmax/online", 104.0, "x1.5")], smoke=True)
+    recs = store.records()
+    assert [r["schema"] for r in recs] == [history.SCHEMA_VERSION] * 2
+    assert recs[0]["label"] == "gen1" and "label" not in recs[1]
+    assert recs[0]["fingerprint"] == history.fingerprint(ENV_A, smoke=True)
+    assert recs[1]["rows"] == [{"name": "softmax/online",
+                                "us_per_call": 104.0, "derived": "x1.5"}]
+    # appends accumulate: the file is longitudinal, not a snapshot
+    store.append(ENV_A, _rows({"softmax/online": 99.0}), smoke=True)
+    assert len(store.records()) == 3
+
+
+def test_history_samples_isolate_fingerprints_and_window(tmp_path):
+    store = history.HistoryStore(str(tmp_path / "h.jsonl"))
+    for us in (100.0, 101.0, 102.0, 103.0):
+        store.append(ENV_A, _rows({"r": us}), smoke=True)
+    store.append(ENV_B, _rows({"r": 5.0}), smoke=True)     # other machine
+    store.append(ENV_A, _rows({"r": 9.0}), smoke=False)    # full, not smoke
+    fp = history.fingerprint(ENV_A, smoke=True)
+    assert store.samples("r", fp) == [100.0, 101.0, 102.0, 103.0]
+    assert store.samples("r", fp, k=2) == [102.0, 103.0]   # most recent k
+    assert store.samples("missing", fp) == []
+    assert store.samples(
+        "r", history.fingerprint(ENV_B, smoke=True)) == [5.0]
+
+
+def test_history_skips_corrupt_lines(tmp_path):
+    path = tmp_path / "h.jsonl"
+    store = history.HistoryStore(str(path))
+    store.append(ENV_A, _rows({"r": 100.0}), smoke=True)
+    with open(path, "a") as fh:
+        fh.write("{truncated by a crashed wr\n")
+        fh.write('{"valid_json": "but not a record"}\n')
+        fh.write("\n")
+    store.append(ENV_A, _rows({"r": 101.0}), smoke=True)
+    recs = store.records()
+    assert len(recs) == 2 and store.skipped == 2
+    fp = history.fingerprint(ENV_A, smoke=True)
+    assert store.samples("r", fp) == [100.0, 101.0]
+
+
+def test_history_path_resolution(monkeypatch):
+    monkeypatch.delenv(history.HISTORY_ENV, raising=False)
+    assert history.history_path(None) is None              # opt-in default
+    assert history.history_path(None, default="d.jsonl") == "d.jsonl"
+    monkeypatch.setenv(history.HISTORY_ENV, "env.jsonl")
+    assert history.history_path(None, default="d.jsonl") == "env.jsonl"
+    assert history.history_path("cli.jsonl") == "cli.jsonl"  # explicit wins
+
+
+# ---------------------------------------------------------------------------
+# Estimators and thresholds.
+# ---------------------------------------------------------------------------
+def test_fastest_half_mean_and_median():
+    # additive noise: the slow half (contended runs) must not drag the gate
+    assert regress.fastest_half_mean([100.0, 102.0, 150.0, 180.0]) == 101.0
+    assert regress.fastest_half_mean([7.0]) == 7.0
+    assert regress.fastest_half_mean(
+        [50.0, 52.0, 30.0, 31.0], bigger_is_faster=True) == 51.0
+    assert regress.median([1.0, 9.0, 2.0]) == 2.0
+    assert regress.median([1.0, 2.0, 3.0, 10.0]) == 2.5
+    with pytest.raises(ValueError):
+        regress.fastest_half_mean([])
+    with pytest.raises(ValueError):
+        regress.median([])
+
+
+def test_threshold_longest_prefix_wins():
+    assert regress.threshold_for("softmax/online") == regress.DEFAULT_THRESHOLD
+    assert regress.threshold_for("serving/tok_s") == 0.50
+    over = (("serving/", 0.50), ("serving/smoke/", 0.80))
+    assert regress.threshold_for("serving/smoke/tok_s", over) == 0.80
+    assert regress.threshold_for("serving/full/tok_s", over) == 0.50
+
+
+def test_check_rows_verdict_matrix(tmp_path):
+    store = history.HistoryStore(str(tmp_path / "h.jsonl"))
+    for us in (100.0, 104.0, 140.0):         # one contended outlier
+        store.append(ENV_A, _rows({"k/row": us, "serving/row": us}),
+                     smoke=True)
+    # gate baseline = mean of fastest half {100} = 100 (the 140 outlier and
+    # the window median 104 are reported, not gated on)
+    def one(name, us, **kw):
+        vs = regress.check_rows([(name, us, "")], store, ENV_A, smoke=True,
+                                **kw)
+        assert len(vs) == 1
+        return vs[0]
+
+    v = one("k/row", 103.0)
+    assert (v.verdict, v.baseline_us, v.median_us) == (regress.OK, 100.0,
+                                                       104.0)
+    assert v.delta_pct == pytest.approx(3.0)
+    assert v.window == 3
+    assert one("k/row", 126.0).verdict == regress.REGRESSED   # > +25%
+    assert one("k/row", 74.0).verdict == regress.IMPROVED     # < -25%
+    # serving rows get the wider band: +40% is still ok there
+    assert one("serving/row", 140.0).verdict == regress.OK
+    # global override beats the prefix table
+    assert one("serving/row", 140.0, threshold=0.25).verdict == \
+        regress.REGRESSED
+    # unseen row, and a seen row under a too-short window: no-baseline
+    assert one("k/new", 1.0).verdict == regress.NO_BASELINE
+    v = one("k/row", 100.0, min_records=5)
+    assert v.verdict == regress.NO_BASELINE and v.baseline_us is None
+    assert regress.regressions(
+        regress.check_rows([("k/row", 500.0, "")], store, ENV_A,
+                           smoke=True))[0].name == "k/row"
+
+
+def test_render_names_offending_rows(tmp_path):
+    store = history.HistoryStore(str(tmp_path / "h.jsonl"))
+    for us in (100.0, 100.0):
+        store.append(ENV_A, _rows({"k/row": us}), smoke=True)
+    vs = regress.check_rows([("k/row", 200.0, "")], store, ENV_A, smoke=True)
+    text = regress.render(vs, fp=history.fingerprint(ENV_A, smoke=True))
+    assert "| k/row | 100.00 |" in text
+    assert "REGRESSION: k/row +100.0% over baseline 100.00µs" in text
+    assert "1 regressed" in text
+
+
+# ---------------------------------------------------------------------------
+# The CLI gate, end-to-end on synthetic history (the acceptance pin).
+# ---------------------------------------------------------------------------
+def test_check_cli_gates_on_injected_slowdown(tmp_path):
+    hist = str(tmp_path / "h.jsonl")
+    gen1 = _results_file(tmp_path / "gen1.json",
+                         {"softmax/online": 100.0, "serving/tok_s": 50.0})
+    gen2 = _results_file(tmp_path / "gen2.json",
+                         {"softmax/online": 104.0, "serving/tok_s": 52.0})
+    # two generations seed the baseline; each --update-baseline passes CI
+    for gen in (gen1, gen2):
+        out = _check(["--from", gen, "--history", hist, "--update-baseline"])
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "baseline updated" in out.stdout
+    # same-noise rerun: green
+    ok = _results_file(tmp_path / "ok.json",
+                       {"softmax/online": 103.0, "serving/tok_s": 51.0})
+    out = _check(["--from", ok, "--history", hist])
+    assert out.returncode == 0, out.stdout + out.stderr[-2000:]
+    assert "0 regressed" in out.stdout
+    # injected 1.6× slowdown on one row: gate fails and names the row
+    bad = _results_file(tmp_path / "bad.json",
+                        {"softmax/online": 160.0, "serving/tok_s": 51.0})
+    out = _check(["--from", bad, "--history", hist])
+    assert out.returncode == 1, out.stdout
+    assert "REGRESSION: softmax/online" in out.stdout
+    assert "| serving/tok_s" in out.stdout and "| ok |" in out.stdout
+    # an improvement is not a failure
+    imp = _results_file(tmp_path / "imp.json",
+                        {"softmax/online": 60.0, "serving/tok_s": 51.0})
+    out = _check(["--from", imp, "--history", hist])
+    assert out.returncode == 0, out.stdout
+    assert "1 improved" in out.stdout
+    # --update-baseline accepts even a regressed candidate (and records it)
+    n_before = len(history.HistoryStore(hist).records())
+    out = _check(["--from", bad, "--history", hist, "--update-baseline"])
+    assert out.returncode == 0, out.stdout
+    assert len(history.HistoryStore(hist).records()) == n_before + 1
+
+
+def test_check_cli_other_env_is_no_baseline(tmp_path):
+    """History from a different machine must not gate this one."""
+    hist = str(tmp_path / "h.jsonl")
+    store = history.HistoryStore(hist)
+    for us in (10.0, 10.0, 10.0):
+        store.append(ENV_B, _rows({"softmax/online": us}), smoke=True)
+    cand = _results_file(tmp_path / "cand.json", {"softmax/online": 160.0})
+    out = _check(["--from", cand, "--history", hist])
+    assert out.returncode == 0, out.stdout
+    assert "no-baseline" in out.stdout and "0 regressed" in out.stdout
+
+
+def test_check_cli_honours_history_env_var(tmp_path):
+    hist = str(tmp_path / "env.jsonl")
+    for us in (100.0, 100.0):
+        history.HistoryStore(hist).append(
+            ENV_A, _rows({"softmax/online": us}), smoke=True)
+    bad = _results_file(tmp_path / "bad.json", {"softmax/online": 200.0})
+    out = _check(["--from", bad], env_extra={history.HISTORY_ENV: hist})
+    assert out.returncode == 1, out.stdout
+    assert "REGRESSION: softmax/online" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# The real-bench path: --history recording + check on a live smoke run.
+# ---------------------------------------------------------------------------
+def test_run_smoke_records_history_and_check_stays_green(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.pop(history.HISTORY_ENV, None)
+    hist = str(tmp_path / "h.jsonl")
+    results = str(tmp_path / "out.json")
+    out = subprocess.run(
+        [sys.executable, RUN_PY, "softmax", "--smoke", "--json", results,
+         "--history", hist],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "history: recorded" in out.stderr
+    store = history.HistoryStore(hist)
+    recs = store.records()
+    assert len(recs) == 1 and recs[0]["label"] == "run:softmax"
+    with open(results) as fh:
+        data = json.load(fh)
+    assert recs[0]["fingerprint"] == history.fingerprint(
+        data["env"], smoke=True)
+    # duplicate the record so the window is deep enough, then gate the very
+    # same measurements: identical numbers must come back ok
+    store.append(data["env"], data["rows"], smoke=True)
+    out = _check(["--from", results, "--history", hist])
+    assert out.returncode == 0, out.stdout + out.stderr[-2000:]
+    assert "0 no-baseline, 0 regressed" in out.stdout
