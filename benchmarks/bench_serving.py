@@ -26,6 +26,16 @@ The workload is IDENTICAL for every N (and for ``affinity=False``), so
 ``run.py report replicas1.json replicas4.json`` is the scaling diff and an
 affinity-off run isolates what prefix routing buys.
 
+``kv="int8"`` serves the identical workload with the quantized KV cache
+(``kv_cache_dtype`` on the config → the ``dense_int8`` cache family):
+int8 K/V pools beside bfloat16 scale pages, dequantized inside the paged
+gather.  Row names stay identical to the fp run — ``run.py report fp.json
+int8.json`` is the capacity/latency diff — and paged runs gain a
+``pool_capacity`` row (bytes per cacheable token) so the report quantifies
+what quantization buys in pool footprint.  The family is non-shareable, so
+the shared-prefix stats read 0 by design; the workload stays the same for
+comparability.
+
 ``arch=NAME`` serves a different smoke architecture through the same
 harness: ``zamba2_1p2b`` / ``xlstm_125m`` exercise the fixed-state cache
 family (one refcounted block per sequence; prompts snap to the state scan's
@@ -50,7 +60,7 @@ from benchmarks import common
 def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
         preempt: bool = True, replicas: int = 0,
         affinity: bool = True, obs: bool = False,
-        arch: str = "smollm_360m") -> list:
+        arch: str = "smollm_360m", kv: str = "") -> list:
     import repro.configs as configs
     from repro.models import encdec, layers as L, transformer
     from repro.serving import cache_family, scheduler
@@ -58,6 +68,8 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
     from repro.serving.router import ReplicaRouter
 
     cfg = configs.get_smoke(arch)
+    if kv:
+        cfg = cfg.replace(kv_cache_dtype=kv)
     family = cache_family.resolve(cfg)
     if family.kind != "token" and (priorities or replicas or obs):
         raise SystemExit(f"--arch {arch} ({family.name}): only the plain "
@@ -150,6 +162,14 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
         warm_reqs = [scheduler.Request(
             rid=0, prompt=np.arange(family.prompt_quantum()) % 100,
             max_new_tokens=2)]
+    elif family.single_shot_prefill:
+        # single-shot prefill (quantized families) jits once per distinct
+        # prompt length — the binary chunk schedule never engages — so warm
+        # every length the workload will present
+        warm_reqs = [scheduler.Request(rid=i, prompt=np.arange(n) % 100,
+                                       max_new_tokens=2)
+                     for i, n in enumerate(sorted({len(r.prompt)
+                                                   for r in requests}))]
     else:
         warm_reqs = [scheduler.Request(rid=0, prompt=np.arange(2 * chunk - 1)
                                        % 100, max_new_tokens=2)]
@@ -260,6 +280,25 @@ def run(smoke: bool = False, paged: bool = False, priorities: bool = False,
                      f"tokens_reused={p['tokens_reused']} "
                      f"cow={p['cow_copies']} "
                      f"min_free={p['min_free_blocks']}/{p['num_blocks']}"))
+        if family.kind == "token":
+            # pool footprint per cacheable token — the number quantized K/V
+            # exists to move.  eval_shape so the row costs no allocation;
+            # the family owns the layout, so scale pages are counted
+            # without this harness knowing any dtype.  (Only token-kind
+            # families page block_size tokens per block; state/enc-dec
+            # blocks hold whole rows, so the unit would lie there.)
+            pool_sds = jax.eval_shape(
+                lambda: family.init_paged_cache(p["num_blocks"], block_size,
+                                                slot_len))
+            pool_bytes = sum(l.size * l.dtype.itemsize
+                             for l in jax.tree_util.tree_leaves(pool_sds))
+            pool_tokens = (p["num_blocks"] - 1) * block_size  # minus sentinel
+            rows.append((f"serving/{tag}/pool_bytes_per_token",
+                         pool_bytes / max(pool_tokens, 1),
+                         f"kv={cfg.kv_cache_dtype or 'fp'} "
+                         f"tok_per_kib="
+                         f"{1024.0 * pool_tokens / pool_bytes:.2f} "
+                         f"pool_kib={pool_bytes / 1024.0:.1f}"))
     if replicas:
         p = report.paged
         r = report.router

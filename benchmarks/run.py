@@ -10,7 +10,9 @@ Prints ``name,us_per_call,derived`` CSV:
                          per-token latency, occupancy vs drain-and-refill;
                          ``--paged`` serves through the paged KV cache and
                          adds block-sharing accounting; ``--replicas N``
-                         routes over N engines with prefix affinity)
+                         routes over N engines with prefix affinity;
+                         ``--kv int8`` serves through the quantized cache
+                         family and adds a pool-capacity row)
 
 ``--smoke`` shrinks every sweep to a seconds-long sanity pass (tiny V/batch,
 one case per module) — the tier-1 suite runs it so the harness itself can't
@@ -261,6 +263,13 @@ def main(argv=None) -> int:
                          "encoder output as shared immutable blocks; "
                          "non-default archs emit serving/{tag}/{arch}/* "
                          "rows so default-row diffs stay comparable")
+    ap.add_argument("--kv", metavar="DTYPE", default="",
+                    help="serving bench stores K/V in this cache dtype "
+                         "(e.g. int8 → the dense_int8 family: quantized "
+                         "pools + scale pages, dequantized in the paged "
+                         "gather); rows keep their fp names so `report` "
+                         "diffs the two precisions, and paged runs add a "
+                         "pool_bytes_per_token capacity row")
     ap.add_argument("--obs", action="store_true",
                     help="serving bench re-runs the identical workload with "
                          "tracing + metrics armed and adds a per_token_obs "
@@ -295,6 +304,8 @@ def main(argv=None) -> int:
                 kwargs["obs"] = True
             if args.arch != "smollm_360m":
                 kwargs["arch"] = args.arch
+            if args.kv:
+                kwargs["kv"] = args.kv
         rows.extend(mods[name].run(smoke=args.smoke, **kwargs))
     emit(rows)
     from repro.obs import history

@@ -1,0 +1,228 @@
+"""Reduced-precision online-softmax forms and their analytic error bounds.
+
+The paper's ``(m, d)`` recurrence is what makes reduced precision *viable*:
+the running max rescales every partial sum, so no term ever overflows and the
+only damage lower precision can do is bounded rounding — which this module
+bounds analytically, per form, from the INPUT alone (row length, dynamic
+range).  ``tests/test_numerics.py`` pins every form against the fp32
+two-pass reference (``core.safe_softmax``) inside its bound; the bounds are
+asserted, never eyeballed.
+
+Forms (the approximation menu of PAPERS.md 2201.04562 — *Reduced Softmax
+Unit for DNN Accelerators* — and 2111.10770 — *Efficient Softmax
+Approximation*):
+
+* ``softmax_bf16`` — the online recurrence with the normalizer ``d``
+  accumulated in bfloat16 (the accelerator-friendly "narrow accumulator"
+  form; error is governed by bf16's unit roundoff 2⁻⁸ times the number of
+  accumulator roundings).
+* ``softmax_exp2`` — every exponential computed as ``2^((x−m)·log₂e)``
+  (hardware exp2 menus; error is fp32-level but grows with the row's
+  dynamic range R = max(m − xᵢ), because the exponent product rounds).
+
+Both run the same blocked online ``(m, d)`` scan as the kernels (one pass,
+⊕-merge across blocks), so their error model transfers to a lowered kernel
+unchanged.  They are registered in ``kernels.dispatch`` as
+``online_softmax_bf16`` / ``online_softmax_exp2`` behind the
+``set_softmax_form`` preference.
+
+The int8 KV-cache quantization bound lives here too (``int8_roundtrip_bound``)
+— it is the same numerics surface: ``models.layers._quantize_kv`` stores
+``q = round(x/s)`` int8 with ``s = max|x|/127`` kept in bfloat16, and the
+reconstruction error per element is at most ``s·(½ + 127·2⁻⁸)`` plus fp32
+slack.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.online_softmax import NEG_INF, safe_softmax
+
+Array = jax.Array
+
+BF16_EPS = 2.0 ** -8      # bfloat16 unit roundoff (8-bit mantissa incl. hidden)
+F32_EPS = 2.0 ** -24      # float32 unit roundoff
+LOG2E = 1.4426950408889634
+DEFAULT_BLOCK = 128       # ⊕-tree leaf width of the blocked scan
+
+
+def _blocked(x: Array, block: int) -> tuple[Array, int]:
+    """[..., V] → ([..., NB, BLK] padded with −inf, original V)."""
+    xf = jnp.asarray(x, jnp.float32)
+    v = xf.shape[-1]
+    pad = -v % block
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, pad)],
+                     constant_values=NEG_INF)
+    return xf.reshape(*xf.shape[:-1], -1, block), v
+
+
+def _online_md(xb: Array, *, exp_fn: Callable, acc_dtype) -> tuple[Array,
+                                                                   Array]:
+    """Blocked online (m, d) scan — Algorithm 3 at block granularity, with
+    the exponential function and the accumulator dtype as the knobs the
+    reduced forms turn.  ``xb`` [..., NB, BLK] → (m [...], d [...])."""
+    lead = xb.shape[:-2]
+
+    def step(carry, xj):
+        m_prev, d_prev = carry
+        m_new = jnp.maximum(m_prev, jnp.max(xj, -1))
+        alpha = exp_fn(jnp.where(m_prev == m_new, 0.0, m_prev - m_new))
+        p = jnp.where(jnp.isneginf(xj), 0.0, exp_fn(xj - m_new[..., None]))
+        d_new = (d_prev * alpha.astype(acc_dtype)
+                 + jnp.sum(p, -1).astype(acc_dtype)).astype(acc_dtype)
+        return (m_new, d_new), None
+
+    init = (jnp.full(lead, NEG_INF, jnp.float32),
+            jnp.zeros(lead, acc_dtype))
+    (m, d), _ = jax.lax.scan(step, init, jnp.moveaxis(xb, -2, 0))
+    return m, d
+
+
+def _normalize(x: Array, m: Array, d: Array, exp_fn: Callable) -> Array:
+    xf = jnp.asarray(x, jnp.float32)
+    num = jnp.where(jnp.isneginf(xf), 0.0, exp_fn(xf - m[..., None]))
+    den = jnp.where(d == 0, 1.0, d.astype(jnp.float32))[..., None]
+    y = num / den
+    return y.astype(x.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else y
+
+
+def softmax_bf16(x: Array, *, block: int = DEFAULT_BLOCK) -> Array:
+    """Online softmax with the normalizer accumulated in bfloat16."""
+    xb, v = _blocked(x, block)
+    m, d = _online_md(xb, exp_fn=jnp.exp, acc_dtype=jnp.bfloat16)
+    return _normalize(x, m, d, jnp.exp)
+
+
+def _exp2_fn(z: Array) -> Array:
+    return jnp.exp2(z * jnp.float32(LOG2E))
+
+
+def softmax_exp2(x: Array, *, block: int = DEFAULT_BLOCK) -> Array:
+    """Online softmax with exponentials as ``2^(z·log₂e)`` (hardware exp2)."""
+    xb, v = _blocked(x, block)
+    m, d = _online_md(xb, exp_fn=_exp2_fn, acc_dtype=jnp.float32)
+    return _normalize(x, m, d, _exp2_fn)
+
+
+def softmax_exact(x: Array, *, block: int = DEFAULT_BLOCK) -> Array:
+    """The fp32 online form on the same blocked scan — the control case:
+    its bound is pure fp32 accumulation slop, no reduced-precision term."""
+    xb, v = _blocked(x, block)
+    m, d = _online_md(xb, exp_fn=jnp.exp, acc_dtype=jnp.float32)
+    return _normalize(x, m, d, jnp.exp)
+
+
+# ---------------------------------------------------------------------------
+# Analytic error bounds: worst-case max-abs deviation from the fp32 two-pass
+# reference, computed from the input's shape and dynamic range — never from
+# the observed output.  Each derivation counts roundings per term; softmax
+# outputs are ≤ 1, so relative perturbations of numerator and denominator
+# bound the absolute output error directly (|p̂/d̂ − p/d| ≤ rel(p) + rel(d)
+# to first order; the /(1−t) factor absorbs the higher-order terms).
+# ---------------------------------------------------------------------------
+def _n_blocks(v: int, block: int) -> int:
+    return max(math.ceil(v / block), 1)
+
+
+def _row_range(x) -> float:
+    """max over rows of (row max − row min) over finite entries — the R in
+    the exp2 bound.  −inf entries contribute exp2(−inf) = 0 exactly, so they
+    are excluded."""
+    xf = np.asarray(x, np.float32).reshape(-1, np.shape(x)[-1])
+    fin = np.isfinite(xf)
+    hi = np.where(fin, xf, -np.inf).max(axis=-1)
+    lo = np.where(fin, xf, np.inf).min(axis=-1)
+    r = hi - lo
+    r = r[np.isfinite(r)]
+    return float(r.max()) if r.size else 0.0
+
+
+def exact_error_bound(x, *, block: int = DEFAULT_BLOCK) -> float:
+    """fp32-vs-fp32 slop: both sides round each exp (1·u each side) and
+    accumulate V terms in some order (≤ V−1 roundings per term each side),
+    plus the divide — ≤ (2V + 8)·u₃₂ relative on either statistic."""
+    v = np.shape(x)[-1]
+    t = (2 * v + 8) * F32_EPS
+    return t / (1 - t)
+
+
+def bf16_error_bound(x, *, block: int = DEFAULT_BLOCK) -> float:
+    """Per scan step the bf16 accumulator rounds ≤ 4 times (alpha cast,
+    multiply, block-sum cast, add), each rounding relatively perturbing every
+    term already in ``d`` by ≤ u_bf16; a term enters with ≤ 2 roundings.
+    Over NB blocks: rel(d) ≤ (4·NB + 2)·u_bf16.  The numerator and the fp32
+    reference add ≤ 2·(V+2)·u₃₂ — folded in as 2 more bf16 ulps (u₃₂ ≪
+    u_bf16)."""
+    v = np.shape(x)[-1]
+    nb = _n_blocks(v, block)
+    t = (4 * nb + 4) * BF16_EPS
+    if t >= 0.5:
+        # bound would be ≥ 1 — vacuous for probabilities.  A bf16 normalizer
+        # over this many blocks is outside the form's deployment envelope;
+        # refuse loudly instead of returning a number nothing can violate.
+        raise ValueError(
+            f"vacuous bf16 bound (t={t:.2f} ≥ 0.5) for V={v}, block={block}")
+    return t / (1 - t)
+
+
+def exp2_error_bound(x, *, block: int = DEFAULT_BLOCK) -> float:
+    """exp2 term error: the exponent product ``z·fl(log₂e)`` carries ≤ 2·u₃₂
+    relative → ≤ 2·u₃₂·|z|·log₂e absolute exponent error → relative term
+    error ≤ ln2·(2·u₃₂·|z|·log₂e) + u₃₂ (exp2 eval) = 2·R·u₃₂ + u₃₂ with
+    R = max(m − xᵢ) ≤ the row's finite dynamic range.  Numerator +
+    denominator (with fp32 accumulation over NB blocks and V terms) + the
+    fp32 reference's own (V+2)·u₃₂."""
+    v = np.shape(x)[-1]
+    nb = _n_blocks(v, block)
+    r = _row_range(x)
+    t = (4.0 * r + 4 * nb + 2 * v + 16) * F32_EPS
+    return t / (1 - t)
+
+
+class Form(NamedTuple):
+    apply: Callable          # x → softmax(x), the reduced-precision way
+    error_bound: Callable    # x → analytic max-abs bound vs fp32 reference
+
+
+#: Every registered reduced-precision softmax form, keyed by the name
+#: ``kernels.dispatch.set_softmax_form`` accepts.  ``reference`` is what the
+#: bounds are stated against.
+FORMS: dict[str, Form] = {
+    "exact": Form(softmax_exact, exact_error_bound),
+    "bf16": Form(softmax_bf16, bf16_error_bound),
+    "exp2": Form(softmax_exp2, exp2_error_bound),
+}
+
+reference = safe_softmax
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization bound (models.layers._quantize_kv +
+# cache_family.DenseInt8Family.dequantize_block).
+# ---------------------------------------------------------------------------
+#: fp32 slack multiplier in the roundtrip bound: the fp32 divide/round in
+#: quantization and the fp32 multiply in dequantization each contribute
+#: ≤ a few u₃₂ relative — absorbed as 8 u₃₂ on the 127·s term.
+_INT8_F32_SLACK = 8 * F32_EPS
+
+
+def int8_roundtrip_bound(scale) -> np.ndarray:
+    """Per-position max-abs reconstruction bound for the int8 KV roundtrip.
+
+    With fp32 scale ``s`` (clamped ≥ 1e-8), ``q = clip(round(x/s), ±127)``
+    and the stored scale bf16-rounded (``|ŝ−s| ≤ s·u_bf16``):
+
+        |q·ŝ − x| ≤ |q|·|ŝ−s| + s·|q − x/s|
+                  ≤ 127·s·u_bf16 + s·(½ + fp32 slack)
+
+    ``scale`` is the fp32 (unclamped-then-clamped) per-position scale —
+    recompute it in the test, don't read it back from the cache (the cache
+    holds the bf16-rounded copy)."""
+    s = np.maximum(np.asarray(scale, np.float32), 1e-8)
+    return s * (0.5 + 127.0 * BF16_EPS + 127.0 * _INT8_F32_SLACK)

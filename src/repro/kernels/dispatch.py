@@ -35,7 +35,17 @@ Paged KV serving adds ``paged_attention`` / ``paged_decode_attention``:
 block-pool K/V addressed through a ``[B, max_blocks]`` block table
 (``sdpa(block_tables=...)`` routes them).  The Pallas paths gather pages in
 kernel index maps; the XLA fallback gathers the table into a contiguous
-cache and reuses the chunked online form.
+cache and reuses the chunked online form.  Quantized (int8) pools carry
+``k_scale``/``v_scale`` pages beside K/V; both paged paths dequantize
+AFTER the gather — scale pages ride the same block table and the same
+clamped page index, so the pool lifecycle never sees fp data.
+
+Reduced-precision softmax forms (PAPERS.md 2201.04562 / 2111.10770) are
+registry ops too — ``online_softmax_bf16`` (bf16 normalizer accumulator)
+and ``online_softmax_exp2`` (exp2-based exponentials) — selected by a
+process preference (``set_softmax_form`` / ``REPRO_SOFTMAX_FORM``); their
+analytic error bounds live in ``repro.core.softmax_forms`` and
+``tests/test_numerics.py`` pins every form inside them.
 """
 from __future__ import annotations
 
@@ -497,6 +507,22 @@ def _online_softmax_xla(x: Array) -> Array:
     return core.online_softmax(x)
 
 
+# Reduced-precision forms: same online (m, d) recurrence, cheaper arithmetic.
+# XLA-only for now — the paper's associativity argument makes them drop-in
+# for the kernels once a native backend wants them; the analytic bounds in
+# core.softmax_forms (pinned by tests/test_numerics.py) are the gate.
+@register("online_softmax_bf16", PATH_XLA)
+def _online_softmax_bf16(x: Array) -> Array:
+    from repro.core import softmax_forms
+    return softmax_forms.softmax_bf16(x)
+
+
+@register("online_softmax_exp2", PATH_XLA)
+def _online_softmax_exp2(x: Array) -> Array:
+    from repro.core import softmax_forms
+    return softmax_forms.softmax_exp2(x)
+
+
 @register("softmax_topk", PATH_PALLAS, PATH_PALLAS_INTERPRET)
 def _softmax_topk_pallas(x: Array, k: int) -> "core.SoftmaxTopK":
     from repro.kernels import ops
@@ -577,17 +603,56 @@ def _gather_pages(pool: Array, block_tables: Array) -> Array:
     return g.reshape(block_tables.shape[0], -1, pool.shape[1], pool.shape[3])
 
 
+def _gather_scale_pages(pool: Array, block_tables: Array) -> Array:
+    """Scale pages [P, Hkv, BS] + [B, M] → contiguous [B, M·BS, Hkv] — the
+    ``k_scale``/``v_scale`` layout ``_chunked_fwd_impl`` dequantizes with.
+    Same table, same ordering as ``_gather_pages``, so position i's scale
+    lands exactly beside position i's int8 row."""
+    g = pool[block_tables]                      # [B, M, Hkv, BS]
+    g = jnp.swapaxes(g, 2, 3)                   # [B, M, BS, Hkv]
+    return g.reshape(block_tables.shape[0], -1, pool.shape[1])
+
+
+def _gathered_int8_chunked(cfg, q, k, v, *, causal, q_offset, kv_valid_len,
+                           block_tables, scale, k_scale, v_scale):
+    """Quantized paged fallback: gather int8 pages + scale pages through the
+    table, then run the SAME dequantizing chunked form the unpaged int8
+    cache uses (`_chunked_fwd_impl`).  The gathered length is M·BS =
+    slot_len, so the chunk split, the dequant arithmetic, and the masking
+    are identical to the unpaged call — which is what makes paged int8
+    decode bit-exact against unpaged int8 decode."""
+    from repro.core.attention import _chunked_fwd_impl
+    kg = _gather_pages(k, block_tables)
+    vg = _gather_pages(v, block_tables)
+    b = q.shape[0]
+    out, _ = _chunked_fwd_impl(
+        q, kg, vg, jnp.asarray(q_offset, jnp.int32),
+        jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (b,)),
+        causal, min(cfg.attn_chunk, kg.shape[1]),
+        scale if scale is not None else q.shape[-1] ** -0.5,
+        k_scale=_gather_scale_pages(k_scale, block_tables),
+        v_scale=_gather_scale_pages(v_scale, block_tables))
+    return out
+
+
 @register("paged_attention", PATH_PALLAS, PATH_PALLAS_INTERPRET)
 def _paged_attention_pallas(cfg, q, k, v, *, causal, q_offset, kv_valid_len,
-                            block_tables, scale):
+                            block_tables, scale, k_scale=None, v_scale=None):
     from repro.kernels import ops
     return ops.paged_flash_attention(q, k, v, q_offset, kv_valid_len,
-                                     block_tables, causal=causal)
+                                     block_tables, causal=causal,
+                                     k_scale_pool=k_scale,
+                                     v_scale_pool=v_scale)
 
 
 @register("paged_attention", PATH_XLA)
 def _paged_attention_xla(cfg, q, k, v, *, causal, q_offset, kv_valid_len,
-                         block_tables, scale):
+                         block_tables, scale, k_scale=None, v_scale=None):
+    if k_scale is not None:
+        return _gathered_int8_chunked(
+            cfg, q, k, v, causal=causal, q_offset=q_offset,
+            kv_valid_len=kv_valid_len, block_tables=block_tables,
+            scale=scale, k_scale=k_scale, v_scale=v_scale)
     return core.online_attention(
         q, _gather_pages(k, block_tables), _gather_pages(v, block_tables),
         causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len,
@@ -596,22 +661,32 @@ def _paged_attention_xla(cfg, q, k, v, *, causal, q_offset, kv_valid_len,
 
 @register("paged_decode_attention", PATH_PALLAS)
 def _paged_decode_attention_pallas(cfg, q, k, v, *, q_offset, kv_valid_len,
-                                   block_tables, scale):
+                                   block_tables, scale, k_scale=None,
+                                   v_scale=None):
     """Single-token decode over paged KV on the Pallas streaming kernel.
     The kernel bakes in the default 1/sqrt(d) scale; a custom scale falls
-    back to the gather + chunked XLA form."""
+    back to the gather + chunked XLA form.  Quantized pools pass their
+    scale pages through — the kernel dequantizes tile-local."""
     if scale is not None and scale != q.shape[-1] ** -0.5:
         return _paged_decode_attention_xla(
             cfg, q, k, v, q_offset=q_offset, kv_valid_len=kv_valid_len,
-            block_tables=block_tables, scale=scale)
+            block_tables=block_tables, scale=scale, k_scale=k_scale,
+            v_scale=v_scale)
     from repro.kernels import ops
     return ops.paged_flash_decode(q[:, 0], k, v, block_tables,
-                                  kv_valid_len)[:, None]
+                                  kv_valid_len, k_scale_pool=k_scale,
+                                  v_scale_pool=v_scale)[:, None]
 
 
 @register("paged_decode_attention", PATH_XLA)
 def _paged_decode_attention_xla(cfg, q, k, v, *, q_offset, kv_valid_len,
-                                block_tables, scale):
+                                block_tables, scale, k_scale=None,
+                                v_scale=None):
+    if k_scale is not None:
+        return _gathered_int8_chunked(
+            cfg, q, k, v, causal=False, q_offset=q_offset,
+            kv_valid_len=kv_valid_len, block_tables=block_tables,
+            scale=scale, k_scale=k_scale, v_scale=v_scale)
     return core.online_attention(
         q, _gather_pages(k, block_tables), _gather_pages(v, block_tables),
         causal=False, q_offset=q_offset, kv_valid_len=kv_valid_len,
@@ -619,15 +694,17 @@ def _paged_decode_attention_xla(cfg, q, k, v, *, q_offset, kv_valid_len,
 
 
 def _paged_sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale,
-                decode, block_tables):
+                decode, block_tables, k_scale=None, v_scale=None):
     """Routing for block-table attention: mirrors the contiguous policy.
 
     Decode: Pallas paged streaming kernel where native under a Pallas
     preference, else the gather + chunked XLA form.  Prefill: Pallas
     (compiled or interpret) under a Pallas preference unless the shape is
     kernel-unrepresentable (custom scale, value-dim ≠ key-dim), else XLA.
-    Paged serving is single-host: an ambient ShardContext is a routing bug,
-    not a fallback case."""
+    Quantized pools (``k_scale``/``v_scale`` pages set) ride the same
+    routing — every path dequantizes after its gather.  Paged serving is
+    single-host: an ambient ShardContext is a routing bug, not a fallback
+    case."""
     from repro.distributed import context
     if context.get() is not None:
         raise NotImplementedError(
@@ -642,21 +719,58 @@ def _paged_sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale,
         else:
             fn = _REGISTRY["paged_decode_attention"][PATH_XLA]
         return fn(cfg, q, k, v, q_offset=q_offset, kv_valid_len=kv_valid_len,
-                  block_tables=block_tables, scale=scale)
+                  block_tables=block_tables, scale=scale, k_scale=k_scale,
+                  v_scale=v_scale)
     if cfg.use_pallas and kernel_ok:
         path = select_path("paged_attention", prefer_pallas=True)
     else:
         path = PATH_XLA
     return _REGISTRY["paged_attention"][path](
         cfg, q, k, v, causal=causal, q_offset=q_offset,
-        kv_valid_len=kv_valid_len, block_tables=block_tables, scale=scale)
+        kv_valid_len=kv_valid_len, block_tables=block_tables, scale=scale,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 # ---------------------------------------------------------------------------
 # Public dispatched ops.
 # ---------------------------------------------------------------------------
+SOFTMAX_FORMS = ("exact", "bf16", "exp2")
+_SOFTMAX_FORM = "exact"
+
+
+def softmax_form() -> str:
+    """The reduced-precision softmax form currently preferred ("exact" /
+    "bf16" / "exp2")."""
+    return _SOFTMAX_FORM
+
+
+def set_softmax_form(form: str) -> str:
+    """Set the process softmax-form preference; returns the previous form.
+
+    "exact" is the registry's standard online form; "bf16" accumulates the
+    normalizer in bfloat16; "exp2" computes exponentials as
+    ``2^((x−m)·log2 e)`` (the hardware-exp2 menu of PAPERS.md 2201.04562 /
+    2111.10770).  Every form's worst-case deviation from the fp32 two-pass
+    reference is bounded analytically in ``core.softmax_forms`` and pinned
+    by ``tests/test_numerics.py``.  Also settable via the
+    ``REPRO_SOFTMAX_FORM`` environment variable (read at import).
+    """
+    global _SOFTMAX_FORM
+    if form not in SOFTMAX_FORMS:
+        raise ValueError(
+            f"unknown softmax form {form!r}; expected one of {SOFTMAX_FORMS}")
+    prev = _SOFTMAX_FORM
+    _SOFTMAX_FORM = form
+    return prev
+
+
 def online_softmax(x: Array) -> Array:
-    """Softmax over the last axis via the best path for this backend."""
+    """Softmax over the last axis via the best path for this backend,
+    honoring the process softmax-form preference (``set_softmax_form`` /
+    ``REPRO_SOFTMAX_FORM``)."""
+    if _SOFTMAX_FORM != "exact":
+        _, fn = lookup(f"online_softmax_{_SOFTMAX_FORM}")
+        return fn(x)
     _, fn = lookup("online_softmax")
     return fn(x)
 
@@ -716,8 +830,10 @@ def sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale=None,
         Single-token decode (Tq == 1 semantics): routes the streaming
         decode kernels / decode registry ops instead of the prefill forms.
     k_scale, v_scale:
-        Per-position int8-cache dequant scales ([B, S, Hkv]); their
-        presence selects the direct dequantizing chunked path
+        Per-position int8-cache dequant scales: contiguous [B, S, Hkv]
+        (selects the direct dequantizing chunked path), or scale *pages*
+        [P, Hkv, BS] when ``block_tables`` is set — gathered/prefetched
+        alongside the int8 pools and applied after the read
         (inference-only).
     block_tables:
         [B, max_blocks] logical→physical block map (paged serving).  Built
@@ -727,7 +843,8 @@ def sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale=None,
     if block_tables is not None:
         return _paged_sdpa(cfg, q, k, v, causal=causal, q_offset=q_offset,
                            kv_valid_len=kv_valid_len, scale=scale,
-                           decode=decode, block_tables=block_tables)
+                           decode=decode, block_tables=block_tables,
+                           k_scale=k_scale, v_scale=v_scale)
     from repro.distributed import context
     ctx = context.get()
     if decode and ctx is not None:
@@ -788,3 +905,6 @@ def sdpa(cfg, q, k, v, *, causal, q_offset, kv_valid_len, scale=None,
 
 # Import-time: merge persisted decisions so a serving restart skips the sweep.
 load_persisted_decisions()
+# Import-time: honor the softmax-form environment preference.
+if os.environ.get("REPRO_SOFTMAX_FORM"):
+    set_softmax_form(os.environ["REPRO_SOFTMAX_FORM"])

@@ -272,18 +272,10 @@ def flash_attention_offset_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
 # Paged form: offset/valid-length prefill over a block pool + block table.
 # ---------------------------------------------------------------------------
 def _make_paged_kernel(*, scale: float, causal: bool, bq: int, bs: int,
-                       n_blocks: int):
-    def kernel(qoff_ref, vlen_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
-               lse_ref, m_sc, d_sc, acc_sc):
-        del tbl_ref                   # consumed by the index maps only
-        b = pl.program_id(0)
-        i = pl.program_id(2)          # q block
-        j = pl.program_id(3)          # logical KV block of row b
-
-        @pl.when(j == 0)
-        def _init():
-            _init_scratch(m_sc, d_sc, acc_sc)
-
+                       n_blocks: int, quantized: bool = False):
+    def body(b, i, j, q_ref, load_kv, o_ref, lse_ref, m_sc, d_sc, acc_sc,
+             qoff_ref, vlen_ref):
+        pl.when(j == 0)(lambda: _init_scratch(m_sc, d_sc, acc_sc))
         qoff = qoff_ref[b]
         vlen = vlen_ref[b]
         # live block: starts inside the valid cache, and (causal) at or below
@@ -295,8 +287,7 @@ def _make_paged_kernel(*, scale: float, causal: bool, bq: int, bs: int,
         @pl.when(run)
         def _compute():
             q = q_ref[0, 0].astype(jnp.float32) * scale      # [BQ, D]
-            k = k_ref[0, 0].astype(jnp.float32)              # [BS, D]
-            v = v_ref[0, 0].astype(jnp.float32)
+            k, v = load_kv()                                 # [BS, D] fp32
             s = q @ k.T                                      # [BQ, BS]
             k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 1)
             mask = k_pos < vlen
@@ -313,6 +304,39 @@ def _make_paged_kernel(*, scale: float, causal: bool, bq: int, bs: int,
             lse_ref[0, 0] = jnp.where(d_sc[...] > 0,
                                       m_sc[...] + jnp.log(d), NEG_INF)
 
+    if quantized:
+        def kernel(qoff_ref, vlen_ref, tbl_ref, q_ref, k_ref, v_ref, ks_ref,
+                   vs_ref, o_ref, lse_ref, m_sc, d_sc, acc_sc):
+            del tbl_ref               # consumed by the index maps only
+            b = pl.program_id(0)
+            i = pl.program_id(2)      # q block
+            j = pl.program_id(3)      # logical KV block of row b
+
+            def load_kv():
+                # dequantize AFTER the HBM read: int8 page × per-position
+                # scale column, gathered through the same clamped table entry
+                return ((k_ref[0, 0].astype(jnp.float32)
+                         * ks_ref[0, 0].astype(jnp.float32)[:, None]),
+                        (v_ref[0, 0].astype(jnp.float32)
+                         * vs_ref[0, 0].astype(jnp.float32)[:, None]))
+
+            body(b, i, j, q_ref, load_kv, o_ref, lse_ref, m_sc, d_sc, acc_sc,
+                 qoff_ref, vlen_ref)
+    else:
+        def kernel(qoff_ref, vlen_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                   lse_ref, m_sc, d_sc, acc_sc):
+            del tbl_ref               # consumed by the index maps only
+            b = pl.program_id(0)
+            i = pl.program_id(2)      # q block
+            j = pl.program_id(3)      # logical KV block of row b
+
+            def load_kv():
+                return (k_ref[0, 0].astype(jnp.float32),
+                        v_ref[0, 0].astype(jnp.float32))
+
+            body(b, i, j, q_ref, load_kv, o_ref, lse_ref, m_sc, d_sc, acc_sc,
+                 qoff_ref, vlen_ref)
+
     return kernel
 
 
@@ -321,6 +345,8 @@ def flash_attention_paged_pallas(q: jax.Array, k_pool: jax.Array,
                                  v_pool: jax.Array, q_offset: jax.Array,
                                  kv_valid_len: jax.Array,
                                  block_tables: jax.Array, *,
+                                 k_scale_pool: jax.Array | None = None,
+                                 v_scale_pool: jax.Array | None = None,
                                  causal: bool = True, bq: int = 512,
                                  interpret: bool = False):
     """Paged cached-prefill flash attention.
@@ -338,6 +364,10 @@ def flash_attention_paged_pallas(q: jax.Array, k_pool: jax.Array,
     before the online-softmax update, exactly like the contiguous offset
     kernel above.  The online ``(m, d)`` carry (paper Alg. 3) is what makes
     one pass over an arbitrary page list correct.
+
+    ``k_scale_pool``/``v_scale_pool`` [P, Hkv, BS] set selects the quantized
+    form: int8 pools plus per-position scale pages gathered through the SAME
+    clamped table index and applied in VMEM before the online update.
     """
     b, hq, tq, dh = q.shape
     _, hkv, bs, _ = k_pool.shape
@@ -348,6 +378,7 @@ def flash_attention_paged_pallas(q: jax.Array, k_pool: jax.Array,
     scale = dh ** -0.5
     q_offset = jnp.asarray(q_offset, jnp.int32).reshape(b)
     kv_valid_len = jnp.asarray(kv_valid_len, jnp.int32).reshape(b)
+    quantized = k_scale_pool is not None
 
     def last_live_block(b_, i, qoff_ref, vlen_ref):
         last = jnp.maximum((vlen_ref[b_] + bs - 1) // bs - 1, 0)
@@ -360,19 +391,34 @@ def flash_attention_paged_pallas(q: jax.Array, k_pool: jax.Array,
         jc = jnp.minimum(j, last_live_block(b_, i, qoff_ref, vlen_ref))
         return (tbl_ref[b_, jc], h // g, 0, 0)
 
+    def scale_index(qoff_ref, vlen_ref, tbl_ref, b_, h, i, j):
+        return kv_index(qoff_ref, vlen_ref, tbl_ref, b_, h, i, j)[:3]
+
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, dh),
+                     lambda b_, h, i, j, qo, vl, tbl: (b_, h, i, 0)),
+        pl.BlockSpec((1, 1, bs, dh),
+                     lambda b_, h, i, j, qo, vl, tbl: kv_index(
+                         qo, vl, tbl, b_, h, i, j)),
+        pl.BlockSpec((1, 1, bs, dh),
+                     lambda b_, h, i, j, qo, vl, tbl: kv_index(
+                         qo, vl, tbl, b_, h, i, j)),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, bs),
+                         lambda b_, h, i, j, qo, vl, tbl: scale_index(
+                             qo, vl, tbl, b_, h, i, j)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda b_, h, i, j, qo, vl, tbl: scale_index(
+                             qo, vl, tbl, b_, h, i, j)),
+        ]
+        operands += [k_scale_pool, v_scale_pool]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, hq, tq // bq, m),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, dh),
-                         lambda b_, h, i, j, qo, vl, tbl: (b_, h, i, 0)),
-            pl.BlockSpec((1, 1, bs, dh),
-                         lambda b_, h, i, j, qo, vl, tbl: kv_index(
-                             qo, vl, tbl, b_, h, i, j)),
-            pl.BlockSpec((1, 1, bs, dh),
-                         lambda b_, h, i, j, qo, vl, tbl: kv_index(
-                             qo, vl, tbl, b_, h, i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, bq, dh),
                          lambda b_, h, i, j, qo, vl, tbl: (b_, h, i, 0)),
@@ -385,11 +431,11 @@ def flash_attention_paged_pallas(q: jax.Array, k_pool: jax.Array,
     )
     out, lse = pl.pallas_call(
         _make_paged_kernel(scale=scale, causal=causal, bq=bq, bs=bs,
-                           n_blocks=m),
+                           n_blocks=m, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((b, hq, tq, dh), q.dtype),
                    jax.ShapeDtypeStruct((b, hq, tq, 1), jnp.float32)],
         interpret=interpret,
-    )(q_offset, kv_valid_len, jnp.asarray(block_tables, jnp.int32), q,
-      k_pool, v_pool)
+    )(q_offset, kv_valid_len, jnp.asarray(block_tables, jnp.int32),
+      *operands)
     return out, lse

@@ -105,43 +105,71 @@ def flash_decode_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Paged form: the cache is a block pool + per-row block table.
+# Paged form: the cache is a block pool + per-row block table.  The quantized
+# variant streams int8 K/V pages plus their bf16 scale pages (same table,
+# same clamped page index) and dequantizes tile-local in VMEM — HBM traffic
+# stays ~1 byte per cache element.
 # ---------------------------------------------------------------------------
-def _make_paged_kernel(*, scale: float, g: int, bs: int, n_blocks: int):
-    def kernel(tbl_ref, vlen_ref, q_ref, k_ref, v_ref, o_ref, m_sc, d_sc,
-               acc_sc):
-        b = pl.program_id(0)
-        j = pl.program_id(2)          # logical block of row b
+def _make_paged_kernel(*, scale: float, g: int, bs: int, n_blocks: int,
+                       quantized: bool = False):
+    def _update(j, vlen, q_ref, k, v, m_sc, d_sc, acc_sc):
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # [G, D]
+        s = q @ k.T                                         # [G, BS]
+        k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < vlen, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        alpha = jnp.exp(jnp.where(m_prev == m_new, 0.0, m_prev - m_new))
+        p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - m_new))
+        d_sc[...] = d_sc[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * alpha + p @ v
+        m_sc[...] = m_new
 
-        @pl.when(j == 0)
-        def _init():
-            m_sc[...] = jnp.full_like(m_sc, NEG_INF)
-            d_sc[...] = jnp.zeros_like(d_sc)
-            acc_sc[...] = jnp.zeros_like(acc_sc)
+    def _init(m_sc, d_sc, acc_sc):
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        d_sc[...] = jnp.zeros_like(d_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
 
-        vlen = vlen_ref[b]
-        run = j * bs < vlen           # skip blocks wholly past the valid cache
+    def _finalize(o_ref, m_sc, d_sc, acc_sc):
+        o_ref[0, 0] = (acc_sc[...] /
+                       jnp.maximum(d_sc[...], 1e-30)).astype(o_ref.dtype)
 
-        @pl.when(run)
-        def _compute():
-            q = q_ref[0, 0].astype(jnp.float32) * scale     # [G, D]
-            k = k_ref[0, 0].astype(jnp.float32)             # [BS, D]
-            v = v_ref[0, 0].astype(jnp.float32)
-            s = q @ k.T                                     # [G, BS]
-            k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-            s = jnp.where(k_pos < vlen, s, NEG_INF)
-            m_prev = m_sc[...]
-            m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
-            alpha = jnp.exp(jnp.where(m_prev == m_new, 0.0, m_prev - m_new))
-            p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - m_new))
-            d_sc[...] = d_sc[...] * alpha + jnp.sum(p, -1, keepdims=True)
-            acc_sc[...] = acc_sc[...] * alpha + p @ v
-            m_sc[...] = m_new
+    if quantized:
+        def kernel(tbl_ref, vlen_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                   o_ref, m_sc, d_sc, acc_sc):
+            b = pl.program_id(0)
+            j = pl.program_id(2)      # logical block of row b
+            pl.when(j == 0)(lambda: _init(m_sc, d_sc, acc_sc))
+            vlen = vlen_ref[b]
 
-        @pl.when(j == n_blocks - 1)
-        def _finalize():
-            o_ref[0, 0] = (acc_sc[...] /
-                           jnp.maximum(d_sc[...], 1e-30)).astype(o_ref.dtype)
+            @pl.when(j * bs < vlen)
+            def _compute():
+                # dequantize AFTER the HBM read: int8 page × per-position
+                # scale column, both fetched through the same table entry
+                k = (k_ref[0, 0].astype(jnp.float32)
+                     * ks_ref[0, 0].astype(jnp.float32)[:, None])  # [BS, D]
+                v = (v_ref[0, 0].astype(jnp.float32)
+                     * vs_ref[0, 0].astype(jnp.float32)[:, None])
+                _update(j, vlen, q_ref, k, v, m_sc, d_sc, acc_sc)
+
+            pl.when(j == n_blocks - 1)(
+                lambda: _finalize(o_ref, m_sc, d_sc, acc_sc))
+    else:
+        def kernel(tbl_ref, vlen_ref, q_ref, k_ref, v_ref, o_ref, m_sc, d_sc,
+                   acc_sc):
+            b = pl.program_id(0)
+            j = pl.program_id(2)      # logical block of row b
+            pl.when(j == 0)(lambda: _init(m_sc, d_sc, acc_sc))
+            vlen = vlen_ref[b]
+
+            @pl.when(j * bs < vlen)
+            def _compute():
+                k = k_ref[0, 0].astype(jnp.float32)             # [BS, D]
+                v = v_ref[0, 0].astype(jnp.float32)
+                _update(j, vlen, q_ref, k, v, m_sc, d_sc, acc_sc)
+
+            pl.when(j == n_blocks - 1)(
+                lambda: _finalize(o_ref, m_sc, d_sc, acc_sc))
 
     return kernel
 
@@ -150,6 +178,8 @@ def _make_paged_kernel(*, scale: float, g: int, bs: int, n_blocks: int):
 def flash_decode_paged_pallas(q: jax.Array, k_pool: jax.Array,
                               v_pool: jax.Array, block_tables: jax.Array,
                               kv_valid_len: jax.Array, *,
+                              k_scale_pool: jax.Array | None = None,
+                              v_scale_pool: jax.Array | None = None,
                               interpret: bool = False) -> jax.Array:
     """q [B, Hq, D]; pools [P, Hkv, BS, D]; block_tables [B, M] (physical pool
     block per logical block, scalar-prefetched); kv_valid_len [B] →
@@ -161,30 +191,51 @@ def flash_decode_paged_pallas(q: jax.Array, k_pool: jax.Array,
     the sentinel — so the index maps clamp to the row's last live block (no
     fetch scheduled, compute skipped via ``pl.when``), and the tail block's
     out-of-range columns are masked to −inf before the online update.
+
+    ``k_scale_pool``/``v_scale_pool`` [P, Hkv, BS] set selects the quantized
+    form: the pools are int8 and each grid step additionally streams the
+    page's per-position scale column — through the SAME clamped table index —
+    dequantizing in VMEM before the online update.
     """
     b, hq, dh = q.shape
     _, hkv, bs, _ = k_pool.shape
     m = block_tables.shape[1]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, dh)
+    quantized = k_scale_pool is not None
 
     def page_index(tbl_ref, vlen_ref, b_, h, j):
         last = jnp.maximum((vlen_ref[b_] + bs - 1) // bs - 1, 0)
         return (tbl_ref[b_, jnp.minimum(j, last)], h, 0, 0)
 
+    def scale_index(tbl_ref, vlen_ref, b_, h, j):
+        return page_index(tbl_ref, vlen_ref, b_, h, j)[:3]
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, dh),
+                     lambda b_, h, j, tbl, vl: (b_, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, dh),
+                     lambda b_, h, j, tbl, vl: page_index(tbl, vl, b_,
+                                                          h, j)),
+        pl.BlockSpec((1, 1, bs, dh),
+                     lambda b_, h, j, tbl, vl: page_index(tbl, vl, b_,
+                                                          h, j)),
+    ]
+    operands = [qg, k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, bs),
+                         lambda b_, h, j, tbl, vl: scale_index(tbl, vl, b_,
+                                                               h, j)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda b_, h, j, tbl, vl: scale_index(tbl, vl, b_,
+                                                               h, j)),
+        ]
+        operands += [k_scale_pool, v_scale_pool]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, m),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, dh),
-                         lambda b_, h, j, tbl, vl: (b_, h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, dh),
-                         lambda b_, h, j, tbl, vl: page_index(tbl, vl, b_,
-                                                              h, j)),
-            pl.BlockSpec((1, 1, bs, dh),
-                         lambda b_, h, j, tbl, vl: page_index(tbl, vl, b_,
-                                                              h, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, dh),
                                lambda b_, h, j, tbl, vl: (b_, h, 0, 0)),
         scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
@@ -192,10 +243,11 @@ def flash_decode_paged_pallas(q: jax.Array, k_pool: jax.Array,
                         pltpu.VMEM((g, dh), jnp.float32)],
     )
     out = pl.pallas_call(
-        _make_paged_kernel(scale=dh ** -0.5, g=g, bs=bs, n_blocks=m),
+        _make_paged_kernel(scale=dh ** -0.5, g=g, bs=bs, n_blocks=m,
+                           quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
         interpret=interpret,
     )(jnp.asarray(block_tables, jnp.int32),
-      jnp.asarray(kv_valid_len, jnp.int32), qg, k_pool, v_pool)
+      jnp.asarray(kv_valid_len, jnp.int32), *operands)
     return out.reshape(b, hq, dh)

@@ -295,28 +295,36 @@ def flash_decode(q: Array, k_cache: Array, v_cache: Array,
 # business of ``repro.serving.paged`` (grep-enforced).
 # ---------------------------------------------------------------------------
 def paged_flash_decode(q: Array, k_pool: Array, v_pool: Array,
-                       block_tables: Array, kv_valid_len: Array) -> Array:
+                       block_tables: Array, kv_valid_len: Array, *,
+                       k_scale_pool: Array | None = None,
+                       v_scale_pool: Array | None = None) -> Array:
     """Paged decode attention: q [B,Hq,D]; pools [P,Hkv,BS,D]; block_tables
     [B,M]; kv_valid_len [B] → [B,Hq,D].
 
     The KV tile width is the pool block size (no free tile knob — paging
     fixes the gather granularity), so nothing resolves through
-    ``attention_tiles`` here."""
+    ``attention_tiles`` here.  ``k_scale_pool``/``v_scale_pool`` [P,Hkv,BS]
+    select the quantized (int8 pools + per-position scale pages) form."""
     return flash_decode_paged_pallas(q, k_pool, v_pool, block_tables,
                                      kv_valid_len,
+                                     k_scale_pool=k_scale_pool,
+                                     v_scale_pool=v_scale_pool,
                                      interpret=compat.pallas_interpret())
 
 
 def paged_flash_attention(q: Array, k_pool: Array, v_pool: Array,
                           q_offset: Array, kv_valid_len: Array,
                           block_tables: Array, *, causal: bool = True,
-                          bq: int | None = None) -> Array:
+                          bq: int | None = None,
+                          k_scale_pool: Array | None = None,
+                          v_scale_pool: Array | None = None) -> Array:
     """Paged cached-prefill flash attention (model layout), inference-only.
 
     q [B, Tq, Hq, D]; pools [P, Hkv, BS, D]; q_offset / kv_valid_len [B];
     block_tables [B, M] → out [B, Tq, Hq, D].  ``bq`` unset resolves through
     the registry's paged-prefill sweep; the KV tile is pinned to the pool
-    block size."""
+    block size.  ``k_scale_pool``/``v_scale_pool`` [P, Hkv, BS] select the
+    quantized (int8 pools + per-position scale pages) form."""
     b, tq = q.shape[:2]
     bs = k_pool.shape[2]
     if bq is None:
@@ -330,6 +338,6 @@ def paged_flash_attention(q: Array, k_pool: Array, v_pool: Array,
                                     (b,))
     out, _ = flash_attention_paged_pallas(
         jnp.swapaxes(q, 1, 2), k_pool, v_pool, q_offset, kv_valid_len,
-        block_tables, causal=causal, bq=bq,
-        interpret=compat.pallas_interpret())
+        block_tables, causal=causal, bq=bq, k_scale_pool=k_scale_pool,
+        v_scale_pool=v_scale_pool, interpret=compat.pallas_interpret())
     return jnp.swapaxes(out, 1, 2)

@@ -222,8 +222,6 @@ def build_prefill(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
                     mesh, P(ba_s, None, None)),
                 sds((gb, t), jnp.int32, mesh, P(ba_s, None)),
                 sds((2,), jnp.uint32, mesh, P()))
-        cache_sds = jax.eval_shape(
-            lambda: _encdec_cache(cfg, gb, t))
     else:
         tt = t - cfg.num_patches if cfg.family == "vlm" else t
 
@@ -242,22 +240,12 @@ def build_prefill(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
             args.append(sds((gb, cfg.num_patches, cfg.d_model), jnp.bfloat16,
                             mesh, P(ba_s, None, None)))
         args = tuple(args)
-        cache_sds = jax.eval_shape(lambda: serving.init_cache(cfg, gb, t))
+    # cache shapes come from the config's cache family — one owner for
+    # every layout (dense, quantized, state, enc-dec), no local duplicates
+    cache_sds = jax.eval_shape(lambda: serving.init_cache(cfg, gb, t))
     cache_sh = cache_shardings(cache_sds, mesh, rules, ba, sa)
     out_sh = (compat.named_sharding(mesh, P(ba_s)), cache_sh, compat.named_sharding(mesh, P()))
     return fn, args, out_sh, ()
-
-
-def _encdec_cache(cfg, b, max_len):
-    dt = jnp.dtype(cfg.dtype)
-    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-    n = cfg.num_layers
-    return {
-        "self": {"k": jnp.zeros((n, b, max_len, hkv, hd), dt),
-                 "v": jnp.zeros((n, b, max_len, hkv, hd), dt)},
-        "cross": {"k": jnp.zeros((n, b, cfg.encoder_seq_len, hkv, hd), dt),
-                  "v": jnp.zeros((n, b, cfg.encoder_seq_len, hkv, hd), dt)},
-    }
 
 
 def build_decode(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
@@ -273,17 +261,14 @@ def build_decode(run: RunConfig, mesh, par, shape_cfg: ShapeConfig):
     gb, s = shape_cfg.global_batch, shape_cfg.seq_len
 
     if cfg.family == "encdec":
-        cache_sds = jax.eval_shape(lambda: _encdec_cache(cfg, gb, s))
-
         def fn(params, caches, cache_len, tokens, rng):
             return serving.encdec_decode_step(params, caches, cache_len,
                                               tokens, cfg, rng=rng)
     else:
-        cache_sds = jax.eval_shape(lambda: serving.init_cache(cfg, gb, s))
-
         def fn(params, caches, cache_len, tokens, rng):
             return serving.decode_step(params, caches, cache_len, tokens,
                                        cfg, rng=rng, top_k=5)
+    cache_sds = jax.eval_shape(lambda: serving.init_cache(cfg, gb, s))
     cache_sh = cache_shardings(cache_sds, mesh, rules, ba, sa)
     caches = compat.tree_map(lambda x, sh: sds(x.shape, x.dtype, mesh, sh.spec),
                           cache_sds, cache_sh)

@@ -324,10 +324,16 @@ def main(argv=None):
                     help="enable the repro.obs metrics registry + kernel "
                          "cost profiling; prints dispatch paths and a "
                          "snapshot summary after the run")
+    ap.add_argument("--kv-cache-dtype", default="",
+                    help="override the config's KV-cache dtype (e.g. int8: "
+                         "quantized K/V with per-position scales, dequantized "
+                         "in the gather; empty = config default)")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get(args.arch))
+    if args.kv_cache_dtype:
+        cfg = cfg.replace(kv_cache_dtype=args.kv_cache_dtype)
     family = cache_family.resolve(cfg)
     if family.requires_paged and not (args.continuous and args.paged):
         raise SystemExit(f"{args.arch}: enc-dec serves under --continuous "

@@ -272,16 +272,45 @@ def attention_apply(p: PyTree, x: Array, cfg: ModelConfig, *,
     new_cache = None
     if cache is not None and block_tables is not None:
         # paged: scatter this step's K/V into the shared pool through the
-        # block table, then attend over the gathered page list.  fp caches
-        # only (int8 prefill recomputes on exact fp tensors) and single-host
+        # block table, then attend over the gathered page list.  Single-host
         # (dispatch raises under an ambient ShardContext).
-        k_pool = paged_cache_write(cache["k"], k, cache_len, block_tables)
-        v_pool = paged_cache_write(cache["v"], v, cache_len, block_tables)
-        new_cache = {"k": k_pool, "v": v_pool}
-        valid = _valid_len(cache_len, t, b)
-        out = _sdpa(cfg, q, k_pool, v_pool, causal=t > 1, q_offset=cache_len,
-                    kv_valid_len=valid, decode=(t == 1),
-                    block_tables=block_tables)
+        if "k_scale" in cache:
+            # quantized pool: int8 K/V pages + bf16 per-(pos, head) scale
+            # pages share one block table; the gather step dequantizes
+            # after the HBM read.  Prefill is single-shot (scheduler policy
+            # from the family), so t > 1 attends over the exact fp tensors
+            # of the whole prompt — identical math to the unpaged int8
+            # prefill — while the quantized pages are written for decode.
+            k8, ks = _quantize_kv(k)
+            v8, vs = _quantize_kv(v)
+            new_cache = {
+                "k": paged_cache_write(cache["k"], k8, cache_len,
+                                       block_tables),
+                "v": paged_cache_write(cache["v"], v8, cache_len,
+                                       block_tables),
+                "k_scale": paged_cache_write(cache["k_scale"], ks, cache_len,
+                                             block_tables),
+                "v_scale": paged_cache_write(cache["v_scale"], vs, cache_len,
+                                             block_tables)}
+            valid = _valid_len(cache_len, t, b)
+            if t > 1:
+                out = _sdpa(cfg, q, k, v, causal=True, q_offset=cache_len,
+                            kv_valid_len=valid)
+            else:
+                out = _sdpa(cfg, q, new_cache["k"], new_cache["v"],
+                            causal=False, q_offset=cache_len,
+                            kv_valid_len=valid, decode=True,
+                            k_scale=new_cache["k_scale"],
+                            v_scale=new_cache["v_scale"],
+                            block_tables=block_tables)
+        else:
+            k_pool = paged_cache_write(cache["k"], k, cache_len, block_tables)
+            v_pool = paged_cache_write(cache["v"], v, cache_len, block_tables)
+            new_cache = {"k": k_pool, "v": v_pool}
+            valid = _valid_len(cache_len, t, b)
+            out = _sdpa(cfg, q, k_pool, v_pool, causal=t > 1,
+                        q_offset=cache_len, kv_valid_len=valid,
+                        decode=(t == 1), block_tables=block_tables)
     elif cache is not None and "k_scale" in cache:
         # the cache layout, not a config string, selects the quantized path
         # (layout construction lives in serving.cache_family)

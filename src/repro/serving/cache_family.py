@@ -25,10 +25,12 @@ block copies, LRU parking — run unchanged across families.
 
 Families are resolved per config (``resolve(cfg)``) and cached, so the
 jitted helpers the scheduler builds around a family persist for the process.
-The ``dense_int8`` family is registered but paged serving for it is a
-follow-up: the dequant hook below is the protocol boundary where per-block
-scales will be consumed (PAPERS.md 2201.04562 / 2111.10770 supply the
-reduced-precision menu).
+The ``dense_int8`` family serves paged: its block pools carry int8 K/V plus
+per-(position, head) bfloat16 scale pages (block axis still at leaf
+position 1), and ``dequantize_block`` is the protocol boundary the kernel
+gather step lowers — scales are consumed tile-local, after the HBM read
+(PAPERS.md 2201.04562 / 2111.10770 supply the reduced-precision menu the
+softmax-form registry draws from).
 """
 from __future__ import annotations
 
@@ -173,8 +175,8 @@ class CacheFamily:
     # -- quantization hook ----------------------------------------------
     def dequantize_block(self, block: PyTree) -> PyTree:
         """Dequantize one block payload to compute dtype.  Identity for fp
-        families; the int8 family overrides this as the (stubbed) seam the
-        in-kernel dequant gather will consume."""
+        families; the int8 family overrides this with the same arithmetic
+        the in-kernel dequant gather applies tile-local."""
         return block
 
 
@@ -233,8 +235,14 @@ class DenseInt8Family(DenseFamily):
     Continuous-serveable with single-shot prefill: the quantized prefill
     computes on the CURRENT chunk's exact fp tensors only — the quantized
     prefix is never re-read during prefill — so a chunk schedule would
-    silently drop the prefix.  Paged serving is the registered follow-up:
-    it needs the dequant hook below lowered into the kernel gather step.
+    silently drop the prefix.  Paged pools add bfloat16 ``k_scale`` /
+    ``v_scale`` pages beside the int8 K/V pools (same block axis, one scale
+    per (position, kv-head)); the gather step dequantizes with them
+    tile-local — in the chunked-XLA fallback via ``_chunked_fwd_impl`` and
+    in the Pallas paged kernels via scalar-prefetched scale pages — so the
+    pool lifecycle (swap, CoW, LRU parking) never sees fp data.  Blocks are
+    not prefix-shared: scales are per-sequence write-time artifacts, so the
+    family opts out of the prefix index rather than risk mixing chains.
     """
 
     name = "dense_int8"
@@ -242,16 +250,43 @@ class DenseInt8Family(DenseFamily):
     single_shot_prefill = True
     shareable = False
 
-    def __init__(self, cfg: ModelConfig):
-        super().__init__(cfg)
-        self.paged_serveable = False
-        self.paged_unsupported_reason = (
-            "needs standard fp attention caches in every block")
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         slot_len: Optional[int] = None) -> list:
+        if not self.paged_serveable:
+            self._reject_paged()
+        cfg = self.cfg
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        return [{"attn": {
+            "k": jnp.zeros((count, num_blocks, hkv, block_size, hd),
+                           jnp.int8),
+            "v": jnp.zeros((count, num_blocks, hkv, block_size, hd),
+                           jnp.int8),
+            "k_scale": jnp.zeros((count, num_blocks, hkv, block_size),
+                                 jnp.bfloat16),
+            "v_scale": jnp.zeros((count, num_blocks, hkv, block_size),
+                                 jnp.bfloat16)}}
+            for _, count in transformer.block_pattern(cfg)]
 
     def dequantize_block(self, block: PyTree) -> PyTree:
-        raise NotImplementedError(
-            "int8 paged blocks are a registered follow-up: dequantize with "
-            "the per-position k_scale/v_scale at the kernel gather step")
+        """Reconstruct fp32 K/V from one block's int8 payload + scale pages.
+
+        ``block`` is a single physical block's payload — any tree whose
+        ``attn`` dicts pair ``k``/``v`` int8 leaves ``[..., BS, hd]`` with
+        ``k_scale``/``v_scale`` leaves ``[..., BS]``.  This is the exact
+        arithmetic the kernels apply tile-local after the HBM read
+        (``x.astype(f32) * scale.astype(f32)``); tests pin the two against
+        each other so the hook can't drift from the lowered form.
+        """
+        def deq(attn: dict) -> dict:
+            return {
+                "k": (attn["k"].astype(jnp.float32)
+                      * attn["k_scale"].astype(jnp.float32)[..., None]),
+                "v": (attn["v"].astype(jnp.float32)
+                      * attn["v_scale"].astype(jnp.float32)[..., None])}
+        if isinstance(block, dict):
+            return {"attn": deq(block["attn"])} if "attn" in block \
+                else deq(block)
+        return [self.dequantize_block(seg) for seg in block]
 
 
 class FixedStateFamily(CacheFamily):

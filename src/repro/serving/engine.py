@@ -240,10 +240,11 @@ def decode_step_slots(params: PyTree, caches: list, slot_lens: Array,
 # ---------------------------------------------------------------------------
 def paged_supported(cfg: ModelConfig) -> bool:
     """Paged serving covers every config whose cache family implements the
-    block-pool layout: dense token blocks, fixed-size state rows, enc-dec
-    cross/self blocks.  int8 caches and MLA latent caches are the registered
-    follow-ups (``cache_family.DenseInt8Family.dequantize_block`` is the
-    seam)."""
+    block-pool layout: dense token blocks, quantized dense blocks (int8 K/V
+    pools beside bfloat16 scale pages, dequantized in the gather —
+    ``cache_family.DenseInt8Family.dequantize_block`` states the arithmetic),
+    fixed-size state rows, enc-dec cross/self blocks.  MLA latent caches are
+    the registered follow-up."""
     return cache_family.resolve(cfg).paged_serveable
 
 

@@ -609,9 +609,12 @@ class PagedPool:
         """Register the finished prompt's block chain so later arrivals with
         the same prefix share it.  Full blocks key the exact-match chain;
         a partial tail registers as a divergence-block candidate.  Enc-dec
-        registers the cross blocks under the whole-audio key; fixed-state
-        registers nothing (state never shares)."""
-        if self.family.kind == "state":
+        registers the cross blocks under the whole-audio key; non-shareable
+        families (fixed-state mutates in place, dense_int8 keeps scales as
+        per-sequence write-time artifacts) register nothing — their index
+        stays empty, so ``admit`` never matches and ``release`` frees
+        blocks outright instead of parking them in the prefix LRU."""
+        if not self.family.shareable:
             return
         if self.family.kind == "encdec":
             toks = [int(t) for t in seq.prompt]

@@ -828,9 +828,15 @@ class ContinuousScheduler:
                     "length": jnp.asarray(seq.matched, jnp.int32),
                     "pos": seq.matched,
                     # prefill resumes at the first unmatched token — shared
-                    # prefix blocks already hold bit-identical cache content
-                    "sizes": deque(engine.prefill_schedule(
-                        len(req.prompt) - seq.matched, self.prefill_chunk)),
+                    # prefix blocks already hold bit-identical cache content;
+                    # single-shot families (quantized prefill never re-reads
+                    # the stored prefix) get the whole remainder in one chunk
+                    "sizes": deque(
+                        [len(req.prompt) - seq.matched]
+                        if self._single_shot_prefill
+                        else engine.prefill_schedule(
+                            len(req.prompt) - seq.matched,
+                            self.prefill_chunk)),
                     "last": None,
                 }
             self._admitted(self._prefill["flight"])

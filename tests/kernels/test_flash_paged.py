@@ -133,6 +133,107 @@ def test_paged_prefill_bq_tiling_consistent(pool):
 
 
 # ---------------------------------------------------------------------------
+# Quantized pools: in-kernel int8 dequant gather (ISSUE 10).
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def int8_pool():
+    """int8 K/V pools + bfloat16 scale pages on the same block axis."""
+    rng = np.random.default_rng(7)
+    k8 = jnp.asarray(rng.integers(-127, 128, (P, HKV, BS, D)), jnp.int8)
+    v8 = jnp.asarray(rng.integers(-127, 128, (P, HKV, BS, D)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.01, 0.2, (P, HKV, BS)), jnp.bfloat16)
+    vs = jnp.asarray(rng.uniform(0.01, 0.2, (P, HKV, BS)), jnp.bfloat16)
+    tables = jnp.asarray(
+        rng.permutation(P - 1)[:B * M].reshape(B, M) + 1, jnp.int32)
+    return k8, v8, ks, vs, tables
+
+
+def _dequant_gathered(pool8, spool, tables):
+    """The reference: materialize the gather, THEN dequantize — the kernel
+    must compute this while reading int8 + scales through the table."""
+    return (_gathered(pool8.astype(jnp.float32), tables)
+            * _gathered_scales(spool, tables).astype(jnp.float32)[..., None])
+
+
+def _gathered_scales(spool, tables):
+    g = jnp.swapaxes(spool[tables], 2, 3)
+    return g.reshape(tables.shape[0], -1, HKV)
+
+
+@pytest.mark.parametrize("vlens", [(5, 17, 32), (1, 8, 9)])
+def test_paged_decode_int8_dequantizes_in_kernel(int8_pool, vlens):
+    k8, v8, ks, vs, tables = int8_pool
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(B, HQ, D)).astype(np.float32))
+    vlen = jnp.asarray(vlens, jnp.int32)
+    got = ops.paged_flash_decode(q, k8, v8, tables, vlen,
+                                 k_scale_pool=ks, v_scale_pool=vs)
+    want = core.naive_attention(
+        q[:, None], _dequant_gathered(k8, ks, tables),
+        _dequant_gathered(v8, vs, tables), causal=False,
+        kv_valid_len=vlen)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_int8_dequantizes_in_kernel(int8_pool):
+    k8, v8, ks, vs, tables = int8_pool
+    rng = np.random.default_rng(9)
+    tq = 6
+    q = jnp.asarray(rng.normal(size=(B, tq, HQ, D)).astype(np.float32))
+    qoff = jnp.asarray([2, 9, 20], jnp.int32)
+    vlen = qoff + tq
+    got = ops.paged_flash_attention(q, k8, v8, qoff, vlen, tables,
+                                    causal=True, k_scale_pool=ks,
+                                    v_scale_pool=vs)
+    want = core.online_attention(
+        q, _dequant_gathered(k8, ks, tables),
+        _dequant_gathered(v8, vs, tables), causal=True, q_offset=qoff,
+        kv_valid_len=vlen, chunk_size=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_int8_dead_tiles_stay_dead(int8_pool):
+    """Scale pages ride the SAME clamped page index as K/V — dead table
+    entries (sentinel vs garbage) must not change the quantized result."""
+    k8, v8, ks, vs, tables = int8_pool
+    rng = np.random.default_rng(10)
+    q = jnp.asarray(rng.normal(size=(B, HQ, D)).astype(np.float32))
+    vlen = jnp.asarray([7, 12, 3], jnp.int32)
+    live = [1, 2, 1]
+    t_sentinel = np.asarray(tables).copy()
+    t_other = np.asarray(tables).copy()
+    for b, n in enumerate(live):
+        t_sentinel[b, n:] = 0
+        t_other[b, n:] = (b + 1) % (P - 1) + 1
+    got_s = ops.paged_flash_decode(q, k8, v8, jnp.asarray(t_sentinel), vlen,
+                                   k_scale_pool=ks, v_scale_pool=vs)
+    got_o = ops.paged_flash_decode(q, k8, v8, jnp.asarray(t_other), vlen,
+                                   k_scale_pool=ks, v_scale_pool=vs)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(got_o))
+
+
+def test_sdpa_paged_int8_pallas_matches_xla_gather(int8_pool):
+    """dispatch.sdpa with quantized pools: the Pallas preference (interpret
+    here) and the XLA dequant-gather fallback must agree."""
+    import repro.configs as configs
+    cfg = configs.get_smoke("smollm_360m").replace(kv_cache_dtype="int8")
+    k8, v8, ks, vs, tables = int8_pool
+    rng = np.random.default_rng(11)
+    tq = 4
+    q = jnp.asarray(rng.normal(size=(B, tq, HQ, D)).astype(np.float32))
+    qoff = jnp.asarray([0, 5, 11], jnp.int32)
+    vlen = qoff + tq
+    kw = dict(causal=True, q_offset=qoff, kv_valid_len=vlen,
+              block_tables=tables, k_scale=ks, v_scale=vs)
+    ref = dispatch.sdpa(cfg, q, k8, v8, **kw)
+    got = dispatch.sdpa(cfg.replace(use_pallas=True), q, k8, v8, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # Dispatch routing.
 # ---------------------------------------------------------------------------
 def test_paged_registry_paths_registered():

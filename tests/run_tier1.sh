@@ -34,8 +34,9 @@ python -m pytest -x -q "$@" \
     tests/test_serving_families.py \
     tests/test_serving_paged.py
 
-echo "== tier-1 group 3: router, slo, substrate, system, data, training =="
+echo "== tier-1 group 3: router, slo, numerics, substrate, system, data, training =="
 python -m pytest -x -q "$@" \
+    tests/test_numerics.py \
     tests/test_serving_router.py \
     tests/test_serving_slo.py \
     tests/test_substrate.py \

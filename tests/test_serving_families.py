@@ -21,6 +21,12 @@ The load-bearing claims:
   never hands out the sentinel, and keeps free+live partitioning the pool
   (property test — real hypothesis where installed, the fixed-seed fallback
   elsewhere).
+* **dense_int8 serves paged EXACTLY like unpaged** (ISSUE 10): the same
+  quantized bits land in the pool either way and the gather dequantizes with
+  the same arithmetic and chunk split, so token streams are identical across
+  burst/staggered/reversed arrivals; preempt-and-swap round-trips the int8
+  payload AND its scale pages bit-exactly; and the family's no-share policy
+  holds — identical prompts never share blocks, the prefix index stays empty.
 """
 import jax
 import jax.numpy as jnp
@@ -237,6 +243,109 @@ def test_encdec_prompt_must_be_whole_audio(whisper):
         sched.submit(scheduler.Request(
             rid=0, prompt=np.zeros(cfg.encoder_seq_len - 1, np.int64),
             max_new_tokens=2))
+
+
+# ---------------------------------------------------------------------------
+# dense_int8: paged serving == unpaged serving, bit-for-bit (ISSUE 10).
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def int8_model():
+    cfg = configs.get_smoke("smollm_360m").replace(kv_cache_dtype="int8")
+    return _params(cfg), cfg
+
+
+def _int8_sched(params, cfg, **kw):
+    base = dict(num_slots=2, slot_len=SLOT_LEN, prefill_chunk=CHUNK,
+                top_k=TOP_K, base_rng=BASE_RNG)
+    base.update(kw)
+    return scheduler.ContinuousScheduler(params, cfg, **base)
+
+
+def _int8_workload(pattern):
+    """Four requests, rid 3 an exact repeat of rid 0's prompt (the no-share
+    probe).  ``pattern`` permutes arrival order, not identity."""
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, 512, n) for n in (11, 19, 7)]
+    prompts.append(prompts[0].copy())
+    decode = (6, 5, 7, 4)
+    ticks = {"burst": (0, 0, 0, 0), "staggered": (0, 2, 4, 6),
+             "reversed": (6, 4, 2, 0)}[pattern]
+    return [scheduler.Request(rid=i, prompt=p, max_new_tokens=d,
+                              arrival_tick=t)
+            for i, (p, d, t) in enumerate(zip(prompts, decode, ticks))]
+
+
+@pytest.mark.parametrize("pattern", ["burst", "staggered", "reversed"])
+def test_int8_paged_matches_unpaged_exactly(int8_model, pattern):
+    """The acceptance pin: paged int8 token streams equal unpaged int8
+    token streams request-for-request — the block pool is a layout change
+    even when the payload is quantized — and the no-share policy holds."""
+    params, cfg = int8_model
+    family = cache_family.resolve(cfg)
+    assert family.quantized and family.paged_serveable
+    assert family.single_shot_prefill and not family.shareable
+
+    rep_un = _int8_sched(params, cfg).run(_int8_workload(pattern))
+    rep_pg = _int8_sched(params, cfg, paged=True,
+                         block_size=BLOCK).run(_int8_workload(pattern))
+    un = {r.rid: r.tokens for r in rep_un.results}
+    pg = {r.rid: r.tokens for r in rep_pg.results}
+    for rid in un:
+        assert pg[rid] == un[rid], (
+            f"request {rid} diverged paged-vs-unpaged ({pattern})")
+
+    # rid 3 repeated rid 0's prompt verbatim, yet nothing shared: scales are
+    # per-sequence write-time artifacts, so the family opts out of the index
+    p = rep_pg.paged
+    assert p["blocks_shared"] == 0 and p["cow_copies"] == 0
+    assert p["prefix_cache_hits"] == 0 and p["cached_blocks"] == 0
+    assert p["free_blocks"] == p["num_blocks"]
+
+
+def test_int8_preempt_swap_restores_bit_exactly(int8_model):
+    """Swap-out parks int8 payload + bfloat16 scale pages on the host;
+    swap-in restores both — the resumed stream must equal the request
+    serving alone (which equals its never-preempted run)."""
+    params, cfg = int8_model
+    rng = np.random.default_rng(17)
+    lo = [scheduler.Request(rid=i, prompt=rng.integers(0, 512, 9 + 2 * i),
+                            max_new_tokens=12, arrival_tick=0, priority=1)
+          for i in range(2)]
+    hi = [scheduler.Request(rid=2, prompt=rng.integers(0, 512, 8),
+                            max_new_tokens=4, arrival_tick=5, priority=0)]
+    requests = lo + hi
+    sched = _int8_sched(params, cfg, paged=True, block_size=BLOCK)
+    report = sched.run(requests)
+    assert report.preemptions >= 1, "workload must actually preempt"
+    stats = report.paged
+    assert stats["swapped_blocks_out"] >= 1
+    assert stats["swapped_blocks_in"] == stats["swapped_blocks_out"]
+
+    by_rid = {r.rid: r for r in report.results}
+    for req in requests:
+        solo = _int8_sched(params, cfg).run(
+            [scheduler.Request(rid=req.rid, prompt=req.prompt.copy(),
+                               max_new_tokens=req.max_new_tokens)])
+        assert by_rid[req.rid].tokens == solo.results[0].tokens, (
+            f"request {req.rid} diverged after preempt-and-swap "
+            f"(preempted={by_rid[req.rid].preempted})")
+
+
+def test_int8_single_shot_prefill_under_paging(int8_model):
+    """A prompt longer than prefill_chunk must prefill in ONE shot under
+    paging (the chunk schedule would silently drop the quantized prefix) —
+    observable as exactly one prefill chunk for the request."""
+    params, cfg = int8_model
+    rng = np.random.default_rng(19)
+    long_prompt = rng.integers(0, 512, 3 * CHUNK + 5)
+    req = scheduler.Request(rid=0, prompt=long_prompt, max_new_tokens=3)
+    report = _int8_sched(params, cfg, paged=True,
+                         block_size=BLOCK).run([req])
+    assert report.prefill_chunks == 1
+    solo_un = _int8_sched(params, cfg).run(
+        [scheduler.Request(rid=0, prompt=long_prompt.copy(),
+                           max_new_tokens=3)])
+    assert report.results[0].tokens == solo_un.results[0].tokens
 
 
 # ---------------------------------------------------------------------------

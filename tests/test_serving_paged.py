@@ -201,10 +201,23 @@ def test_paged_submit_rejects_never_admissible_prompt(model):
                                        max_new_tokens=2))
 
 
-def test_paged_rejects_unsupported_archs():
+def test_paged_int8_pools_pair_scales_with_payload():
+    """int8 dense pages now (in-kernel dequant gather): the pool pairs int8
+    K/V with bfloat16 per-position scale pages on the same block axis."""
     cfg8 = configs.get_smoke("smollm_360m").replace(kv_cache_dtype="int8")
+    pools = engine.init_paged_cache(cfg8, num_blocks=4, block_size=8)
+    attn = pools[0]["attn"]
+    assert attn["k"].dtype == jnp.int8 and attn["v"].dtype == jnp.int8
+    assert attn["k_scale"].dtype == jnp.bfloat16
+    assert attn["k_scale"].shape == attn["k"].shape[:-1]
+    assert attn["v_scale"].shape == attn["v"].shape[:-1]
+
+
+def test_paged_rejects_unsupported_archs():
+    # MLA's latent cache stays contiguous-only (named ROADMAP gap)
+    cfg = configs.get_smoke("minicpm3_4b")
     with pytest.raises(ValueError, match="paged KV cache unsupported"):
-        engine.init_paged_cache(cfg8, num_blocks=4, block_size=8)
+        engine.init_paged_cache(cfg, num_blocks=4, block_size=8)
 
 
 def test_paged_fixed_state_pool_needs_slot_len():
